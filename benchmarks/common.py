@@ -1,0 +1,21 @@
+"""Shared benchmark utilities: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time of fn(*args) in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, us: float, derived) -> tuple[str, float, str]:
+    return (name, us, str(derived))

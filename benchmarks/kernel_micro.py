@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: jnp reference path wall-time on CPU.
+
+(The Pallas kernels themselves run in interpret mode on CPU — Python-speed,
+not representative; the jnp path is what the CPU dry-run executes and the
+number reported as us_per_call.  On TPU the same entry points dispatch the
+compiled kernels.)"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+from .common import row, timeit
+
+
+def bench_kernels():
+    rng = np.random.default_rng(0)
+    out = []
+
+    # flash attention ref (B=1,S=512,H=8,K=2,D=64)
+    q = jnp.asarray(rng.normal(size=(1, 512, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = timeit(lambda: fa(q, k, v).block_until_ready(), iters=5)
+    flops = 4 * 512 * 512 * 8 * 64
+    out.append(row("kernel_attention_ref_512", us, f"gflops_s={flops/us/1e3:.1f}"))
+
+    # ssd scan ref
+    x = jnp.asarray(rng.normal(size=(2, 512, 8, 64)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (2, 512, 8)), jnp.float32)
+    A = -jnp.ones((8,), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(2, 512, 64)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(2, 512, 64)), jnp.float32)
+    ssd = jax.jit(lambda *a: ref.ssd_scan_ref(*a, chunk=64)[0])
+    us = timeit(lambda: ssd(x, dt, A, Bm, Cm).block_until_ready(), iters=5)
+    out.append(row("kernel_ssd_ref_512", us, "chunk=64"))
+
+    # moe gmm ref
+    xg = jnp.asarray(rng.normal(size=(8, 256, 256)), jnp.bfloat16)
+    wg = jnp.asarray(rng.normal(size=(8, 256, 512)), jnp.bfloat16)
+    gm = jax.jit(ref.moe_gmm_ref)
+    us = timeit(lambda: gm(xg, wg).block_until_ready(), iters=5)
+    flops = 2 * 8 * 256 * 256 * 512
+    out.append(row("kernel_moe_gmm_ref", us, f"gflops_s={flops/us/1e3:.1f}"))
+
+    # weighted update ref
+    w = jnp.asarray(rng.normal(size=(4_000_000,)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(4_000_000,)), jnp.float32)
+    wu = jax.jit(lambda w, g: ref.weighted_update_ref(w, g, jnp.float32(0.1))[0])
+    us = timeit(lambda: wu(w, g).block_until_ready(), iters=5)
+    gbps = 3 * 4e6 * 4 / us / 1e3
+    out.append(row("kernel_weighted_update_4M", us, f"gb_s={gbps:.1f}"))
+    return out

@@ -1,0 +1,211 @@
+"""One benchmark per paper table/figure.  Each returns CSV rows
+(name, us_per_call, derived)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    BoundConstants,
+    JacksonNetwork,
+    SimConfig,
+    asyncsgd_bound,
+    asyncsgd_eta_max,
+    fedbuff_bound,
+    fedbuff_eta_max,
+    generalized_bound,
+    optimal_eta,
+    optimize_two_cluster,
+    simulate,
+    three_cluster_delay_bounds,
+    two_cluster_delay_bounds,
+)
+from repro.core.theory import BoundConstants as BC
+
+from .common import row, timeit
+
+
+def bench_fig1_transient():
+    """Fig. 1: m_{i,k} becomes stationary after ~O(n) steps."""
+    out = []
+    for n in (10, 50):
+        mu = np.array([10.0] * 5 + [1.0] * (n - 5))
+        p = np.full(n, 1 / n)
+        us = timeit(lambda: simulate(SimConfig(mu=mu, p=p, C=n, T=500, seed=0)), iters=3)
+        res = simulate(SimConfig(mu=mu, p=p, C=n, T=5000, seed=0))
+        d = np.asarray(res.delays[0], float)
+        half = len(d) // 2
+        gap = abs(np.mean(d[:half]) - np.mean(d[half:])) / max(np.mean(d), 1e-9)
+        out.append(row(f"fig1_transient_n{n}", us, f"stationarity_gap={gap:.3f}"))
+    return out
+
+
+def _min_over_eta(bound_fn, eta_cap: float) -> float:
+    """min over eta in (0, cap] by golden section on log-eta."""
+    if eta_cap <= 0:
+        return float("inf")
+    etas = np.geomspace(eta_cap * 1e-4, eta_cap, 200)
+    return float(min(bound_fn(e) for e in etas))
+
+
+def _gen_bound_indicator(mu, p, k):
+    """Theorem-1 bound with the 1{K_{k+1}=i} indicator kept in m_{i,k}
+    (stationary value p_i * m̂_i).  At uniform p this nearly coincides with
+    the AsyncSGD bound — the two are the same algorithm there — making the
+    cross-method comparison apples-to-apples."""
+    net = JacksonNetwork(mu=mu, p=p, C=k.C)
+    m = p * net.expected_delays()
+    return generalized_bound(optimal_eta(p, m, k), p, m, k)
+
+
+def _gen_optimal_indicator(mu_f, mu_s, n, n_f, k, grid=60):
+    from repro.core.sampling import two_cluster_p_vector
+
+    mu = np.array([mu_f] * n_f + [mu_s] * (n - n_f))
+    best = (np.full(n, 1 / n), np.inf)
+    for pf in np.geomspace(1e-4 / n, (1 - 1e-6) / n_f, grid):
+        p = two_cluster_p_vector(n, n_f, pf)
+        b = _gen_bound_indicator(mu, p, k)
+        if b < best[1]:
+            best = (p, b)
+    return best
+
+
+def _baseline_taus(mu, p, C):
+    """tau_max / tau_c / tau_sum estimates for the baselines' bounds.
+
+    Deterministic service (paper's comparison setting): tau_max = C x slow
+    work time, converted to server steps via the network throughput.
+    tau_sum_i ~ p_i T m_i (node i completes ~p_i T tasks, each delayed m_i).
+    """
+    net = JacksonNetwork(mu=mu, p=p, C=C)
+    lam = net.throughput()
+    tau_max = C * (1.0 / mu.min()) * lam
+    m = net.expected_delays()
+    return tau_max, float(C), m
+
+
+def bench_table1_bounds():
+    """Table 1: the three methods' bounds, each at ITS OWN optimal eta."""
+    k = BoundConstants(A=100, L=1, B=20, C=10, T=10_000)
+    n, n_f = 100, 90
+    mu = np.array([8.0] * n_f + [1.0] * (n - n_f))
+    p = np.full(n, 1 / n)
+
+    def compute():
+        _, g_opt = _gen_optimal_indicator(8.0, 1.0, n, n_f, k)
+        g_uni = _gen_bound_indicator(mu, p, k)
+        tau_max, tau_c, m = _baseline_taus(mu, p, k.C)
+        tau_sum = p * k.T * m
+        fb = _min_over_eta(lambda e: fedbuff_bound(e, tau_max, n, k),
+                           fedbuff_eta_max(tau_max, k))
+        asg = _min_over_eta(lambda e: asyncsgd_bound(e, tau_c, tau_sum, k),
+                            asyncsgd_eta_max(tau_c, tau_max, k))
+        return g_opt, g_uni, fb, asg, tau_max
+
+    us = timeit(compute, iters=1, warmup=0)
+    g_opt, g_uni, fb, asg, tau_max = compute()
+    fb_exp = fedbuff_bound(0.01, float("inf"), n, k)
+    return [
+        row("table1_generalized_optimal_p", us, f"bound={g_opt:.3f}"),
+        row("table1_generalized_uniform_p", us, f"bound={g_uni:.3f}"),
+        row("table1_fedbuff_det", us, f"bound={fb:.3f};tau_max={tau_max:.0f}"),
+        row("table1_asyncsgd_det", us, f"bound={asg:.3f}"),
+        row("table1_fedbuff_exp_service", us, f"bound={fb_exp}"),
+        row("table1_asyncsgd_exp_service", us,
+            f"bound={asyncsgd_bound(0.01, float('inf'), np.full(n, np.inf), k)}"),
+    ]
+
+
+def bench_fig2_fig3_optimal_p():
+    """Figs. 2-3: optimal p and improvement vs mu_f, for several C."""
+    out = []
+    n, n_f = 100, 90
+    for C in (10, 50):
+        k = BoundConstants(A=100, L=1, B=20, C=C, T=10_000)
+        for mu_f in (2.0, 4.0, 8.0, 16.0):
+            us = timeit(lambda: optimize_two_cluster(mu_f, 1.0, n, n_f, k, grid=25), iters=1, warmup=0)
+            res = optimize_two_cluster(mu_f, 1.0, n, n_f, k)
+            out.append(
+                row(
+                    f"fig2_3_C{C}_muf{int(mu_f)}",
+                    us,
+                    f"p_fast={res.p[0]:.2e};improvement={100*res.relative_improvement:.1f}%",
+                )
+            )
+    return out
+
+
+def bench_fig4_vs_baselines():
+    """Fig. 4: improvement of GenAsyncSGD (optimal p) over the baselines'
+    bounds, each baseline at its own optimal eta (deterministic service)."""
+    out = []
+    n, n_f = 100, 90
+    k = BoundConstants(A=100, L=1, B=20, C=10, T=10_000)
+    for mu_f in (2.0, 8.0, 16.0):
+        mu = np.array([mu_f] * n_f + [1.0] * (n - n_f))
+        p = np.full(n, 1 / n)
+        _, g_opt = _gen_optimal_indicator(mu_f, 1.0, n, n_f, k)
+        tau_max, tau_c, m = _baseline_taus(mu, p, k.C)
+        tau_sum = p * k.T * m
+        fb = _min_over_eta(lambda e: fedbuff_bound(e, tau_max, n, k),
+                           fedbuff_eta_max(tau_max, k))
+        asg = _min_over_eta(lambda e: asyncsgd_bound(e, tau_c, tau_sum, k),
+                            asyncsgd_eta_max(tau_c, tau_max, k))
+        imp_fb = 100 * (fb - g_opt) / fb
+        imp_as = 100 * (asg - g_opt) / asg
+        out.append(row(f"fig4_muf{int(mu_f)}", 0.0,
+                       f"vs_fedbuff={imp_fb:.1f}%;vs_asyncsgd={imp_as:.1f}%"))
+    return out
+
+
+def bench_fig5_delays():
+    """Fig. 5 / App. F: saturated 2-cluster delays — sim vs closed form."""
+    n, n_f, C = 10, 5, 1000
+    mu = np.array([1.2] * n_f + [1.0] * (n - n_f))
+    p = np.full(n, 1 / n)
+
+    us = timeit(lambda: simulate(SimConfig(mu=mu, p=p, C=C, T=50_000, seed=0)), iters=1, warmup=0)
+    res = simulate(SimConfig(mu=mu, p=p, C=C, T=400_000, seed=0))
+    d = res.mean_delay_per_node()
+    bf, bs = two_cluster_delay_bounds(n, n_f, 1.2, 1.0, C)
+    est = JacksonNetwork(mu=mu, p=p, C=C).expected_delays()
+    return [
+        row("fig5_fast_sim_vs_theory", us,
+            f"sim={np.mean(d[:n_f]):.0f};jackson={est[0]:.0f};closed_bound={bf:.0f};paper=59"),
+        row("fig5_slow_sim_vs_theory", us,
+            f"sim={np.mean(d[n_f:]):.0f};jackson={est[-1]:.0f};closed_bound={bs:.0f};paper=1938"),
+    ]
+
+
+def bench_fig11_optimal_delays():
+    """App. F.2 (Fig. 11): delays under the optimal sampling scheme."""
+    n, n_f, C = 10, 5, 1000
+    mu = np.array([1.2] * n_f + [1.0] * (n - n_f))
+    p_f = 7.5e-3
+    p = np.array([p_f] * n_f + [2 / n - p_f] * (n - n_f))
+    uni = simulate(SimConfig(mu=mu, p=np.full(n, 1 / n), C=C, T=400_000, seed=0))
+    opt = simulate(SimConfig(mu=mu, p=p, C=C, T=400_000, seed=0))
+    du, do = uni.mean_delay_per_node(), opt.mean_delay_per_node()
+    return [
+        row("fig11_delay_reduction_fast", 0.0,
+            f"ratio={np.mean(du[:n_f])/np.mean(do[:n_f]):.1f}x;paper=10x"),
+        row("fig11_delay_reduction_slow", 0.0,
+            f"ratio={np.mean(du[n_f:])/np.mean(do[n_f:]):.1f}x;paper=2x"),
+    ]
+
+
+def bench_fig12_3cluster():
+    """App. G (Fig. 12): 3-cluster saturated delays — sim vs closed forms."""
+    n, C = 9, 1000
+    mu = np.array([10.0] * 3 + [1.2] * 3 + [1.0] * 3)
+    p = np.full(n, 1 / n)
+    res = simulate(SimConfig(mu=mu, p=p, C=C, T=400_000, seed=0))
+    d = res.mean_delay_per_node()
+    busy_frac = res.queue_len_tw[:3].sum() / res.t[-1] / 3
+    mf, mm, ms = three_cluster_delay_bounds(9, 3, 6, 10.0, 1.2, 1.0, C,
+                                            p_fast_busy=min(busy_frac, 1.0))
+    return [
+        row("fig12_fast", 0.0, f"sim={np.mean(d[:3]):.1f};theory<={mf:.1f};paper~1"),
+        row("fig12_medium", 0.0, f"sim={np.mean(d[3:6]):.0f};theory<={mm:.0f};paper~55"),
+        row("fig12_slow", 0.0, f"sim={np.mean(d[6:]):.0f};theory<={ms:.0f};paper~2935"),
+    ]

@@ -1,0 +1,78 @@
+"""§Roofline reader: aggregates dry-run artifacts into the roofline table.
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and emits
+one row per (arch × shape × mesh × rules): the three terms, the dominant
+bottleneck, and MODEL_FLOPS/HLO_FLOPS.  Also usable standalone:
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun] [--md]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import row
+
+
+def load_records(d: str = "artifacts/dryrun") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def bench_roofline(d: str = "artifacts/dryrun"):
+    out = []
+    recs = [r for r in load_records(d) if r.get("ok")]
+    for r in recs:
+        t = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        out.append(
+            row(
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}_{r['rules']}",
+                r.get("compile_s", 0.0) * 1e6,
+                f"compute={t['compute_s']:.4f}s;memory={t['memory_s']:.4f}s;"
+                f"collective={t['collective_s']:.4f}s;dom={r['dominant']};"
+                f"useful={u if u is None else round(u, 3)}",
+            )
+        )
+    n_ok = len(recs)
+    out.append(row("roofline_pairs_ok", 0.0, n_ok))
+    return out
+
+
+def markdown_table(d: str = "artifacts/dryrun", mesh: str = "16x16", rules: str = "default") -> str:
+    recs = [r for r in load_records(d)
+            if r.get("ok") and r["mesh"] == mesh and r["rules"] == rules]
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant | MODEL/HLO FLOPs | per-dev args (GiB) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        t = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        args_gib = r["memory"].get("argument_bytes", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | **{r['dominant']}** "
+            f"| {u if u is None else f'{u:.3f}'} | {args_gib:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    if args.md:
+        print(markdown_table(args.dir, mesh=args.mesh))
+    else:
+        for name, us, derived in bench_roofline(args.dir):
+            print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,14 @@
+"""Batched serving demo: prefill + decode with the unified serve_step.
+
+Works for every assigned architecture family (dense KV cache, MoE routing,
+Mamba2 SSM state, Zamba2 hybrid, audio/VLM stubs):
+
+    PYTHONPATH=src python examples/serve_batched.py --arch mamba2-130m
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen2-moe-a2.7b --steps 16
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main()

@@ -1,0 +1,1 @@
+from .checkpoint import available_steps, latest_step, restore, save

@@ -1,0 +1,104 @@
+"""Pytree checkpointing: npz arrays + json tree structure, with rotation.
+
+No orbax offline; this is a compact, restartable format:
+  <dir>/step_<k>/arrays.npz     flattened leaves, keys = tree paths
+  <dir>/step_<k>/meta.json      treedef repr, shapes/dtypes, user metadata
+Atomic via tmp-dir rename.  `latest_step`/`restore` round-trip any pytree of
+arrays (params, optimizer state, server state).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "available_steps"]
+
+_SEP = "|"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(
+    directory: str,
+    step: int,
+    tree: Any,
+    metadata: dict | None = None,
+    keep: int = 3,
+) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        treedef = jax.tree_util.tree_structure(tree)
+        meta = {
+            "step": step,
+            "treedef": str(treedef),
+            "keys": sorted(flat),
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # rotate
+    steps = available_steps(directory)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"), ignore_errors=True)
+    return final
+
+
+def available_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes validated)."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    flat_like = _flatten(like)
+    if sorted(flat_like) != sorted(flat):
+        missing = set(flat_like) - set(flat)
+        extra = set(flat) - set(flat_like)
+        raise ValueError(f"checkpoint tree mismatch: missing={missing} extra={extra}")
+    keys_in_order = list(flat_like)
+    new_leaves = []
+    for key, leaf in zip(keys_in_order, leaves_like):
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
+        new_leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,35 @@
+"""Core library: the paper's contribution (queueing analysis + Generalized AsyncSGD)."""
+from .jackson import (
+    JacksonNetwork,
+    buzen_normalizing_constants,
+    gamma_ratio,
+    three_cluster_delay_bounds,
+    two_cluster_delay_bounds,
+)
+from .queue_sim import ClosedNetworkSim, SimConfig, SimResult, simulate
+from .sampling import (
+    SamplingResult,
+    bound_for_p,
+    optimize_general,
+    optimize_physical_time,
+    optimize_two_cluster,
+    two_cluster_p_vector,
+)
+from .theory import (
+    BoundConstants,
+    asyncsgd_bound,
+    asyncsgd_eta_max,
+    eta_max,
+    fedbuff_bound,
+    fedbuff_eta_max,
+    generalized_bound,
+    optimal_eta,
+)
+from .async_sgd import (
+    ServerConfig,
+    TraceRecord,
+    run_favano,
+    run_fedavg,
+    run_fedbuff,
+    run_generalized_async_sgd,
+)

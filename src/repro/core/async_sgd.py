@@ -1,0 +1,285 @@
+"""Generalized AsyncSGD (Algorithm 1) and asynchronous/synchronous baselines.
+
+The server algorithms are written against an abstract `GradientSource`
+(anything that can produce a stochastic gradient for client i at parameters
+w), so they run identically over:
+  * toy quadratic problems (tests),
+  * jitted JAX models on federated data shards (repro.fl),
+  * sharded multi-pod train steps (repro.launch.train).
+
+Faithfulness notes
+------------------
+* Line 10 of Algorithm 1:  w_{k+1} = w_k - eta/(n p_{J_k}) * g_{J_k}(w_{I_k})
+  — the gradient is computed *at the dispatch-time parameters* w_{I_k}.  We
+  snapshot parameters per in-flight task (C snapshots live at any time).
+* Event timing follows the closed Jackson network (repro.core.queue_sim):
+  completions J_k, sampling K_{k+1} ~ p, FIFO queues per client.
+* The virtual-iterate sequence mu_k (Eq. 4) is tracked on demand to expose
+  the Lemma-9 invariant |G_k| = C - 1 in tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Protocol
+
+import numpy as np
+
+from .queue_sim import ClosedNetworkSim, SimConfig
+
+__all__ = [
+    "GradientSource",
+    "ServerConfig",
+    "TraceRecord",
+    "run_generalized_async_sgd",
+    "run_fedbuff",
+    "run_fedavg",
+    "run_favano",
+]
+
+Pytree = Any
+
+
+class GradientSource(Protocol):
+    def grad(self, client_id: int, params: Pytree, server_step: int) -> Pytree:
+        """Stochastic gradient of client `client_id`'s local loss at `params`."""
+        ...
+
+
+def _tree_map(f, *trees):
+    import jax
+
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def _axpy(w: Pytree, g: Pytree, a: float) -> Pytree:
+    """w + a*g elementwise over the pytree."""
+    return _tree_map(lambda x, y: x + a * y, w, g)
+
+
+@dataclass
+class ServerConfig:
+    n: int                      # number of clients
+    C: int                      # concurrency (in-flight tasks)
+    T: int                      # CS steps
+    eta: float                  # learning rate
+    p: np.ndarray | None = None  # sampling probabilities (None = uniform)
+    mu: np.ndarray | None = None  # client speeds for the event clock (None = 1)
+    service: str = "exp"
+    seed: int = 0
+    weighting: str = "importance"  # "importance" (Alg. 1) | "plain" (AsyncSGD)
+    eval_every: int = 0
+    track_virtual: bool = False
+    apply_update: Callable[[Pytree, Pytree, float], Pytree] | None = None
+    # apply_update(w, g, scale) -> new w.  Defaults to w - scale*g; override to
+    # route through an optimizer or the Pallas weighted_update kernel.
+
+
+@dataclass
+class TraceRecord:
+    steps: np.ndarray
+    times: np.ndarray
+    eval_steps: list[int] = field(default_factory=list)
+    eval_values: list[float] = field(default_factory=list)
+    delays: list[list[int]] | None = None
+    mean_queue_lengths: np.ndarray | None = None
+    virtual_gap_sq: list[float] = field(default_factory=list)
+    inflight_cardinality: list[int] = field(default_factory=list)
+
+
+def _resolve(cfg: ServerConfig) -> tuple[np.ndarray, np.ndarray]:
+    p = np.full(cfg.n, 1.0 / cfg.n) if cfg.p is None else np.asarray(cfg.p, float)
+    mu = np.ones(cfg.n) if cfg.mu is None else np.asarray(cfg.mu, float)
+    return p, mu
+
+
+def run_generalized_async_sgd(
+    w0: Pytree,
+    source: GradientSource,
+    cfg: ServerConfig,
+    eval_fn: Callable[[Pytree], float] | None = None,
+) -> tuple[Pytree, TraceRecord]:
+    """Algorithm 1.  Returns final parameters and the execution trace."""
+    p, mu = _resolve(cfg)
+    sim = ClosedNetworkSim(
+        SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service, seed=cfg.seed)
+    )
+    apply_update = cfg.apply_update or (lambda w, g, s: _axpy(w, g, -s))
+
+    w = w0
+    mu_virtual = w0 if cfg.track_virtual else None
+    # dispatch-time parameter snapshot per client FIFO queue (mirrors sim.queues)
+    snaps: list[list[Pytree]] = [[] for _ in range(cfg.n)]
+    for i, q in enumerate(sim.queues):
+        snaps[i] = [w0 for _ in q]  # S_0 tasks all carry w_0
+
+    times = np.zeros(cfg.T)
+    steps = np.arange(cfg.T)
+    trace = TraceRecord(steps=steps, times=times)
+
+    for k in range(cfg.T):
+        j, k_new = sim.step()     # J_k completes; K_{k+1} sampled; task enqueued
+        w_disp = snaps[j].pop(0)  # FIFO: the completed task's dispatch params
+        g = source.grad(j, w_disp, k)
+        if cfg.weighting == "importance":
+            scale = cfg.eta / (cfg.n * p[j])
+        elif cfg.weighting == "plain":
+            scale = cfg.eta
+        else:
+            raise ValueError(cfg.weighting)
+        w = apply_update(w, g, scale)
+        snaps[k_new].append(w)    # the new task departs with the *updated* model
+        times[k] = sim.now
+
+        if cfg.track_virtual:
+            # mu_{k+1} = mu_k - eta/(n p_{K_k}) g_{K_k}(w_k): instantaneous
+            # contribution of the *newly sampled* client at the current w.
+            g_virt = source.grad(k_new, w, k)
+            mu_virtual = _axpy(mu_virtual, g_virt, -cfg.eta / (cfg.n * p[k_new]))
+            gap = _tree_map(lambda a, b: float(np.sum((np.asarray(a) - np.asarray(b)) ** 2)), w, mu_virtual)
+            import jax
+
+            trace.virtual_gap_sq.append(sum(jax.tree_util.tree_leaves(gap)))
+            trace.inflight_cardinality.append(sim.total_tasks())
+
+        if eval_fn is not None and cfg.eval_every and (k + 1) % cfg.eval_every == 0:
+            trace.eval_steps.append(k + 1)
+            trace.eval_values.append(float(eval_fn(w)))
+
+    trace.delays = sim.delays
+    trace.mean_queue_lengths = sim.queue_len_sum / cfg.T
+    return w, trace
+
+
+def run_fedbuff(
+    w0: Pytree,
+    source: GradientSource,
+    cfg: ServerConfig,
+    Z: int = 10,
+    eval_fn: Callable[[Pytree], float] | None = None,
+) -> tuple[Pytree, TraceRecord]:
+    """FedBuff (Nguyen et al. 2022): uniform sampling, server applies the
+    *average* of a buffer of Z received gradients.  The buffer fill shares the
+    same queueing clock; the CS performs T//Z buffered updates over T
+    completions."""
+    p, mu = _resolve(cfg)
+    pu = np.full(cfg.n, 1.0 / cfg.n)  # FedBuff samples uniformly
+    sim = ClosedNetworkSim(
+        SimConfig(mu=mu, p=pu, C=cfg.C, T=cfg.T, service=cfg.service, seed=cfg.seed)
+    )
+    apply_update = cfg.apply_update or (lambda w, g, s: _axpy(w, g, -s))
+    w = w0
+    snaps: list[list[Pytree]] = [[w0 for _ in q] for q in sim.queues]
+    buffer: list[Pytree] = []
+    times = np.zeros(cfg.T)
+    trace = TraceRecord(steps=np.arange(cfg.T), times=times)
+    updates = 0
+    for k in range(cfg.T):
+        j, k_new = sim.step()
+        w_disp = snaps[j].pop(0)
+        buffer.append(source.grad(j, w_disp, k))
+        if len(buffer) >= Z:
+            g_mean = buffer[0]
+            for g in buffer[1:]:
+                g_mean = _axpy(g_mean, g, 1.0)
+            g_mean = _tree_map(lambda x: x / len(buffer), g_mean)
+            w = apply_update(w, g_mean, cfg.eta)
+            buffer = []
+            updates += 1
+        snaps[k_new].append(w)
+        times[k] = sim.now
+        if eval_fn is not None and cfg.eval_every and (k + 1) % cfg.eval_every == 0:
+            trace.eval_steps.append(k + 1)
+            trace.eval_values.append(float(eval_fn(w)))
+    trace.delays = sim.delays
+    trace.mean_queue_lengths = sim.queue_len_sum / cfg.T
+    return w, trace
+
+
+def run_fedavg(
+    w0: Pytree,
+    source: GradientSource,
+    cfg: ServerConfig,
+    clients_per_round: int = 10,
+    local_steps: int = 1,
+    eval_fn: Callable[[Pytree], float] | None = None,
+) -> tuple[Pytree, TraceRecord]:
+    """Synchronous FedAvg baseline.  Each round waits for the slowest sampled
+    client (round time = max of their service draws); `cfg.T` counts rounds."""
+    _, mu = _resolve(cfg)
+    rng = np.random.default_rng(cfg.seed)
+    apply_update = cfg.apply_update or (lambda w, g, s: _axpy(w, g, -s))
+    w = w0
+    now = 0.0
+    times = np.zeros(cfg.T)
+    trace = TraceRecord(steps=np.arange(cfg.T), times=times)
+    for r in range(cfg.T):
+        sel = rng.choice(cfg.n, size=clients_per_round, replace=False)
+        # round wall time = slowest client's total local work
+        if cfg.service == "exp":
+            durs = rng.exponential(1.0 / mu[sel], size=sel.size) * local_steps
+        else:
+            durs = local_steps / mu[sel]
+        now += float(np.max(durs))
+        g_mean = None
+        for i in sel:
+            g = source.grad(int(i), w, r)
+            for _ in range(local_steps - 1):
+                g = _axpy(g, source.grad(int(i), _axpy(w, g, -cfg.eta), r), 1.0)
+            g_mean = g if g_mean is None else _axpy(g_mean, g, 1.0)
+        g_mean = _tree_map(lambda x: x / sel.size, g_mean)
+        w = apply_update(w, g_mean, cfg.eta)
+        times[r] = now
+        if eval_fn is not None and cfg.eval_every and (r + 1) % cfg.eval_every == 0:
+            trace.eval_steps.append(r + 1)
+            trace.eval_values.append(float(eval_fn(w)))
+    return w, trace
+
+
+def run_favano(
+    w0: Pytree,
+    source: GradientSource,
+    cfg: ServerConfig,
+    period: float = 1.0,
+    max_local_steps: int = 8,
+    eval_fn: Callable[[Pytree], float] | None = None,
+) -> tuple[Pytree, TraceRecord]:
+    """FAVANO/QuAFL-style baseline (Leconte et al. 2023; Zakerinia et al. 2022).
+
+    No queues: the CS ticks at a fixed cadence `period`; between ticks each
+    client performs as many local SGD steps as its speed allows (capped at
+    `max_local_steps`, interruptible), and the CS averages the client models.
+    The CS step rate is bounded by the cadence — the contrast the paper draws
+    against queue-driven AsyncSGD (§5).  `cfg.T` counts CS rounds.
+    """
+    p, mu = _resolve(cfg)
+    rng = np.random.default_rng(cfg.seed)
+    apply_update = cfg.apply_update or (lambda w, g, s: _axpy(w, g, -s))
+    w = w0
+    locals_ = [w0 for _ in range(cfg.n)]
+    now = 0.0
+    times = np.zeros(cfg.T)
+    trace = TraceRecord(steps=np.arange(cfg.T), times=times)
+    for r in range(cfg.T):
+        now += period
+        for i in range(cfg.n):
+            # local steps completed within the window (speed-proportional)
+            n_i = min(int(rng.poisson(mu[i] * period)), max_local_steps)
+            wi = locals_[i]
+            for _ in range(n_i):
+                wi = apply_update(wi, source.grad(i, wi, r), cfg.eta)
+            locals_[i] = wi
+        # CS averages client models and broadcasts
+        w = _tree_mean(locals_)
+        locals_ = [w for _ in range(cfg.n)]
+        times[r] = now
+        if eval_fn is not None and cfg.eval_every and (r + 1) % cfg.eval_every == 0:
+            trace.eval_steps.append(r + 1)
+            trace.eval_values.append(float(eval_fn(w)))
+    return w, trace
+
+
+def _tree_mean(trees: list) -> Pytree:
+    out = trees[0]
+    for t in trees[1:]:
+        out = _axpy(out, t, 1.0)
+    return _tree_map(lambda x: x / len(trees), out)

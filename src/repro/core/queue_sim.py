@@ -1,0 +1,183 @@
+"""Event-driven simulator of the paper's closed queueing network.
+
+Simulates exactly the process of §2: C tasks circulate among n FIFO clients;
+when client J_k completes a task (k-th CS step), the dispatcher samples a new
+client K_{k+1} ~ p and enqueues a fresh task there.  Produces the exact traces
+(J_k, K_k, X_{i,k}, M_{i,k}) that the theory reasons about, for exponential or
+deterministic service times.
+
+This is the control-plane companion of `repro.fl.engine` (which attaches real
+gradient computations to these events) and the oracle used to validate
+`repro.core.jackson` closed forms.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["SimConfig", "SimResult", "ClosedNetworkSim", "simulate"]
+
+
+@dataclass
+class SimConfig:
+    mu: np.ndarray              # (n,) service rates
+    p: np.ndarray               # (n,) dispatch probabilities
+    C: int                      # concurrency (number of circulating tasks)
+    T: int                      # number of CS steps to simulate
+    service: str = "exp"        # "exp" | "det"
+    seed: int = 0
+    initial: str = "distinct"   # "distinct": C tasks on C distinct clients (S_0)
+                                # "sampled": C iid draws from p
+
+
+@dataclass
+class SimResult:
+    J: np.ndarray               # (T,) completing client per CS step
+    K: np.ndarray               # (T,) newly-sampled client per CS step
+    t: np.ndarray               # (T,) physical time of each CS step
+    delays: list[list[int]]     # per-node list of delays in CS steps (M_{i,k})
+    time_delays: list[list[float]]  # per-node physical-time sojourns
+    queue_len_sum: np.ndarray   # (n,) event-sampled sum over steps of X_{i,k}
+    queue_len_tw: np.ndarray    # (n,) time-weighted integral of X_i(t)
+    queue_len_last: np.ndarray  # (n,) final queue lengths
+    steps: int
+
+    def mean_delay_per_node(self) -> np.ndarray:
+        return np.array([np.mean(d) if d else np.nan for d in self.delays])
+
+    def max_delay_per_node(self) -> np.ndarray:
+        return np.array([np.max(d) if d else np.nan for d in self.delays])
+
+    def mean_queue_lengths(self) -> np.ndarray:
+        """Event-sampled means (Palm view at CS steps)."""
+        return self.queue_len_sum / self.steps
+
+    def time_avg_queue_lengths(self) -> np.ndarray:
+        """Time-stationary means — comparable to JacksonNetwork.mean_queue_lengths."""
+        return self.queue_len_tw / float(self.t[-1])
+
+    def throughput(self) -> float:
+        """CS steps per unit physical time."""
+        return self.steps / float(self.t[-1]) if self.steps else 0.0
+
+
+class ClosedNetworkSim:
+    """Stepable simulator (used by repro.fl.engine to drive real training)."""
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.n = int(np.asarray(cfg.mu).size)
+        self.mu = np.asarray(cfg.mu, dtype=np.float64)
+        self.p = np.asarray(cfg.p, dtype=np.float64)
+        if abs(self.p.sum() - 1.0) > 1e-8:
+            raise ValueError("p must sum to 1")
+        if cfg.C < 1:
+            raise ValueError("C >= 1 required")
+        self.rng = np.random.default_rng(cfg.seed)
+        self.now = 0.0
+        self.step_idx = 0
+        # FIFO queue per node: deque of (task_id, dispatch_step, dispatch_time)
+        self.queues: list[deque] = [deque() for _ in range(self.n)]
+        # Event heap of (completion_time, seq, node).  Only the head-of-line
+        # task of each node is in service; lazy invalidation via seq check.
+        self.heap: list[tuple[float, int, int]] = []
+        self._seq = 0
+        self._inservice_seq = [-1] * self.n
+        self.delays: list[list[int]] = [[] for _ in range(self.n)]
+        self.time_delays: list[list[float]] = [[] for _ in range(self.n)]
+        self.queue_len_sum = np.zeros(self.n)
+        self.queue_len_tw = np.zeros(self.n)
+        self._task_counter = 0
+        self._init_tasks()
+
+    # -------------------------------------------------------------- #
+    def _service_time(self, node: int) -> float:
+        if self.cfg.service == "exp":
+            return float(self.rng.exponential(1.0 / self.mu[node]))
+        if self.cfg.service == "det":
+            return float(1.0 / self.mu[node])
+        raise ValueError(f"unknown service kind {self.cfg.service}")
+
+    def _start_service(self, node: int) -> None:
+        self._seq += 1
+        self._inservice_seq[node] = self._seq
+        heapq.heappush(self.heap, (self.now + self._service_time(node), self._seq, node))
+
+    def _enqueue(self, node: int, dispatch_step: int) -> int:
+        tid = self._task_counter
+        self._task_counter += 1
+        self.queues[node].append((tid, dispatch_step, self.now))
+        if len(self.queues[node]) == 1:
+            self._start_service(node)
+        return tid
+
+    def _init_tasks(self) -> None:
+        if self.cfg.initial == "distinct":
+            if self.cfg.C > self.n:
+                # spread round-robin when C > n (paper uses C <= n for S_0,
+                # but saturated-regime experiments need C >> n)
+                nodes = [i % self.n for i in range(self.cfg.C)]
+            else:
+                nodes = list(
+                    self.rng.choice(self.n, size=self.cfg.C, replace=False, p=None)
+                )
+        elif self.cfg.initial == "sampled":
+            nodes = list(self.rng.choice(self.n, size=self.cfg.C, p=self.p))
+        else:
+            raise ValueError(self.cfg.initial)
+        for nd in nodes:
+            self._enqueue(int(nd), dispatch_step=0)
+
+    # -------------------------------------------------------------- #
+    def total_tasks(self) -> int:
+        return sum(len(q) for q in self.queues)
+
+    def queue_lengths(self) -> np.ndarray:
+        return np.array([len(q) for q in self.queues])
+
+    def step(self) -> tuple[int, int]:
+        """Advance one CS step.  Returns (J_k, K_{k+1})."""
+        # pop next *valid* completion event
+        while True:
+            t_done, seq, node = heapq.heappop(self.heap)
+            if self._inservice_seq[node] == seq:
+                break
+        # time-weighted occupancy over (self.now, t_done] — state unchanged there
+        self.queue_len_tw += self.queue_lengths() * (t_done - self.now)
+        self.now = t_done
+        tid, disp_step, disp_time = self.queues[node].popleft()
+        # delay in CS steps: completions strictly between dispatch and this one
+        self.delays[node].append(self.step_idx - disp_step)
+        self.time_delays[node].append(self.now - disp_time)
+        if self.queues[node]:
+            self._start_service(node)
+        # dispatcher samples the next client
+        k_new = int(self.rng.choice(self.n, p=self.p))
+        self._enqueue(k_new, dispatch_step=self.step_idx + 1)
+        self.queue_len_sum += self.queue_lengths()
+        self.step_idx += 1
+        return node, k_new
+
+
+def simulate(cfg: SimConfig) -> SimResult:
+    sim = ClosedNetworkSim(cfg)
+    J = np.zeros(cfg.T, dtype=np.int32)
+    K = np.zeros(cfg.T, dtype=np.int32)
+    t = np.zeros(cfg.T, dtype=np.float64)
+    for k in range(cfg.T):
+        j, knew = sim.step()
+        J[k], K[k], t[k] = j, knew, sim.now
+    return SimResult(
+        J=J,
+        K=K,
+        t=t,
+        delays=sim.delays,
+        time_delays=sim.time_delays,
+        queue_len_sum=sim.queue_len_sum,
+        queue_len_tw=sim.queue_len_tw,
+        queue_len_last=sim.queue_lengths(),
+        steps=cfg.T,
+    )

@@ -1,0 +1,201 @@
+"""Optimal client-sampling schemes for Generalized AsyncSGD (paper §2 & App. E/F).
+
+Given client speeds mu and the bound constants, pick (p, eta) minimizing the
+Theorem-1 bound G(p, eta) where the delays m_i(p) come from the *exact*
+Jackson-network analysis (repro.core.jackson), closing the loop the paper
+opens: the bound depends on p both directly and through the queueing delays.
+
+Three optimizers:
+  * `optimize_two_cluster`  — scalar golden-section over the fast-node
+    probability p (the paper's Figs. 2/3/9 setting).
+  * `optimize_general`      — projected mirror-descent on the simplex for
+    arbitrary heterogeneous mu (beyond-paper: the paper only treats clusters).
+  * `optimize_physical_time`— App. E.2: fixed wall-clock budget U, T = λ(p)·U.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from .jackson import JacksonNetwork
+from .theory import BoundConstants, generalized_bound, optimal_eta
+
+__all__ = [
+    "SamplingResult",
+    "bound_for_p",
+    "optimize_two_cluster",
+    "optimize_general",
+    "optimize_physical_time",
+    "two_cluster_p_vector",
+]
+
+
+@dataclass
+class SamplingResult:
+    p: np.ndarray
+    eta: float
+    bound: float
+    uniform_bound: float
+    m: np.ndarray  # expected delays at the optimum
+
+    @property
+    def relative_improvement(self) -> float:
+        """(uniform - optimal)/uniform, the quantity plotted in Figs. 3/4/9."""
+        if not np.isfinite(self.uniform_bound) or self.uniform_bound == 0:
+            return 0.0
+        return float((self.uniform_bound - self.bound) / self.uniform_bound)
+
+
+def _delays(mu: np.ndarray, p: np.ndarray, C: int) -> np.ndarray:
+    return JacksonNetwork(mu=mu, p=p, C=C).expected_delays()
+
+
+def bound_for_p(
+    mu: np.ndarray, p: np.ndarray, k: BoundConstants
+) -> tuple[float, float, np.ndarray]:
+    """(G(p, eta*(p)), eta*, m(p)) with delays from the Jackson analysis."""
+    m = _delays(mu, p, k.C)
+    eta = optimal_eta(p, m, k)
+    return generalized_bound(eta, p, m, k), eta, m
+
+
+def two_cluster_p_vector(n: int, n_f: int, p_fast: float) -> np.ndarray:
+    """Full p vector from the scalar fast-node probability (paper §2).
+
+    q = (1 - n_f * p_fast) / (n - n_f) for slow nodes.
+    """
+    if not (0.0 < p_fast < 1.0 / n_f):
+        raise ValueError(f"p_fast must lie in (0, 1/n_f)=(0,{1.0/n_f:.4g})")
+    q = (1.0 - n_f * p_fast) / (n - n_f)
+    p = np.full(n, q)
+    p[:n_f] = p_fast
+    return p
+
+
+def optimize_two_cluster(
+    mu_f: float,
+    mu_s: float,
+    n: int,
+    n_f: int,
+    k: BoundConstants,
+    grid: int = 60,
+) -> SamplingResult:
+    """Golden-section (after a coarse grid) over the fast-node probability."""
+    mu = np.full(n, mu_s)
+    mu[:n_f] = mu_f
+
+    def objective(p_fast: float) -> float:
+        p = two_cluster_p_vector(n, n_f, p_fast)
+        b, _, _ = bound_for_p(mu, p, k)
+        return b
+
+    lo, hi = 1e-4 / n, (1.0 - 1e-6) / n_f
+    # log-spaced coarse grid (optimum can sit orders of magnitude below 1/n)
+    ps = np.geomspace(lo, hi, grid)
+    vals = np.array([objective(x) for x in ps])
+    i = int(np.argmin(vals))
+    a = ps[max(i - 1, 0)]
+    b = ps[min(i + 1, grid - 1)]
+    # golden-section refine on [a, b]
+    gr = (np.sqrt(5.0) - 1.0) / 2.0
+    c, d = b - gr * (b - a), a + gr * (b - a)
+    for _ in range(40):
+        if objective(c) < objective(d):
+            b, d = d, c
+            c = b - gr * (b - a)
+        else:
+            a, c = c, d
+            d = a + gr * (b - a)
+    p_star = float(0.5 * (a + b))
+    p_vec = two_cluster_p_vector(n, n_f, p_star)
+    bound, eta, m = bound_for_p(mu, p_vec, k)
+    u = np.full(n, 1.0 / n)
+    ub, _, _ = bound_for_p(mu, u, k)
+    return SamplingResult(p=p_vec, eta=eta, bound=bound, uniform_bound=ub, m=m)
+
+
+def optimize_general(
+    mu: np.ndarray,
+    k: BoundConstants,
+    iters: int = 200,
+    lr: float = 0.3,
+    seed: int = 0,
+) -> SamplingResult:
+    """Mirror descent (exponentiated gradient) on the simplex, finite-diff grads.
+
+    Beyond-paper: handles arbitrary mu without cluster structure.  The
+    objective is smooth in p away from the boundary; we keep a floor on p.
+    """
+    mu = np.asarray(mu, dtype=np.float64)
+    n = mu.size
+    p = np.full(n, 1.0 / n)
+    floor = 1e-5 / n
+
+    def f(pv: np.ndarray) -> float:
+        return bound_for_p(mu, pv, k)[0]
+
+    best_p, best_v = p.copy(), f(p)
+    for _ in range(iters):
+        g = np.zeros(n)
+        v0 = f(p)
+        h = 1e-4 / n
+        for i in range(n):
+            q = p.copy()
+            q[i] += h
+            q /= q.sum()
+            g[i] = (f(q) - v0) / h
+        p = p * np.exp(-lr * (g - g.mean()) / (np.abs(g).max() + 1e-12))
+        p = np.maximum(p, floor)
+        p /= p.sum()
+        v = f(p)
+        if v < best_v:
+            best_p, best_v = p.copy(), v
+    bound, eta, m = bound_for_p(mu, best_p, k)
+    u = np.full(n, 1.0 / n)
+    ub, _, _ = bound_for_p(mu, u, k)
+    return SamplingResult(p=best_p, eta=eta, bound=bound, uniform_bound=ub, m=m)
+
+
+def optimize_physical_time(
+    mu_f: float,
+    mu_s: float,
+    n: int,
+    n_f: int,
+    k: BoundConstants,
+    U: float = 1000.0,
+    grid: int = 60,
+) -> SamplingResult:
+    """App. E.2: fixed time budget U; T(p) = lambda(p) * U server steps.
+
+    lambda(p) is the network throughput of the Jackson network — sampling
+    slow nodes more reduces delays *in steps* but slows the CS step clock.
+    """
+    mu = np.full(n, mu_s)
+    mu[:n_f] = mu_f
+
+    def objective(p_fast: float) -> float:
+        p = two_cluster_p_vector(n, n_f, p_fast)
+        net = JacksonNetwork(mu=mu, p=p, C=k.C)
+        T_eff = max(int(net.throughput() * U), 1)
+        kk = replace(k, T=T_eff)
+        m = net.expected_delays()
+        eta = optimal_eta(p, m, kk)
+        return generalized_bound(eta, p, m, kk)
+
+    lo, hi = 1e-4 / n, (1.0 - 1e-6) / n_f
+    ps = np.geomspace(lo, hi, grid)
+    vals = np.array([objective(x) for x in ps])
+    p_star = float(ps[int(np.argmin(vals))])
+    p_vec = two_cluster_p_vector(n, n_f, p_star)
+    net = JacksonNetwork(mu=mu, p=p_vec, C=k.C)
+    kk = replace(k, T=max(int(net.throughput() * U), 1))
+    m = net.expected_delays()
+    eta = optimal_eta(p_vec, m, kk)
+    bound = generalized_bound(eta, p_vec, m, kk)
+    u = np.full(n, 1.0 / n)
+    net_u = JacksonNetwork(mu=mu, p=u, C=k.C)
+    ku = replace(k, T=max(int(net_u.throughput() * U), 1))
+    mu_del = net_u.expected_delays()
+    ub = generalized_bound(optimal_eta(u, mu_del, ku), u, mu_del, ku)
+    return SamplingResult(p=p_vec, eta=eta, bound=bound, uniform_bound=ub, m=m)

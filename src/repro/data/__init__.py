@@ -1,0 +1,1 @@
+from .pipeline import FederatedClassification, SyntheticLMStream, make_client_speeds

@@ -1,0 +1,1 @@
+from .engine import FLClients, FLRun, MLPClassifier, run_experiment, sampling_for

@@ -1,0 +1,196 @@
+"""Federated runtime: wires jitted JAX client gradients into the
+Generalized-AsyncSGD server loop (repro.core.async_sgd).
+
+The engine owns:
+  * a client set — each client holds a data shard and a jitted grad fn,
+  * the sampling policy — uniform / Jackson-optimal / physical-time-optimal
+    (computed from the client speeds via repro.core.sampling),
+  * the server algorithms — Generalized AsyncSGD, AsyncSGD, FedBuff, FedAvg,
+  * metrics — accuracy/loss vs CS steps *and* physical time, per-node delays.
+
+This is the paper's deep-learning experiment (§5) as a library.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import (
+    BoundConstants,
+    ServerConfig,
+    optimize_two_cluster,
+    run_favano,
+    run_fedavg,
+    run_fedbuff,
+    run_generalized_async_sgd,
+)
+from repro.data.pipeline import FederatedClassification, make_client_speeds
+
+__all__ = ["MLPClassifier", "FLClients", "FLRun", "run_experiment", "sampling_for"]
+
+
+# ------------------------------------------------------------------ #
+# a small classifier in the same param-meta system as the big models
+# ------------------------------------------------------------------ #
+class MLPClassifier:
+    """2-hidden-layer MLP; the FL-scale model (paper used ResNet20/CIFAR)."""
+
+    def __init__(self, dim: int, num_classes: int, hidden: int = 128, seed: int = 0):
+        k = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(k, 3)
+        s1, s2 = 1.0 / np.sqrt(dim), 1.0 / np.sqrt(hidden)
+        self.init_params = {
+            "w1": jax.random.normal(k1, (dim, hidden), jnp.float32) * s1,
+            "b1": jnp.zeros((hidden,), jnp.float32),
+            "w2": jax.random.normal(k2, (hidden, hidden), jnp.float32) * s2,
+            "b2": jnp.zeros((hidden,), jnp.float32),
+            "w3": jax.random.normal(k3, (hidden, num_classes), jnp.float32) * s2,
+            "b3": jnp.zeros((num_classes,), jnp.float32),
+        }
+
+    @staticmethod
+    def logits(params, x):
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        h = jax.nn.relu(h @ params["w2"] + params["b2"])
+        return h @ params["w3"] + params["b3"]
+
+    @staticmethod
+    def loss(params, batch):
+        lg = MLPClassifier.logits(params, batch["x"])
+        lp = jax.nn.log_softmax(lg)
+        return -jnp.mean(jnp.take_along_axis(lp, batch["y"][:, None], axis=-1))
+
+
+class FLClients:
+    """GradientSource over a federated dataset with one jitted grad fn."""
+
+    def __init__(self, data: FederatedClassification, model: MLPClassifier, batch_size: int = 128):
+        self.data = data
+        self.model = model
+        self.batch_size = batch_size
+        self._grad = jax.jit(jax.grad(model.loss))
+        self.grad_calls = 0
+
+    def grad(self, client_id: int, params, server_step: int):
+        batch = self.data.client_batch(client_id, self.batch_size)
+        self.grad_calls += 1
+        return self._grad(params, {"x": jnp.asarray(batch["x"]), "y": jnp.asarray(batch["y"])})
+
+
+# ------------------------------------------------------------------ #
+def sampling_for(flc: FLConfig, mu: np.ndarray, constants: BoundConstants | None = None) -> np.ndarray:
+    """Sampling probabilities per the configured policy."""
+    n = flc.n_clients
+    if flc.sampling == "uniform":
+        return np.full(n, 1.0 / n)
+    k = constants or BoundConstants(C=flc.concurrency, T=flc.server_steps)
+    mu_f, mu_s = float(mu.max()), float(mu.min())
+    n_f = int(np.sum(mu > (mu_f + mu_s) / 2))
+    if mu_f == mu_s or n_f in (0, n):
+        return np.full(n, 1.0 / n)
+    if flc.sampling == "optimal":
+        res = optimize_two_cluster(mu_f, mu_s, n, n_f, k)
+    elif flc.sampling == "physical_time":
+        from repro.core import optimize_physical_time
+
+        res = optimize_physical_time(mu_f, mu_s, n, n_f, k)
+    else:
+        raise ValueError(flc.sampling)
+    # res.p has fast-first layout; map onto actual fast/slow indices
+    p = np.empty(n)
+    p_fast, p_slow = res.p[0], res.p[-1]
+    p[mu > (mu_f + mu_s) / 2] = p_fast
+    p[mu <= (mu_f + mu_s) / 2] = p_slow
+    return p / p.sum()
+
+
+@dataclass
+class FLRun:
+    name: str
+    eval_steps: np.ndarray
+    eval_acc: np.ndarray
+    eval_times: np.ndarray
+    mean_delays: np.ndarray | None = None
+    final_params: Any = None
+    extras: dict = field(default_factory=dict)
+
+
+def _accuracy_fn(model: MLPClassifier, data: FederatedClassification, batch: int = 2048):
+    ev = data.eval_batch(batch)
+    x, y = jnp.asarray(ev["x"]), jnp.asarray(ev["y"])
+
+    @jax.jit
+    def acc(params):
+        return jnp.mean(jnp.argmax(MLPClassifier.logits(params, x), -1) == y)
+
+    return lambda p: float(acc(p))
+
+
+def run_experiment(
+    flc: FLConfig,
+    method: str,
+    eta: float = 0.05,
+    eval_every: int = 10,
+    data: FederatedClassification | None = None,
+) -> FLRun:
+    """One training run of {gen_async, async_sgd, fedbuff, fedavg}."""
+    data = data or FederatedClassification(n_clients=flc.n_clients, seed=flc.seed)
+    model = MLPClassifier(data.dim, data.num_classes, seed=flc.seed)
+    clients = FLClients(data, model)
+    mu = make_client_speeds(flc.n_clients, flc.frac_fast, flc.speed_ratio, seed=flc.seed)
+    acc_fn = _accuracy_fn(model, data)
+
+    base = ServerConfig(
+        n=flc.n_clients,
+        C=flc.concurrency,
+        T=flc.server_steps,
+        eta=eta,
+        mu=mu,
+        service=flc.service,
+        seed=flc.seed,
+        eval_every=eval_every,
+    )
+
+    if method == "gen_async":
+        p = sampling_for(flc, mu)
+        cfg = ServerConfig(**{**base.__dict__, "p": p, "weighting": "importance"})
+        w, tr = run_generalized_async_sgd(model.init_params, clients, cfg, eval_fn=acc_fn)
+    elif method == "async_sgd":
+        cfg = ServerConfig(**{**base.__dict__, "weighting": "plain"})
+        w, tr = run_generalized_async_sgd(model.init_params, clients, cfg, eval_fn=acc_fn)
+    elif method == "fedbuff":
+        cfg = ServerConfig(**{**base.__dict__, "weighting": "plain"})
+        w, tr = run_fedbuff(model.init_params, clients, cfg, Z=flc.fedbuff_Z, eval_fn=acc_fn)
+    elif method == "fedavg":
+        cfg = ServerConfig(**{**base.__dict__, "weighting": "plain"})
+        w, tr = run_fedavg(model.init_params, clients, cfg, eval_fn=acc_fn)
+    elif method == "favano":
+        cfg = ServerConfig(**{**base.__dict__, "weighting": "plain"})
+        w, tr = run_favano(model.init_params, clients, cfg,
+                           period=1.0 / float(np.median(mu)), eval_fn=acc_fn)
+    else:
+        raise ValueError(method)
+
+    ev_steps = np.asarray(tr.eval_steps)
+    times = (
+        np.asarray([tr.times[min(s - 1, len(tr.times) - 1)] for s in tr.eval_steps])
+        if len(tr.eval_steps)
+        else np.array([])
+    )
+    delays = None
+    if tr.delays is not None:
+        delays = np.array([np.mean(d) if d else np.nan for d in tr.delays])
+    return FLRun(
+        name=method,
+        eval_steps=ev_steps,
+        eval_acc=np.asarray(tr.eval_values),
+        eval_times=times,
+        mean_delays=delays,
+        final_params=w,
+        extras={"grad_calls": clients.grad_calls},
+    )

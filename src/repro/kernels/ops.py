@@ -1,0 +1,65 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively (interpret=False); everywhere else
+(including this CPU container and the dry-run) interpret mode executes the
+kernel bodies in Python for correctness validation.  Model code flips between
+kernel and jnp paths via cfg.use_pallas.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .moe_gmm import moe_gmm as _gmm
+from .ssd_scan import ssd_scan as _ssd
+from .weighted_update import weighted_update as _wupd
+
+__all__ = ["on_tpu", "flash_attention", "ssd_scan", "moe_gmm", "weighted_update",
+           "weighted_update_tree"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+def flash_attention(q, k, v, causal=True, window=0, q_offset=0, bq=128, bk=128):
+    return _flash(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=_interp(),
+    )
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk=64, init_state=None):
+    if init_state is not None:
+        # kernel path starts from zero state; fall back to the jnp reference
+        return ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk, init_state)
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=_interp())
+
+
+def moe_gmm(x, w, bc=128, bf=128, bd=128):
+    return _gmm(x, w, bc=bc, bf=bf, bd=bd, interpret=_interp())
+
+
+def weighted_update(w, g, scale, m=None, momentum=0.0):
+    return _wupd(w, g, scale, m=m, momentum=momentum, interpret=_interp())
+
+
+def weighted_update_tree(params, grads, scale, momenta=None, momentum=0.0):
+    """Apply the fused Alg.-1 update across a whole parameter pytree."""
+    if momenta is None:
+        new = jax.tree_util.tree_map(
+            lambda w, g: weighted_update(w, g, scale)[0], params, grads
+        )
+        return new, None
+    pairs = jax.tree_util.tree_map(
+        lambda w, g, m: weighted_update(w, g, scale, m=m, momentum=momentum),
+        params, grads, momenta,
+    )
+    new = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    mom = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new, mom

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "weighted_update_ref",
+    "flash_attention_ref",
+    "ssd_scan_ref",
+    "moe_gmm_ref",
+]
+
+
+def weighted_update_ref(
+    w: jax.Array, g: jax.Array, scale: jax.Array, m: jax.Array | None = None,
+    momentum: float = 0.0,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Generalized-AsyncSGD server update (Alg. 1 line 10):
+        m' = momentum*m + g          (if momentum buffer provided)
+        w' = w - scale * (m' or g)   scale = eta/(n p_j)
+    fp32 math, params cast back to their storage dtype.
+    """
+    gf = g.astype(jnp.float32)
+    if m is not None:
+        mf = momentum * m.astype(jnp.float32) + gf
+        step = mf
+    else:
+        mf = None
+        step = gf
+    wf = w.astype(jnp.float32) - scale.astype(jnp.float32) * step
+    return wf.astype(w.dtype), (None if mf is None else mf.astype(m.dtype))
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, K, D)
+    v: jax.Array,  # (B, T, K, D)
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) / np.sqrt(D)
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    rel = qpos[:, None] - kpos[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (rel >= 0)
+    if window:
+        mask = mask & (rel < window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, D)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, chunk: int = 64, init_state=None):
+    """Oracle = the (already recurrence-validated) chunked jnp implementation."""
+    from repro.models.mamba2 import ssd_chunked
+
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk, init_state)
+
+
+def moe_gmm_ref(xin: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped (per-expert) matmul on dispatch-form tensors.
+
+    xin: (E, C, D), w: (E, D, F) -> (E, C, F), fp32 accumulation.
+    """
+    return jnp.einsum(
+        "ecd,edf->ecf", xin.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(xin.dtype)

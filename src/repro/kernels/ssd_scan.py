@@ -1,0 +1,112 @@
+"""Pallas kernel: Mamba2 chunked SSD scan.
+
+One (batch, head) pair per grid row; the chunk axis is sequential
+("arbitrary") with the inter-chunk SSM state carried in a fp32 VMEM scratch
+(N, P).  Per chunk Q the kernel computes the within-chunk (dual/attention)
+term and folds the carried state, exactly the algorithm of
+repro.models.mamba2.ssd_chunked but with all intermediates resident in VMEM:
+
+    a    = dt * A                      (Q,)        fp32
+    L    = exp(segsum(a)) (masked)     (Q, Q)
+    Ydiag= (C B^T * L) @ (dt * x)      (Q, P)
+    Yoff = exp(cs) * (C @ state)       (Q, P)
+    state= exp(cs_Q) state + B^T diag(dt exp(cs_Q - cs)) x
+
+VMEM at (Q=128, N=128, P=64): ~200 KiB — comfortably resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state, *, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    A = a_ref[0]                              # scalar
+    B = b_ref[0].astype(jnp.float32)          # (Q, N)
+    C = c_ref[0].astype(jnp.float32)          # (Q, N)
+    Q = x.shape[0]
+
+    a = dt * A                                # (Q,)
+    cs = jnp.cumsum(a)                        # (Q,)
+    seg = cs[:, None] - cs[None, :]           # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    scores = C @ B.T                          # (Q, Q)
+    y_diag = (scores * L) @ (x * dt[:, None])
+    y_off = jnp.exp(cs)[:, None] * (C @ state[...])
+
+    decay_to_end = jnp.exp(cs[-1] - cs)       # (Q,)
+    new_state = jnp.exp(cs[-1]) * state[...] + B.T @ (x * (dt * decay_to_end)[:, None])
+    state[...] = new_state
+
+    y_ref[0, ...] = (y_diag + y_off).astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        st_ref[0, ...] = new_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H) fp32 post-softplus
+    A: jax.Array,    # (H,) fp32 negative
+    Bm: jax.Array,   # (B, S, N)
+    Cm: jax.Array,   # (B, S, N)
+    chunk: int = 64,
+    init_state=None,  # unsupported in the kernel path (prefill starts at 0)
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    if init_state is not None:
+        raise NotImplementedError("kernel path starts from zero state")
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        raise ValueError(f"S={S} % chunk={Q} != 0")
+    nc = S // Q
+    # layout: one (b, h) stream per grid row
+    xh = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dth = dt.transpose(0, 2, 1).reshape(B * H, S).astype(jnp.float32)
+    Ah = jnp.tile(A.astype(jnp.float32), B)                     # (B*H,)
+    Bh = jnp.repeat(Bm.astype(jnp.float32), H, axis=0).reshape(B, H, S, N).reshape(B * H, S, N) if False else jnp.broadcast_to(Bm[:, None].astype(jnp.float32), (B, H, S, N)).reshape(B * H, S, N)
+    Ch = jnp.broadcast_to(Cm[:, None].astype(jnp.float32), (B, H, S, N)).reshape(B * H, S, N)
+
+    y, st = pl.pallas_call(
+        functools.partial(_ssd_kernel, nc=nc),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda r, c: (r, c, 0)),
+            pl.BlockSpec((1, Q), lambda r, c: (r, c)),
+            pl.BlockSpec((1,), lambda r, c: (r,)),
+            pl.BlockSpec((1, Q, N), lambda r, c: (r, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda r, c: (r, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda r, c: (r, c, 0)),
+            pl.BlockSpec((1, N, P), lambda r, c: (r, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B * H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, Ah, Bh, Ch)
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    st = st.reshape(B, H, N, P)
+    return y, st

@@ -1,0 +1,323 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+mesh, extract roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --multi-pod
+
+Writes one JSON artifact per run under artifacts/dryrun/.
+"""
+from __future__ import annotations
+
+import os
+
+# MUST run before any jax import: device count locks on first init.
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (
+    SHAPES,
+    ARCH_IDS,
+    batch_logical_axes,
+    for_shape,
+    get_config,
+    input_specs,
+)
+from repro.configs.base import ModelConfig, OptimConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch import shardings as SH
+from repro.models import api
+from repro.models.module import abstract_params, logical_specs, param_count
+from repro.optim import make_optimizer
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op in the (SPMD) HLO."""
+    out = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    shape_re = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(.+?)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(", stripped)
+        if not m:
+            continue
+        if m.group(3) == "-done":    # avoid double counting async pairs
+            continue
+        result_types, coll = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in shape_re.findall(result_types):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[coll] += float(nbytes)
+        out["count"] += 1
+    out["total"] = float(sum(out[c] for c in _COLLECTIVES))
+    return out
+
+
+def optimizer_for(cfg: ModelConfig) -> OptimConfig:
+    # >100B-param models: bf16-momentum SGD keeps optimizer state in budget
+    if cfg.name == "arctic_480b":
+        return OptimConfig(name="momentum", state_dtype="bfloat16")
+    return OptimConfig(name="adamw", state_dtype="float32")
+
+
+def _opt_state_shardings(opt_cfg: OptimConfig, pshard, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rep = NamedSharding(mesh, P())
+    if opt_cfg.name == "sgd":
+        return {"count": rep}
+    if opt_cfg.name == "momentum":
+        return {"count": rep, "m": pshard}
+    return {"count": rep, "m": pshard, "v": pshard}
+
+
+def model_flops_estimate(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = processed tokens."""
+    from repro.models.module import param_count as pc
+
+    meta = api.model_meta(cfg)
+    n_params = pc(meta)
+    if cfg.family == "moe":
+        # subtract inactive expert params
+        e_all = 3 * cfg.d_model * cfg.d_ff_expert * cfg.num_experts
+        e_act = 3 * cfg.d_model * cfg.d_ff_expert * cfg.num_experts_per_tok
+        n_params = n_params - cfg.num_layers * (e_all - e_act)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_params * tokens
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    """Returns (jitted_fn, example_args_abstract) for the pair's step kind."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    pmeta = api.model_meta(cfg)
+    aparams = abstract_params(pmeta)
+    frules = SH.filter_rules(rules, mesh)
+    pshard = SH.param_shardings(pmeta, mesh, frules)
+    batch_abs = input_specs(cfg, shape)
+    baxes = batch_logical_axes(cfg, shape)
+    avail = set(mesh.axis_names)
+    b_ok = shape.global_batch % int(np.prod([mesh.shape[a] for a in ("pod", "data") if a in avail])) == 0
+    if not b_ok:
+        frules["batch"] = None
+    bshard = {
+        k: NamedSharding(
+            mesh,
+            SH.logical_to_pspec(baxes[k], {**frules, "seq": None}, batch_abs[k].shape, mesh),
+        )
+        for k in batch_abs
+    }
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt_cfg = optimizer_for(cfg)
+        opt = make_optimizer(opt_cfg)
+        aopt = jax.eval_shape(opt.init, aparams)
+        oshard = _opt_state_shardings(opt_cfg, pshard, mesh)
+
+        def train_step(params, opt_state, batch, sampling_weight):
+            with SH.activate_rules(frules, mesh):
+                return api.train_step(params, opt_state, batch, cfg, opt, sampling_weight)
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(pshard, oshard, bshard, rep),
+            out_shardings=(pshard, oshard, {"loss": rep, "moe_aux": rep, "grad_norm": rep}),
+            donate_argnums=(0, 1),
+        )
+        args = (aparams, aopt, batch_abs, jax.ShapeDtypeStruct((), jnp.float32))
+        return fn, args
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, batch):
+            with SH.activate_rules(frules, mesh):
+                logits, _ = api.forward(params, batch, cfg)
+                return logits
+
+        fn = jax.jit(prefill_step, in_shardings=(pshard, bshard))
+        return fn, (aparams, batch_abs)
+
+    # decode
+    cache_abs = api.init_cache(cfg, shape.global_batch, shape.seq_len)
+    caxes = api.cache_logical_axes(cfg)
+    cshard = {
+        k: NamedSharding(mesh, SH.logical_to_pspec(caxes[k], frules, cache_abs[k].shape, mesh))
+        for k in cache_abs
+    }
+
+    def serve_step(params, cache, batch):
+        with SH.activate_rules(frules, mesh):
+            return api.serve_step(params, cache, batch, cfg)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(pshard, cshard, bshard),
+        out_shardings=({"logits": rep, "next_ids": rep}, cshard),
+        donate_argnums=(1,),
+    )
+    return fn, (aparams, cache_abs, batch_abs)
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool, rules_name: str = "default",
+             out_dir: str = "artifacts/dryrun", overrides: dict | None = None,
+             tag_suffix: str = "") -> dict:
+    t0 = time.time()
+    shape = SHAPES[shape_name]
+    cfg = for_shape(get_config(arch), shape)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rules = dict(SH.DEFAULT_RULES if rules_name == "default" else SH.RULE_SETS[rules_name])
+
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "rules": rules_name,
+        "kind": shape.kind,
+        "sliding_window": cfg.sliding_window,
+        "params": param_count(api.model_meta(cfg)),
+    }
+    try:
+        fn, args = build_step(cfg, shape, mesh, rules)
+        lowered = fn.lower(*args)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        xla_flops = float(cost.get("flops", -1.0))
+        xla_bytes = float(cost.get("bytes accessed", -1.0))
+        # trip-count-aware analysis (XLA cost_analysis counts while bodies once)
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        hlo = analyze_hlo(compiled.as_text())
+        flops = hlo["flops"]
+        bytes_acc = hlo["bytes"]
+        try:
+            mem = compiled.memory_analysis()
+            mem_stats = {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", -1)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", -1)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", -1)),
+                "peak_bytes": int(
+                    getattr(mem, "peak_memory_in_bytes",
+                            getattr(mem, "temp_size_in_bytes", -1))
+                ),
+            }
+        except Exception as e:  # noqa: BLE001
+            mem_stats = {"error": str(e)}
+        coll = {**hlo["collectives"], "total": hlo["collective_bytes"]}
+        mf = model_flops_estimate(cfg, shape)
+        # roofline terms (seconds); cost_analysis is the per-device program
+        compute_t = flops / PEAK_FLOPS
+        memory_t = bytes_acc / HBM_BW
+        collective_t = coll["total"] / ICI_BW
+        terms = {"compute_s": compute_t, "memory_s": memory_t, "collective_s": collective_t}
+        dominant = max(terms, key=terms.get)
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            flops_per_device=flops,
+            bytes_per_device=bytes_acc,
+            xla_cost_flops=xla_flops,
+            xla_cost_bytes=xla_bytes,
+            collective_bytes_per_device=coll["total"],
+            collectives=coll,
+            memory=mem_stats,
+            roofline=terms,
+            dominant=dominant.replace("_s", ""),
+            model_flops_total=mf,
+            hlo_flops_total=flops * n_chips,
+            useful_flops_ratio=(mf / (flops * n_chips)) if flops > 0 else None,
+        )
+    except Exception as e:  # noqa: BLE001
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'singlepod'}__{rules_name}"
+    if tag_suffix:
+        tag += "__" + tag_suffix
+        rec["variant"] = tag_suffix
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK " if rec.get("ok") else "FAIL"
+    print(f"[{status}] {tag} wall={rec['wall_s']}s "
+          + (f"dom={rec.get('dominant')}" if rec.get("ok") else rec.get("error", "")[:200]),
+          flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", default="default")
+    ap.add_argument("--out-dir", default="artifacts/dryrun")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (hillclimb variants)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        key, val = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                val = cast(val)
+                break
+            except ValueError:
+                continue
+        overrides[key] = val
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_fail = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                rec = run_pair(arch, shp, mp, args.rules, args.out_dir,
+                               overrides=overrides or None, tag_suffix=args.tag)
+                n_fail += 0 if rec.get("ok") else 1
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run pair(s) failed")
+
+
+if __name__ == "__main__":
+    main()

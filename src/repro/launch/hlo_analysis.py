@@ -1,0 +1,262 @@
+"""Mini HLO cost model: trip-count-aware FLOPs / bytes / collective analysis.
+
+XLA's `compiled.cost_analysis()` counts a `while` body ONCE — under
+scan-over-layers that understates FLOPs, HBM traffic and collective bytes by
+a factor of num_layers.  This module parses the post-SPMD HLO text and walks
+the call graph with trip-count multipliers:
+
+  * dot FLOPs: 2 * prod(result_dims) * contraction_size (from dot dnums),
+  * memory traffic: operand+result bytes at fusion/instruction boundaries
+    (fusion-internal traffic assumed register/VMEM resident),
+  * collective bytes: result-shape bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (async `-start` only,
+    `-done` skipped),
+  * while trip counts: largest integer constant compared against in the
+    loop condition computation (exact for lax.scan/fori_loop lowerings).
+
+Validated in tests against hand-computed counts on known graphs.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["HloCostModel", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-~]+)\s*\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-~]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+
+
+def _shapes_in(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _nbytes(text: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Instr:
+    name: str
+    result_types: str
+    op: str
+    rest: str
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _nbytes(self.result_types)
+
+
+@dataclass
+class _Computation:
+    name: str
+    instrs: dict[str, _Instr] = field(default_factory=dict)
+    order: list[str] = field(default_factory=list)
+
+
+def _parse_computations(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and line.strip().endswith("{"):
+            cur = _Computation(hdr.group(1))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = _Instr(m.group(1), m.group(2), m.group(3), m.group(4), line)
+            cur.instrs[ins.name] = ins
+            cur.order.append(ins.name)
+    return comps
+
+
+def _called_comps(rest: str) -> list[str]:
+    """Computation names referenced via calls=/condition=/body=/to_apply= etc."""
+    out = []
+    for key in ("calls", "condition", "body", "to_apply", "branch_computations",
+                "true_computation", "false_computation"):
+        for m in re.finditer(key + r"=\{?%?([\w.\-~]+(?:,\s*%?[\w.\-~]+)*)\}?", rest):
+            for name in m.group(1).split(","):
+                out.append(name.strip().lstrip("%"))
+    return out
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Operand instruction names from the call argument list (up to ')')."""
+    depth = 1
+    args = []
+    buf = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args.append(buf)
+                break
+        if depth >= 1 and ch != ")":
+            buf += ch
+    arglist = "".join(args)
+    return [m.group(1) for m in re.finditer(r"%([\w.\-~]+)", arglist)]
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = _parse_computations(text)
+        self._memo: dict[str, dict] = {}
+
+    # ---------------------------------------------------------------- #
+    def _dot_flops(self, comp: _Computation, ins: _Instr) -> float:
+        result_elems = 0
+        for dt, dims in _shapes_in(ins.result_types):
+            n = 1
+            for d in dims:
+                n *= d
+            result_elems += n
+        # contraction size from lhs operand shape + lhs_contracting_dims
+        ops = _operand_names(ins.rest)
+        k = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        if m and ops:
+            lhs = comp.instrs.get(ops[0])
+            lhs_shape = None
+            if lhs is not None:
+                shp = _shapes_in(lhs.result_types)
+                if shp:
+                    lhs_shape = shp[0][1]
+            else:
+                # operand may carry inline type in the arg list
+                m2 = re.search(r"%" + re.escape(ops[0]), ins.rest)
+                lhs_shape = None
+            if lhs_shape:
+                for d in m.group(1).split(","):
+                    if d:
+                        di = int(d)
+                        if di < len(lhs_shape):
+                            k *= lhs_shape[di]
+        return 2.0 * result_elems * k
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for ins in comp.instrs.values():
+            for m in re.finditer(r"constant\((\d+)\)", ins.line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def analyze(self, comp_name: str) -> dict:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        zero = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+                "collectives": {c: 0.0 for c in _COLLECTIVES}, "dots": 0}
+        if comp is None:
+            return zero
+        tot = dict(zero)
+        tot["collectives"] = dict(zero["collectives"])
+        self._memo[comp_name] = tot  # break cycles
+        for name in comp.order:
+            ins = comp.instrs[name]
+            op = ins.op
+            if op in ("parameter", "constant", "get-tuple-element", "tuple"):
+                continue
+            if op == "dot":
+                tot["flops"] += self._dot_flops(comp, ins)
+                tot["bytes"] += ins.result_bytes
+                tot["dots"] += 1
+                continue
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                b = ins.result_bytes
+                tot["collective_bytes"] += b
+                tot["collectives"][base] += b
+                tot["bytes"] += b
+                continue
+            if op == "while":
+                body, cond = None, None
+                m = re.search(r"body=%?([\w.\-~]+)", ins.line)
+                if m:
+                    body = m.group(1)
+                m = re.search(r"condition=%?([\w.\-~]+)", ins.line)
+                if m:
+                    cond = m.group(1)
+                # XLA annotates known trip counts directly — prefer that
+                m = re.search(r"known_trip_count.*?\"n\":\"(\d+)\"", ins.line)
+                if m:
+                    trips = int(m.group(1))
+                else:
+                    trips = self._trip_count(cond) if cond else 1
+                sub = self.analyze(body) if body else zero
+                tot["flops"] += trips * sub["flops"]
+                tot["bytes"] += trips * sub["bytes"]
+                tot["collective_bytes"] += trips * sub["collective_bytes"]
+                for c in _COLLECTIVES:
+                    tot["collectives"][c] += trips * sub["collectives"][c]
+                continue
+            if op in ("fusion", "call", "conditional", "custom-call", "reduce", "sort", "map", "scatter", "select-and-scatter", "reduce-window", "all-reduce-scatter"):
+                # boundary traffic: result bytes (operand bytes approximated
+                # by producers' result bytes already counted once)
+                tot["bytes"] += ins.result_bytes
+                for sub_name in _called_comps(ins.line):
+                    # only dive for flops/collectives (internal traffic is fused)
+                    sub = self.analyze(sub_name)
+                    tot["flops"] += sub["flops"]
+                    tot["collective_bytes"] += sub["collective_bytes"]
+                    for c in _COLLECTIVES:
+                        tot["collectives"][c] += sub["collectives"][c]
+                    tot["dots"] += sub["dots"]
+                continue
+            # default elementwise/copy/convert/dynamic-slice/...: result bytes
+            tot["bytes"] += ins.result_bytes
+        self._memo[comp_name] = tot
+        return tot
+
+    def entry(self) -> dict:
+        # the ENTRY computation is conventionally named 'main...'
+        for name in self.comps:
+            if name.startswith("main"):
+                return self.analyze(name)
+        # fallback: the computation that no one calls
+        called: set[str] = set()
+        for comp in self.comps.values():
+            for ins in comp.instrs.values():
+                called.update(_called_comps(ins.line))
+        for name in self.comps:
+            if name not in called:
+                return self.analyze(name)
+        raise ValueError("cannot find entry computation")
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloCostModel(text).entry()

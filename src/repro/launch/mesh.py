@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Single pod: (data=16, model=16) = 256 chips.  Multi-pod:
+(pod=2, data=16, model=16) = 512 chips.  Uses the first N devices so a
+512-fake-device dry-run process can build both meshes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, found {len(devices)} — the dry-run entrypoint "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax"
+        )
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2) -> Mesh:
+    """Small mesh for tests (subprocesses set a small device count)."""
+    n = data * model
+    dev = np.asarray(jax.devices()[:n]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))

@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill + decode loop with the unified serve_step.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --batch 4 --steps 32
+
+Runs the reduced (smoke) variant on CPU; on TPU pass --preset full and a mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models import api
+from repro.models.module import init_params
+
+
+def materialize_cache(spec: dict) -> dict:
+    def one(s):
+        if s.dtype == jnp.int32 and s.ndim == 1:  # ring positions: -1 = empty
+            return jnp.full(s.shape, -1, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree_util.tree_map(one, spec)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--preset", choices=["small", "full"], default="small")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.preset == "small" else get_config(args.arch)
+    params = init_params(api.model_meta(cfg), jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    B = args.batch
+    cache = materialize_cache(api.init_cache(cfg, B, args.prompt_len + args.steps))
+    step = jax.jit(lambda p, c, b: api.serve_step(p, c, b, cfg))
+
+    # prefill via repeated decode (exercises the ring cache exactly)
+    if cfg.frontend == "audio_stub":
+        prompt = rng.normal(size=(B, args.prompt_len, cfg.d_model)).astype(np.float32)
+        feed = lambda t: {"embeds": jnp.asarray(prompt[:, t : t + 1])}
+    else:
+        prompt_ids = rng.integers(0, cfg.vocab_size, (B, args.prompt_len))
+        feed = lambda t: {"tokens": jnp.asarray(prompt_ids[:, t : t + 1], jnp.int32)}
+    t0 = time.time()
+    out = None
+    for t in range(args.prompt_len):
+        out, cache = step(params, cache, feed(t))
+    t_prefill = time.time() - t0
+
+    generated = []
+    t0 = time.time()
+    nxt = out["next_ids"][:, None]
+    for _ in range(args.steps):
+        if cfg.frontend == "audio_stub":
+            batch = {"embeds": jnp.zeros((B, 1, cfg.d_model), jnp.float32)}
+        else:
+            batch = {"tokens": nxt}
+        out, cache = step(params, cache, batch)
+        nxt = out["next_ids"][:, None]
+        generated.append(np.asarray(out["next_ids"]))
+    t_dec = time.time() - t0
+    gen = np.stack(generated, axis=1)
+    print(f"arch={cfg.name} batch={B} prefill={args.prompt_len}tok/{t_prefill*1e3:.1f}ms "
+          f"decode={args.steps}tok/{t_dec*1e3:.1f}ms "
+          f"({B*args.steps/t_dec:.1f} tok/s aggregate)")
+    print("sample generation (client 0):", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Logical-axis sharding rules (MaxText-style) and activation constraints.
+
+Parameters and activations are annotated with *logical* axis names; a rule
+table maps logical names to mesh axes.  `shard_activation` is a no-op unless
+a rule context is active, so model code stays runnable on a single device.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "DECODE_RULES",
+    "activate_rules",
+    "shard_activation",
+    "logical_to_pspec",
+    "param_shardings",
+]
+
+# Baseline (paper-faithful FSDP+TP) rule set for the (pod, data, model) mesh.
+# Values may be a single mesh axis, a tuple of axes, or None (replicate).
+DEFAULT_RULES: dict[str, Any] = {
+    # parameters
+    "embed": "data",            # FSDP: shard the d_model dim of weights on data
+    "mlp": "model",             # TP: FFN hidden
+    "mlp_expert": "model",      # expert FFN hidden (experts may not divide mesh)
+    "heads_x_dim": "model",     # fused (heads*head_dim) projection output
+    "kv_x_dim": "model",        # fused (kv_heads*head_dim) — GSPMD pads if uneven
+    "vocab": "model",
+    "experts": "model",         # expert parallelism
+    "layers": None,
+    "state": None,
+    "conv": None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "cache_seq": None,
+    "cache_kv_heads": "model",
+    "cache_head_dim": "model",  # fallback when kv_heads doesn't divide the axis
+    "experts_act": "model",
+}
+
+# Decode: batch is small per-chip; keep FSDP off the fly-weight path.
+DECODE_RULES = dict(DEFAULT_RULES)
+DECODE_RULES.update({"embed": None})
+
+# Named rule variants for the §Perf hillclimb (selected via dryrun --rules).
+RULE_SETS: dict[str, dict] = {
+    "default": DEFAULT_RULES,
+    # no FSDP: pure tensor-parallel params (replicated over data)
+    "tp_only": {**DEFAULT_RULES, "embed": None},
+    # sequence-sharded activations (context parallelism on long sequences)
+    "seq_data": {**DEFAULT_RULES, "seq": "data", "batch": ("pod",)},
+    # shard the KV cache along sequence instead of kv-heads (flash-decode style)
+    "kv_seq": {**DEFAULT_RULES, "cache_seq": "model", "cache_kv_heads": None},
+    # expert-major: experts across the whole mesh
+    "expert_wide": {**DEFAULT_RULES, "experts": ("data", "model"), "mlp_expert": None},
+    # replicate KV heads over the model axis (GQA K < model-axis size causes
+    # involuntary full rematerialization otherwise)
+    "kv_rep": {**DEFAULT_RULES, "kv_heads": None, "kv_x_dim": None},
+}
+
+def filter_rules(rules: dict, mesh: Mesh) -> dict:
+    """Drop mesh axes not present in `mesh` (e.g. 'pod' on single-pod)."""
+    avail = set(mesh.axis_names)
+
+    def filt(v):
+        if v is None:
+            return None
+        if isinstance(v, (tuple, list)):
+            kept = tuple(a for a in v if a in avail)
+            return kept if kept else None
+        return v if v in avail else None
+
+    return {k: filt(v) for k, v in rules.items()}
+
+
+_active_rules: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "repro_sharding_rules", default=None
+)
+_active_mesh: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
+    "repro_sharding_mesh", default=None
+)
+
+
+@contextlib.contextmanager
+def activate_rules(rules: dict, mesh: Mesh):
+    """Enable logical-axis constraints inside model code.
+
+    Mesh axes missing from `mesh` (e.g. 'pod' on the single-pod mesh) are
+    silently dropped from the rules.
+    """
+    avail = set(mesh.axis_names)
+
+    def filt(v):
+        if v is None:
+            return None
+        if isinstance(v, (tuple, list)):
+            kept = tuple(a for a in v if a in avail)
+            return kept if kept else None
+        return v if v in avail else None
+
+    tok_r = _active_rules.set({k: filt(v) for k, v in rules.items()})
+    tok_m = _active_mesh.set(mesh)
+    try:
+        yield
+    finally:
+        _active_rules.reset(tok_r)
+        _active_mesh.reset(tok_m)
+
+
+def logical_to_pspec(
+    axes: tuple, rules: dict, shape: tuple | None = None, mesh: Mesh | None = None
+) -> P:
+    """Translate logical axis names into a PartitionSpec.
+
+    If `shape` and `mesh` are given, any assignment whose mesh-axis product
+    does not divide the dimension falls back to the largest divisible subset
+    (pjit *argument* shardings require exact divisibility, unlike internal
+    with_sharding_constraint).  A mesh axis is used at most once per tensor.
+    """
+    sizes = dict(mesh.shape) if mesh is not None else {}
+    out = []
+    used: set[str] = set()
+    for i, name in enumerate(axes):
+        if name is None:
+            out.append(None)
+            continue
+        v = rules.get(name)
+        if v is None:
+            out.append(None)
+            continue
+        vv = tuple(v) if isinstance(v, (tuple, list)) else (v,)
+        vv = tuple(a for a in vv if a not in used)
+        if shape is not None and mesh is not None and vv:
+            dim = shape[i]
+
+            def divisible(cand: tuple) -> bool:
+                n = 1
+                for a in cand:
+                    n *= sizes[a]
+                return dim % n == 0
+
+            if not divisible(vv):
+                # largest divisible prefix, then single axes in order
+                cand: tuple = ()
+                for j in range(len(vv) - 1, 0, -1):
+                    if divisible(vv[:j]):
+                        cand = vv[:j]
+                        break
+                if not cand:
+                    for a in vv:
+                        if divisible((a,)):
+                            cand = (a,)
+                            break
+                vv = cand
+        used.update(vv)
+        if not vv:
+            out.append(None)
+        elif len(vv) == 1:
+            out.append(vv[0])
+        else:
+            out.append(vv)
+    return P(*out)
+
+
+def shard_activation(x: jax.Array, axes: tuple) -> jax.Array:
+    """Apply with_sharding_constraint from logical axes; identity w/o context."""
+    rules = _active_rules.get()
+    mesh = _active_mesh.get()
+    if rules is None or mesh is None:
+        return x
+    if x.ndim != len(axes):
+        return x
+    spec = logical_to_pspec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_shardings(meta_tree: Any, mesh: Mesh, rules: dict) -> Any:
+    """Tree of NamedShardings from a ParamMeta tree (shape-aware fallback)."""
+    from repro.models.module import ParamMeta
+
+    frules = filter_rules(rules, mesh)
+
+    def one(meta: ParamMeta):
+        return NamedSharding(mesh, logical_to_pspec(meta.axes, frules, meta.shape, mesh))
+
+    return jax.tree_util.tree_map(one, meta_tree, is_leaf=lambda x: isinstance(x, ParamMeta))

@@ -1,0 +1,118 @@
+"""Unified model API: every architecture family behind the same four calls.
+
+    meta      = model_meta(cfg)                      # ParamMeta tree
+    logits, _ = forward(params, batch, cfg)          # train / prefill
+    cache     = init_cache(cfg, batch, seq_len)      # abstract cache spec
+    logits, c = decode_step(params, cache, batch, cfg)
+
+plus the training-facing:
+
+    loss, aux           = loss_fn(params, batch, cfg)
+    params, opt, metric = train_step(params, opt_state, batch, cfg, opt,
+                                     sampling_weight)   # Alg.1 line 10 weight
+
+`sampling_weight` is the Generalized-AsyncSGD importance factor 1/(n p_j)
+(1.0 recovers plain synchronous SGD) — the paper's technique as a first-class
+feature of the training step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid, mamba2, transformer
+from repro.optim import Optimizer
+
+__all__ = [
+    "family_module",
+    "model_meta",
+    "forward",
+    "init_cache",
+    "cache_logical_axes",
+    "decode_step",
+    "loss_fn",
+    "train_step",
+    "serve_step",
+]
+
+
+def family_module(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return transformer
+    if cfg.family == "ssm":
+        return mamba2
+    if cfg.family == "hybrid":
+        return hybrid
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def model_meta(cfg: ModelConfig) -> dict:
+    return family_module(cfg).model_meta(cfg)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    return family_module(cfg).forward(params, batch, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    return family_module(cfg).init_cache(cfg, batch, seq_len)
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    return family_module(cfg).cache_logical_axes(cfg)
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig):
+    return family_module(cfg).decode_step(params, cache, batch, cfg)
+
+
+# ------------------------------------------------------------------ #
+# loss & steps
+# ------------------------------------------------------------------ #
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Next-token cross entropy (fp32), masked, + MoE aux loss."""
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]                       # (B, S_lab)
+    S_lab = labels.shape[1]
+    if cfg.frontend == "vision_stub":
+        # text logits start after the patch prefix; position P-1+i predicts
+        # text token i (the last patch slot predicts the first text token).
+        start = cfg.num_patches - 1
+        logits = jax.lax.dynamic_slice_in_dim(logits, start, S_lab, axis=1)
+    else:
+        logits = logits[:, :S_lab]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        loss = jnp.mean(nll)
+    else:
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.family == "moe":
+        loss = loss + cfg.router_aux_coef * aux
+    return loss, aux
+
+
+def train_step(params, opt_state, batch, cfg: ModelConfig, opt: Optimizer,
+               sampling_weight: jax.Array | float = 1.0):
+    """One Generalized-AsyncSGD server step on a (possibly sharded) batch.
+
+    sampling_weight = 1/(n p_j) for the contributing client j (Alg. 1);
+    it scales the whole update, keeping the gradient estimator unbiased.
+    """
+    (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, cfg)
+    new_params, new_opt = opt.update(grads, opt_state, params, scale=sampling_weight)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree_util.tree_leaves(grads))
+    )
+    metrics = {"loss": loss, "moe_aux": aux, "grad_norm": gnorm}
+    return new_params, new_opt, metrics
+
+
+def serve_step(params, cache, batch, cfg: ModelConfig):
+    """One batched decode step; greedy next-token ids alongside raw logits."""
+    logits, new_cache = decode_step(params, cache, batch, cfg)
+    next_ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return {"logits": logits, "next_ids": next_ids}, new_cache

@@ -1,0 +1,163 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention+MLP block
+applied every `cfg.attn_every` layers (arXiv:2411.15242).
+
+The shared block has a single parameter set reused at each application
+(Zamba2's weight-shared global block); the backbone layers scan as usual.
+Decode carries per-layer SSM/conv states plus one KV cache per shared-block
+application site.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.module import ParamMeta
+
+__all__ = ["model_meta", "forward", "init_cache", "decode_step", "num_shared_sites"]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def num_shared_sites(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def model_meta(cfg: ModelConfig) -> dict:
+    D, V, nL = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    dt = _dt(cfg)
+    tree: dict[str, Any] = {
+        "embed": ParamMeta((V, D), ("vocab", "embed"), dtype=dt, init="embed"),
+        "blocks": M.mamba_block_meta(cfg, stacked=nL),
+        "shared": {
+            "attn": L.attention_meta(cfg),
+            "ffn": L.ffn_meta(cfg),
+        },
+        "final_norm": ParamMeta((D,), ("embed",), dtype=dt, init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamMeta((D, V), ("embed", "vocab"), dtype=dt, fan_in_axes=(0,))
+    return tree
+
+
+def _seg_slice(tree, lo: int, hi: int):
+    return jax.tree_util.tree_map(lambda p: p[lo:hi], tree)
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    x = params["embed"][batch["tokens"]]
+    B, S, D = x.shape
+    x = L._shard(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, axis=0)
+    ae = cfg.attn_every
+    n_seg = num_shared_sites(cfg)
+
+    def mamba_body(x, params_l):
+        x, _ = M.mamba_block(params_l, x, cfg)
+        return x, None
+
+    mamba_body = (
+        jax.checkpoint(mamba_body) if cfg.remat != "none" else mamba_body
+    )
+
+    for seg in range(n_seg):
+        # shared attention + MLP block at the segment head (weight-shared)
+        x = L.attention_block(params["shared"]["attn"], x, cfg, positions)
+        x = L.ffn_block(params["shared"]["ffn"], x, cfg)
+        x, _ = jax.lax.scan(mamba_body, x, _seg_slice(params["blocks"], seg * ae, (seg + 1) * ae))
+    # trailing backbone layers if L % attn_every != 0
+    if cfg.num_layers % ae:
+        x, _ = jax.lax.scan(mamba_body, x, _seg_slice(params["blocks"], n_seg * ae, cfg.num_layers))
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    from repro.models.transformer import cache_len_for
+
+    d_inner = cfg.d_inner
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    conv_ch = d_inner + 2 * cfg.ssm_groups * N
+    nL, nseg = cfg.num_layers, num_shared_sites(cfg)
+    W = cache_len_for(cfg, seq_len)
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    dt = _dt(cfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct((nL, batch, H, N, cfg.ssm_head_dim), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((nL, batch, cfg.ssm_conv - 1, conv_ch), dt),
+        "k": jax.ShapeDtypeStruct((nseg, batch, W, K, Dh), dt),
+        "v": jax.ShapeDtypeStruct((nseg, batch, W, K, Dh), dt),
+        "positions": jax.ShapeDtypeStruct((W,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ssm": ("layers", "batch", "heads", "state", None),
+        "conv": ("layers", "batch", None, "mlp"),
+        "k": ("layers", "batch", "cache_seq", "cache_kv_heads", "cache_head_dim"),
+        "v": ("layers", "batch", "cache_seq", "cache_kv_heads", "cache_head_dim"),
+        "positions": (None,),
+        "pos": (),
+    }
+
+
+def decode_step(params: dict, cache: dict, batch: dict, cfg: ModelConfig):
+    x = params["embed"][batch["tokens"]]
+    pos = cache["pos"]
+    ae = cfg.attn_every
+    n_seg = num_shared_sites(cfg)
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    positions = cache["positions"]
+
+    def mamba_seg(x, lo, hi):
+        def body(x, xs):
+            params_l, ssm, conv = xs
+            x, ssm, conv = M.mamba_decode_block(params_l, x, cfg, ssm, conv)
+            return x, (ssm, conv)
+
+        xs = (
+            _seg_slice(params["blocks"], lo, hi),
+            cache["ssm"][lo:hi],
+            cache["conv"][lo:hi],
+        )
+        return jax.lax.scan(body, x, xs)
+
+    for seg in range(n_seg):
+        x, (kc, vc), positions = L.decode_attention_block(
+            params["shared"]["attn"], x, cfg,
+            (cache["k"][seg], cache["v"][seg]), cache["positions"], pos,
+        )
+        x = L.ffn_block(params["shared"]["ffn"], x, cfg)
+        new_k.append(kc)
+        new_v.append(vc)
+        x, (ssm, conv) = mamba_seg(x, seg * ae, (seg + 1) * ae)
+        new_ssm.append(ssm)
+        new_conv.append(conv)
+    if cfg.num_layers % ae:
+        x, (ssm, conv) = mamba_seg(x, n_seg * ae, cfg.num_layers)
+        new_ssm.append(ssm)
+        new_conv.append(conv)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    new_cache = {
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "k": jnp.stack(new_k, axis=0),
+        "v": jnp.stack(new_v, axis=0),
+        "positions": positions,
+        "pos": pos + 1,
+    }
+    return logits, new_cache

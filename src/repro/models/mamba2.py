@@ -1,0 +1,323 @@
+"""Mamba2 (state-space duality / SSD) blocks — chunked parallel form + decode.
+
+Follows "Transformers are SSDs" (arXiv:2405.21060):
+  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,      y_t = C_t h_t + D x_t
+with per-head scalar A, shared B/C across heads (ssm_groups=1).  Training and
+prefill use the chunked dual form (O(S Q) with chunk Q); decode is the O(1)
+recurrence.  fp32 for all decay/exp math.
+
+The chunked scan is also implemented as a Pallas kernel
+(repro.kernels.ssd_scan) selected by cfg.use_pallas.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.module import ParamMeta
+
+__all__ = [
+    "mamba_block_meta",
+    "model_meta",
+    "ssd_chunked",
+    "ssd_recurrent_step",
+    "mamba_block",
+    "mamba_decode_block",
+    "forward",
+    "init_cache",
+    "decode_step",
+]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    conv_ch = d_inner + 2 * G * N
+    return d_inner, H, N, G, conv_ch
+
+
+def mamba_block_meta(cfg: ModelConfig, stacked: int | None = None) -> dict:
+    D = cfg.d_model
+    d_inner, H, N, G, conv_ch = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    dt = _dt(cfg)
+
+    def P(shape, axes, **kw):
+        if stacked is not None:
+            shape, axes = (stacked, *shape), ("layers", *axes)
+        return ParamMeta(shape, axes, dtype=dt, **kw)
+
+    return {
+        "in_proj": P((D, d_in_proj), ("embed", "mlp"), fan_in_axes=(-2,)),
+        "conv_w": P((cfg.ssm_conv, conv_ch), ("conv", "mlp"), init="normal", fan_in_axes=(0,)),
+        "conv_b": P((conv_ch,), ("mlp",), init="zeros"),
+        "A_log": P((H,), ("state",), init="ssm_a"),
+        "D": P((H,), ("state",), init="ones"),
+        "dt_bias": P((H,), ("state",), init="ssm_dt"),
+        "norm": P((d_inner,), ("mlp",), init="ones"),
+        "out_proj": P((d_inner, D), ("mlp", "embed"), fan_in_axes=(-2,)),
+        "pre_norm": P((D,), ("embed",), init="ones"),
+    }
+
+
+def model_meta(cfg: ModelConfig) -> dict:
+    D, V, nL = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    dt = _dt(cfg)
+    tree: dict[str, Any] = {
+        "embed": ParamMeta((V, D), ("vocab", "embed"), dtype=dt, init="embed"),
+        "blocks": mamba_block_meta(cfg, stacked=nL),
+        "final_norm": ParamMeta((D,), ("embed",), dtype=dt, init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamMeta((D, V), ("embed", "vocab"), dtype=dt, fan_in_axes=(0,))
+    return tree
+
+
+# ------------------------------------------------------------------ #
+# SSD math
+# ------------------------------------------------------------------ #
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j < l <= i} a_l (i>=j), -inf else."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((Q, Q), dtype=bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  fp32, post-softplus
+    A: jax.Array,   # (H,)       fp32, negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int,
+    init_state: jax.Array | None = None,  # (B, H, N, P)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        raise ValueError(f"S={S} not divisible by chunk={Q}")
+    nc = S // Q
+    xc = x.reshape(Bsz, nc, Q, H, Pd)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    a = dtc * A[None, None, None, :]                     # (B,nc,Q,H)
+    cs = jnp.cumsum(a, axis=2)                           # within-chunk cumsum
+
+    # --- intra-chunk (diagonal) term --------------------------------- #
+    Lmat = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))     # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)       # (B,nc,Q,Q)
+    xw = xc.astype(jnp.float32) * dtc[..., None]         # dt_j * x_j
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, Lmat, xw)
+
+    # --- chunk states -------------------------------------------------- #
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)        # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, dtc * decay_to_end, xc.astype(jnp.float32))
+
+    # --- inter-chunk recurrence (scan over chunks) -------------------- #
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (B,nc,H)
+    h0 = (
+        jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def body(h, xs):
+        st, dec = xs                                     # (B,H,N,P), (B,H)
+        h_prev = h
+        h = h * dec[:, :, None, None] + st
+        return h, h_prev
+
+    hT, h_prevs = jax.lax.scan(
+        body,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,N,P)
+
+    # --- inter-chunk output term -------------------------------------- #
+    decay_from_start = jnp.exp(cs)                       # (B,nc,Q,H)
+    y_off = jnp.einsum("bcin,bchnp,bcih->bcihp", Cc, h_prevs, decay_from_start)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd).astype(x.dtype)
+    return y, hT
+
+
+def ssd_recurrent_step(
+    h: jax.Array,   # (B, H, N, P) fp32 state
+    x: jax.Array,   # (B, H, P)
+    dt: jax.Array,  # (B, H) fp32
+    A: jax.Array,   # (H,)
+    Bm: jax.Array,  # (B, N)
+    Cm: jax.Array,  # (B, N)
+) -> tuple[jax.Array, jax.Array]:
+    """One decode step.  Returns (y (B,H,P), new_state)."""
+    dA = jnp.exp(dt * A[None, :])                        # (B,H)
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", Bm.astype(jnp.float32), dt, x.astype(jnp.float32))
+    h = h * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h)
+    return y.astype(x.dtype), h
+
+
+# ------------------------------------------------------------------ #
+# blocks
+# ------------------------------------------------------------------ #
+def _split_proj(proj: jax.Array, cfg: ModelConfig):
+    d_inner, H, N, G, conv_ch = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_inner, d_inner + conv_ch], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  xBC: (B,S,Ch), w: (W,Ch)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(W):  # W is 4: unrolled taps beat conv_general on TPU for depthwise
+        out = out + pad[:, i : i + xBC.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                init_state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba2 block with residual.  Returns (y, final_ssm_state)."""
+    B, S, D = x.shape
+    d_inner, H, N, G, conv_ch = _dims(cfg)
+    Pd = cfg.ssm_head_dim
+    h = L._maybe_grad_cast(L.rms_norm(params["pre_norm"], x, cfg.norm_eps), cfg)
+    proj = jnp.einsum("bsd,de->bse", h, params["in_proj"])
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"], params["conv_b"]))
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, Pd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        y, hT = kops.ssd_scan(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk, init_state=init_state)
+    else:
+        y, hT = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk, init_state)
+    y = y + xs * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
+    y = L.rms_norm(params["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    out = L._shard(out, ("batch", "seq", "embed"))
+    return x + out, hT
+
+
+def mamba_decode_block(
+    params: dict,
+    x: jax.Array,                       # (B, 1, D)
+    cfg: ModelConfig,
+    ssm_state: jax.Array,               # (B, H, N, P) fp32
+    conv_state: jax.Array,              # (B, W-1, conv_ch)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    B, _, D = x.shape
+    d_inner, H, N, G, conv_ch = _dims(cfg)
+    Pd = cfg.ssm_head_dim
+    h = L.rms_norm(params["pre_norm"], x, cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, params["in_proj"])
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    xBC = xBC[:, 0]                                       # (B, conv_ch)
+    # conv ring: taps = [conv_state, new]
+    full = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # (B, W, ch)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32), w.astype(jnp.float32))
+    conv_out = conv_out + params["conv_b"].astype(jnp.float32)
+    xBC_c = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv_state = full[:, 1:, :]
+    xs, Bm, Cm = jnp.split(xBC_c, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, H, Pd)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, new_state = ssd_recurrent_step(ssm_state, xs, dt, A, Bm, Cm)
+    y = y + xs * params["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(B, 1, d_inner) * jax.nn.silu(z)
+    y = L.rms_norm(params["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return x + out, new_state, new_conv_state
+
+
+# ------------------------------------------------------------------ #
+# whole-model entry points
+# ------------------------------------------------------------------ #
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    x = params["embed"][batch["tokens"]]
+    x = L._shard(x, ("batch", "seq", "embed"))
+
+    blk = _remat(functools.partial(_call_block, cfg), cfg)
+
+    def body(x, params_l):
+        x, _ = blk(params_l, x)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def _call_block(cfg, params_l, x):
+    return mamba_block(params_l, x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    d_inner, H, N, G, conv_ch = _dims(cfg)
+    nL = cfg.num_layers
+    return {
+        "ssm": jax.ShapeDtypeStruct((nL, batch, H, N, cfg.ssm_head_dim), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((nL, batch, cfg.ssm_conv - 1, conv_ch), _dt(cfg)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ssm": ("layers", "batch", "heads", "state", None),
+        "conv": ("layers", "batch", None, "mlp"),
+        "pos": (),
+    }
+
+
+def decode_step(params: dict, cache: dict, batch: dict, cfg: ModelConfig):
+    x = params["embed"][batch["tokens"]]
+    B = x.shape[0]
+
+    def body(x, xs):
+        params_l, ssm, conv = xs
+        x, ssm, conv = mamba_decode_block(params_l, x, cfg, ssm, conv)
+        return x, (ssm, conv)
+
+    x, (ssm, conv) = jax.lax.scan(body, x, (params["blocks"], cache["ssm"], cache["conv"]))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, {"ssm": ssm, "conv": conv, "pos": cache["pos"] + 1}

@@ -1,0 +1,117 @@
+"""Minimal pure-JAX module system: parameter metadata as the single source of truth.
+
+A model definition is a nested dict of `ParamMeta` leaves.  From that one
+tree we derive:
+  * `init_params`      — materialized arrays (deterministic per-leaf RNG),
+  * `abstract_params`  — jax.ShapeDtypeStruct tree (dry-run, no allocation),
+  * `logical_specs`    — PartitionSpec-of-logical-axis-names tree, later
+                         translated to mesh axes by `repro.launch.shardings`.
+
+This is the same "logical axis annotations at init" design MaxText/Flaxformer
+use, without pulling in a framework dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamMeta", "init_params", "abstract_params", "logical_specs", "param_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    """Declares one parameter: shape, dtype, logical axes, initializer.
+
+    axes entries are logical names ('embed', 'mlp', 'heads', 'kv_heads',
+    'head_dim', 'vocab', 'experts', 'layers', 'state', None...) — one per dim.
+    init: 'normal' (fan-in scaled), 'zeros', 'ones', 'embed' (unit normal
+    scaled by 1/sqrt(d)), 'small' (0.006 std, router-style).
+    """
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"
+    fan_in_axes: tuple[int, ...] | None = None  # dims reduced by the matmul
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def _is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def _leaf_rng(rng: jax.Array, path: str) -> jax.Array:
+    """Deterministic per-leaf key derived from the tree path.
+
+    Uses crc32 (not Python's salted hash()) so initialization is identical
+    across processes — checkpoint/restart reproducibility depends on this."""
+    import zlib
+
+    h = zlib.crc32(path.encode()) & 0x7FFFFFFF
+    return jax.random.fold_in(rng, int(h))
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+    )
+
+
+def init_params(meta_tree: Any, rng: jax.Array, dtype_override: Any = None) -> Any:
+    """Materialize parameters.  Deterministic given rng."""
+
+    def make(path, meta: ParamMeta):
+        dt = dtype_override or meta.dtype
+        key = _leaf_rng(rng, _path_str(path))
+        if meta.init == "zeros":
+            return jnp.zeros(meta.shape, dt)
+        if meta.init == "ones":
+            return jnp.ones(meta.shape, dt)
+        if meta.init == "small":
+            return (0.006 * jax.random.normal(key, meta.shape, jnp.float32)).astype(dt)
+        if meta.init == "embed":
+            d = meta.shape[-1]
+            return (jax.random.normal(key, meta.shape, jnp.float32) / np.sqrt(d)).astype(dt)
+        if meta.init == "normal":
+            fan_axes = meta.fan_in_axes if meta.fan_in_axes is not None else (0,)
+            fan_in = int(np.prod([meta.shape[a] for a in fan_axes]))
+            std = 1.0 / np.sqrt(max(fan_in, 1))
+            return (std * jax.random.normal(key, meta.shape, jnp.float32)).astype(dt)
+        if meta.init == "ssm_a":  # mamba2 A_log init: log(uniform[1,16])
+            u = jax.random.uniform(key, meta.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(jnp.float32)  # A kept fp32 for stability
+        if meta.init == "ssm_dt":  # dt_bias: softplus^-1 of uniform[1e-3, 1e-1]
+            u = jax.random.uniform(key, meta.shape, jnp.float32, 1e-3, 1e-1)
+            return jnp.log(jnp.expm1(u)).astype(jnp.float32)
+        raise ValueError(f"unknown init {meta.init}")
+
+    return jax.tree_util.tree_map_with_path(make, meta_tree, is_leaf=_is_meta)
+
+
+def abstract_params(meta_tree: Any, dtype_override: Any = None) -> Any:
+    """ShapeDtypeStruct tree — used by the dry-run (no device allocation)."""
+
+    def make(meta: ParamMeta):
+        dt = meta.dtype if dtype_override is None else dtype_override
+        if meta.init in ("ssm_a", "ssm_dt"):
+            dt = jnp.float32  # stability-critical params stay fp32
+        return jax.ShapeDtypeStruct(meta.shape, dt)
+
+    return jax.tree_util.tree_map(make, meta_tree, is_leaf=_is_meta)
+
+
+def logical_specs(meta_tree: Any) -> Any:
+    """Tree of logical-axis tuples, mirroring the parameter tree."""
+    return jax.tree_util.tree_map(lambda m: m.axes, meta_tree, is_leaf=_is_meta)
+
+
+def param_count(meta_tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(meta_tree, is_leaf=_is_meta)
+    return int(sum(np.prod(m.shape) for m in leaves))

@@ -1,0 +1,177 @@
+"""Decoder-only transformer family: dense, MoE, VLM-backbone, audio-backbone.
+
+One parameter tree + three entry points:
+  * `forward`      — full-sequence logits (train / prefill),
+  * `init_cache`   — ring-buffer KV cache metadata,
+  * `decode_step`  — one-token serve step against the cache.
+
+Layers are stacked along a leading 'layers' axis and executed with
+jax.lax.scan (small HLO, fast SPMD compile) with configurable remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.module import ParamMeta
+
+__all__ = ["model_meta", "forward", "init_cache", "decode_step"]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def model_meta(cfg: ModelConfig) -> dict:
+    D, V, nL = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    dt = _dt(cfg)
+    tree: dict[str, Any] = {}
+    if cfg.frontend != "audio_stub":
+        tree["embed"] = ParamMeta((V, D), ("vocab", "embed"), dtype=dt, init="embed")
+    block = {"attn": L.attention_meta(cfg, stacked=nL)}
+    if cfg.family in ("moe",):
+        block["moe"] = L.moe_meta(cfg, stacked=nL)
+    else:
+        block["ffn"] = L.ffn_meta(cfg, stacked=nL)
+    tree["blocks"] = block
+    tree["final_norm"] = ParamMeta((D,), ("embed",), dtype=dt, init="ones")
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamMeta((D, V), ("embed", "vocab"), dtype=dt, fan_in_axes=(0,))
+    return tree
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+def _block_apply(cfg: ModelConfig, params_l: dict, x: jax.Array, positions: jax.Array):
+    x = L.attention_block(params_l["attn"], x, cfg, positions)
+    if "moe" in params_l:
+        x, aux = L.moe_block(params_l["moe"], x, cfg)
+    else:
+        x = L.ffn_block(params_l["ffn"], x, cfg)
+        aux = jnp.zeros((), jnp.float32)
+    return x, aux
+
+
+def _embed_inputs(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """Token / stub-frontend embedding.  Returns (B, S_total, D)."""
+    if cfg.frontend == "audio_stub":
+        # EnCodec frame embeddings arrive precomputed (spec carve-out).
+        return batch["embeds"].astype(_dt(cfg))
+    x = params["embed"][batch["tokens"]]  # (B, S_text, D) gather
+    if cfg.frontend == "vision_stub":
+        patches = batch["patch_embeds"].astype(x.dtype)  # (B, P, D)
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits (B,S,V), moe_aux_loss)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, S, D = x.shape
+    x = L._shard(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, axis=0)
+
+    blk = _remat(functools.partial(_block_apply, cfg), cfg)
+
+    if cfg.scan_layers:
+        def body(carry, params_l):
+            x, aux = carry
+            x, a = blk(params_l, x, positions)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+        aux = aux / cfg.num_layers
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            params_l = jax.tree_util.tree_map(lambda p: p[i], params["blocks"])
+            x, a = blk(params_l, x, positions)
+            aux = aux + a / cfg.num_layers
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = L._shard(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+# ------------------------------------------------------------------ #
+# decode
+# ------------------------------------------------------------------ #
+def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Abstract cache spec (ShapeDtypeStructs); materialize with jnp.zeros."""
+    W = cache_len_for(cfg, seq_len)
+    nL, K, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    dt = _dt(cfg)
+    return {
+        "k": jax.ShapeDtypeStruct((nL, batch, W, K, Dh), dt),
+        "v": jax.ShapeDtypeStruct((nL, batch, W, K, Dh), dt),
+        "positions": jax.ShapeDtypeStruct((W,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        "k": ("layers", "batch", "cache_seq", "cache_kv_heads", "cache_head_dim"),
+        "v": ("layers", "batch", "cache_seq", "cache_kv_heads", "cache_head_dim"),
+        "positions": (None,),
+        "pos": (),
+    }
+
+
+def decode_step(
+    params: dict, cache: dict, batch: dict, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    """One-token decode.  batch: {"tokens": (B,1)} or {"embeds": (B,1,D)}.
+
+    Returns (logits (B, V), new_cache).
+    """
+    if cfg.frontend == "audio_stub":
+        x = batch["embeds"].astype(_dt(cfg))
+    else:
+        x = params["embed"][batch["tokens"]]
+    B = x.shape[0]
+    x = L._shard(x, ("batch", None, "embed"))
+    pos = cache["pos"]
+
+    def body(carry, xs):
+        x, positions = carry
+        params_l, ck, cv = xs
+        x, (ck, cv), positions = L.decode_attention_block(
+            params_l["attn"], x, cfg, (ck, cv), positions, pos
+        )
+        if "moe" in params_l:
+            x, _ = L.moe_block(params_l["moe"], x, cfg)
+        else:
+            x = L.ffn_block(params_l["ffn"], x, cfg)
+        return (x, positions), (ck, cv)
+
+    # NOTE: cache positions are identical across layers; carry one copy.
+    (x, new_positions), (ks, vs) = jax.lax.scan(
+        body, (x, cache["positions"]), (params["blocks"], cache["k"], cache["v"])
+    )
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    new_cache = {"k": ks, "v": vs, "positions": new_positions, "pos": pos + 1}
+    return logits, new_cache

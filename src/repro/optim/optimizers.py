@@ -1,0 +1,114 @@
+"""Optimizers in plain JAX (no optax dependency): sgd, momentum, adamw.
+
+API mirrors optax: `opt.init(params) -> state`, `opt.update(grads, state,
+params) -> (updates, state)`; updates are *subtracted* by the caller.  State
+dtype is configurable (bf16 moments for huge models — see OptimConfig).
+All optimizers support a per-step scale (the Generalized-AsyncSGD importance
+weight eta/(n p_j) divides out the base lr: we pass scale and the optimizer
+multiplies its step by it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple[Pytree, Pytree]]
+    # update(grads, state, params, scale=1.0) -> (new_params, new_state)
+
+
+def _cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def make_optimizer(cfg: OptimConfig) -> Optimizer:
+    sdt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+    if cfg.name == "sgd":
+
+        def init(params):
+            return {"count": jnp.zeros((), jnp.int32)}
+
+        def update(grads, state, params, scale=1.0):
+            new = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32) - cfg.lr * scale * g.astype(jnp.float32)).astype(p.dtype),
+                params,
+                grads,
+            )
+            return new, {"count": state["count"] + 1}
+
+        return Optimizer(init, update)
+
+    if cfg.name == "momentum":
+
+        def init(params):
+            return {
+                "count": jnp.zeros((), jnp.int32),
+                "m": _cast(jax.tree_util.tree_map(jnp.zeros_like, params), sdt),
+            }
+
+        def update(grads, state, params, scale=1.0):
+            m = jax.tree_util.tree_map(
+                lambda m, g: (cfg.momentum * m.astype(jnp.float32) + g.astype(jnp.float32)).astype(sdt),
+                state["m"],
+                grads,
+            )
+            new = jax.tree_util.tree_map(
+                lambda p, mm: (p.astype(jnp.float32) - cfg.lr * scale * mm.astype(jnp.float32)).astype(p.dtype),
+                params,
+                m,
+            )
+            return new, {"count": state["count"] + 1, "m": m}
+
+        return Optimizer(init, update)
+
+    if cfg.name == "adamw":
+
+        def init(params):
+            z = jax.tree_util.tree_map(jnp.zeros_like, params)
+            return {
+                "count": jnp.zeros((), jnp.int32),
+                "m": _cast(z, sdt),
+                "v": _cast(z, sdt),
+            }
+
+        def update(grads, state, params, scale=1.0):
+            c = state["count"] + 1
+            b1, b2 = cfg.beta1, cfg.beta2
+            m = jax.tree_util.tree_map(
+                lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(sdt),
+                state["m"],
+                grads,
+            )
+            v = jax.tree_util.tree_map(
+                lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(sdt),
+                state["v"],
+                grads,
+            )
+            bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+            bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+            def step(p, mm, vv):
+                mhat = mm.astype(jnp.float32) / bc1
+                vhat = vv.astype(jnp.float32) / bc2
+                upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+                if cfg.weight_decay:
+                    upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - cfg.lr * scale * upd).astype(p.dtype)
+
+            new = jax.tree_util.tree_map(step, params, m, v)
+            return new, {"count": c, "m": m, "v": v}
+
+        return Optimizer(init, update)
+
+    raise ValueError(f"unknown optimizer {cfg.name}")

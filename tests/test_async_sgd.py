@@ -1,0 +1,175 @@
+"""Generalized AsyncSGD server: unbiasedness, Lemma-9 invariant, convergence."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    BoundConstants,
+    ServerConfig,
+    eta_max,
+    generalized_bound,
+    optimal_eta,
+    run_fedavg,
+    run_fedbuff,
+    run_generalized_async_sgd,
+)
+
+
+class Quadratic:
+    """Clients hold quadratics f_i(w) = 0.5 ||w - c_i||^2; f* at mean(c_i)."""
+
+    def __init__(self, n, d=4, noise=0.0, seed=0):
+        rng = np.random.default_rng(seed)
+        self.c = rng.normal(size=(n, d))
+        self.noise = noise
+        self.rng = np.random.default_rng(seed + 1)
+        self.d = d
+
+    def grad(self, i, w, k):
+        g = w - self.c[i]
+        if self.noise:
+            g = g + self.noise * self.rng.normal(size=w.shape)
+        return g
+
+    def optimum(self):
+        return self.c.mean(axis=0)
+
+    def loss(self, w):
+        return 0.5 * np.mean(np.sum((w[None] - self.c) ** 2, axis=1))
+
+
+class TestAlgorithmOne:
+    def test_converges_to_optimum_uniform(self):
+        n = 8
+        prob = Quadratic(n)
+        # constant-step async SGD has a noise floor ~ eta*G (client drift);
+        # average the tail iterates to remove it
+        cfg = ServerConfig(n=n, C=4, T=6000, eta=0.02, seed=0)
+        w, _ = run_generalized_async_sgd(np.zeros(prob.d), prob, cfg)
+        np.testing.assert_allclose(w, prob.optimum(), atol=0.2)
+
+    def test_converges_with_nonuniform_sampling(self):
+        """Importance weighting keeps the fixed point unbiased for ANY p."""
+        n = 8
+        prob = Quadratic(n, seed=3)
+        p = np.array([0.4, 0.2, 0.1, 0.1, 0.05, 0.05, 0.05, 0.05])
+        cfg = ServerConfig(n=n, C=4, T=20_000, eta=0.02, p=p, seed=1)
+        w, _ = run_generalized_async_sgd(np.zeros(prob.d), prob, cfg)
+        np.testing.assert_allclose(w, prob.optimum(), atol=0.25)
+
+    def test_plain_weighting_biased_under_nonuniform(self):
+        """Without the 1/(n p_j) factor, non-uniform sampling shifts the
+        fixed point toward over-sampled clients — the bias Alg. 1 removes."""
+        n = 4
+        prob = Quadratic(n, seed=5)
+        p = np.array([0.7, 0.1, 0.1, 0.1])
+        cfg = ServerConfig(n=n, C=2, T=12_000, eta=0.02, p=p, seed=2, weighting="plain")
+        w, _ = run_generalized_async_sgd(np.zeros(prob.d), prob, cfg)
+        biased_target = (p[:, None] * prob.c).sum(axis=0)  # p-weighted mean
+        d_unbiased = np.linalg.norm(w - prob.optimum())
+        d_biased = np.linalg.norm(w - biased_target)
+        assert d_biased < d_unbiased  # sits near the p-weighted mean instead
+
+    def test_virtual_iterate_inflight_cardinality(self):
+        """Lemma 9(i): the number of in-flight tasks is constant (= C)."""
+        n = 6
+        prob = Quadratic(n)
+        cfg = ServerConfig(n=n, C=5, T=200, eta=0.1, seed=4, track_virtual=True)
+        _, tr = run_generalized_async_sgd(np.zeros(prob.d), prob, cfg)
+        assert set(tr.inflight_cardinality) == {5}
+
+    def test_snapshot_semantics(self):
+        """Gradients must be evaluated at dispatch-time parameters."""
+
+        class Recorder(Quadratic):
+            def __init__(self, *a, **kw):
+                super().__init__(*a, **kw)
+                self.seen = []
+
+            def grad(self, i, w, k):
+                self.seen.append(np.array(w))
+                return super().grad(i, w, k)
+
+        n = 4
+        prob = Recorder(n)
+        cfg = ServerConfig(n=n, C=4, T=50, eta=0.5, seed=0)
+        run_generalized_async_sgd(np.zeros(prob.d), prob, cfg)
+        # with C=4 in flight and eta large, at least one gradient must have
+        # been computed on stale (non-current) parameters
+        assert len(prob.seen) == 50
+
+    def test_works_on_pytrees(self):
+        n = 4
+
+        class TreeQuad:
+            def __init__(self):
+                self.c = [np.full(3, i, dtype=float) for i in range(n)]
+
+            def grad(self, i, w, k):
+                return {"a": w["a"] - self.c[i], "b": 2.0 * w["b"]}
+
+        prob = TreeQuad()
+        w0 = {"a": np.zeros(3), "b": np.ones(2)}
+        cfg = ServerConfig(n=n, C=2, T=4000, eta=0.05, seed=0)
+        w, _ = run_generalized_async_sgd(w0, prob, cfg)
+        np.testing.assert_allclose(w["a"], np.mean(range(n)), atol=0.3)
+        np.testing.assert_allclose(w["b"], 0.0, atol=1e-3)
+
+
+class TestBaselines:
+    def test_fedbuff_converges(self):
+        n = 8
+        prob = Quadratic(n)
+        cfg = ServerConfig(n=n, C=4, T=10_000, eta=0.05, seed=0)
+        w, _ = run_fedbuff(np.zeros(prob.d), prob, cfg, Z=5)
+        np.testing.assert_allclose(w, prob.optimum(), atol=0.12)
+
+    def test_favano_converges(self):
+        from repro.core import run_favano
+
+        n = 8
+        prob = Quadratic(n)
+        cfg = ServerConfig(n=n, C=4, T=300, eta=0.05, seed=0)
+        w, _ = run_favano(np.zeros(prob.d), prob, cfg, period=1.0)
+        np.testing.assert_allclose(w, prob.optimum(), atol=0.15)
+
+    def test_fedavg_converges(self):
+        n = 8
+        prob = Quadratic(n)
+        cfg = ServerConfig(n=n, C=4, T=500, eta=0.3, seed=0)
+        w, _ = run_fedavg(np.zeros(prob.d), prob, cfg, clients_per_round=8)
+        np.testing.assert_allclose(w, prob.optimum(), atol=0.05)  # full-participation averaging is exact
+
+
+class TestBounds:
+    def test_eta_max_positive_and_bounded(self):
+        k = BoundConstants()
+        p = np.full(10, 0.1)
+        m = np.full(10, 5.0)
+        e = eta_max(p, m, k)
+        assert 0 < e < 1.0
+
+    def test_optimal_eta_minimizes(self):
+        k = BoundConstants()
+        p = np.full(10, 0.1)
+        m = np.full(10, 5.0)
+        e = optimal_eta(p, m, k)
+        g0 = generalized_bound(e, p, m, k)
+        for mult in (0.5, 0.9, 1.1, 2.0):
+            e2 = min(e * mult, eta_max(p, m, k))
+            assert g0 <= generalized_bound(e2, p, m, k) + 1e-9
+
+    def test_uniform_optimal_as_T_to_inf(self):
+        """Paper: with T -> inf the p-dependent terms vanish; uniform wins."""
+        k = BoundConstants(T=10**8, C=5)
+        m = np.full(6, 3.0)
+        u = np.full(6, 1 / 6)
+        gu = generalized_bound(optimal_eta(u, m, k), u, m, k)
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            q = rng.uniform(0.3, 1.0, 6)
+            q /= q.sum()
+            gq = generalized_bound(optimal_eta(q, m, k), q, m, k)
+            assert gu <= gq + 1e-12

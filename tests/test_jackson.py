@@ -1,0 +1,151 @@
+"""Closed Jackson network: Buzen algorithm, stationary laws, delay estimates."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    JacksonNetwork,
+    SimConfig,
+    buzen_normalizing_constants,
+    gamma_ratio,
+    simulate,
+    three_cluster_delay_bounds,
+    two_cluster_delay_bounds,
+)
+
+
+def _random_net(rng, n, C):
+    mu = rng.uniform(0.5, 5.0, n)
+    p = rng.uniform(0.1, 1.0, n)
+    p /= p.sum()
+    return JacksonNetwork(mu=mu, p=p, C=C)
+
+
+class TestBuzen:
+    def test_matches_bruteforce_distribution(self):
+        rng = np.random.default_rng(0)
+        for trial in range(5):
+            net = _random_net(rng, n=3, C=4)
+            bf = net.brute_force_distribution()
+            assert sum(bf.values()) == pytest.approx(1.0)
+            ql_bf = np.zeros(3)
+            for s, v in bf.items():
+                ql_bf += np.array(s) * v
+            np.testing.assert_allclose(net.mean_queue_lengths(), ql_bf, rtol=1e-10)
+
+    def test_normalizing_constant_bruteforce(self):
+        theta = np.array([0.5, 1.0, 0.25])
+        G = buzen_normalizing_constants(theta, 3)
+        # H_3 = sum over compositions of 3 into 3 parts of prod theta^x
+        from repro.core.jackson import _compositions
+
+        H3 = sum(np.prod(theta ** np.array(x)) for x in _compositions(3, 3))
+        assert G[3] == pytest.approx(H3)
+
+    def test_tail_prob_identity(self):
+        rng = np.random.default_rng(1)
+        net = _random_net(rng, n=4, C=5)
+        bf = net.brute_force_distribution()
+        for i in range(4):
+            for c in range(1, 6):
+                truth = sum(v for s, v in bf.items() if s[i] >= c)
+                assert net.queue_tail_prob(i, c) == pytest.approx(truth, abs=1e-12)
+
+    @given(
+        n=st.integers(2, 6),
+        C=st.integers(1, 8),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_queue_lengths_sum_to_C(self, n, C, seed):
+        net = _random_net(np.random.default_rng(seed), n, C)
+        assert net.mean_queue_lengths().sum() == pytest.approx(C, rel=1e-9)
+
+    @given(n=st.integers(2, 5), C=st.integers(2, 10), seed=st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_throughput_monotone_in_C(self, n, C, seed):
+        rng = np.random.default_rng(seed)
+        mu = rng.uniform(0.5, 5.0, n)
+        p = rng.uniform(0.1, 1.0, n)
+        p /= p.sum()
+        lam1 = JacksonNetwork(mu=mu, p=p, C=C).throughput()
+        lam2 = JacksonNetwork(mu=mu, p=p, C=C + 1).throughput()
+        assert lam2 >= lam1 - 1e-12  # more tasks never reduce throughput
+        assert lam1 <= mu.sum() + 1e-12
+
+
+class TestAgainstSimulation:
+    def test_time_avg_queue_lengths(self):
+        mu = np.array([1.0, 2.0, 0.5])
+        p = np.array([0.3, 0.3, 0.4])
+        net = JacksonNetwork(mu=mu, p=p, C=4)
+        res = simulate(SimConfig(mu=mu, p=p, C=4, T=150_000, seed=3))
+        np.testing.assert_allclose(
+            res.time_avg_queue_lengths(), net.mean_queue_lengths(), rtol=0.05
+        )
+
+    def test_throughput(self):
+        mu = np.array([1.0, 2.0, 0.5])
+        p = np.array([0.3, 0.3, 0.4])
+        net = JacksonNetwork(mu=mu, p=p, C=4)
+        res = simulate(SimConfig(mu=mu, p=p, C=4, T=150_000, seed=3))
+        assert res.throughput() == pytest.approx(net.throughput(), rel=0.03)
+
+    def test_palm_sojourn_times(self):
+        """Arrival theorem + FIFO: E^{C-1}[S_i] = (E^{C-1}[X_i]+1)/mu_i."""
+        mu = np.array([1.0, 2.0, 0.5])
+        p = np.array([0.3, 0.3, 0.4])
+        net = JacksonNetwork(mu=mu, p=p, C=4)
+        res = simulate(SimConfig(mu=mu, p=p, C=4, T=150_000, seed=5))
+        theory = [(net.mean_queue_lengths(ntasks=3)[i] + 1) / mu[i] for i in range(3)]
+        sim = [np.mean(d) for d in res.time_delays]
+        np.testing.assert_allclose(sim, theory, rtol=0.05)
+
+    def test_delay_estimates_order_and_scale(self):
+        """m̂_i tracks simulation within ~35% and preserves ordering."""
+        mu = np.array([3.0, 3.0, 1.0, 1.0])
+        p = np.full(4, 0.25)
+        net = JacksonNetwork(mu=mu, p=p, C=8)
+        res = simulate(SimConfig(mu=mu, p=p, C=8, T=200_000, seed=7))
+        est = net.expected_delays()
+        sim = res.mean_delay_per_node()
+        assert est[2] > est[0]  # slow nodes wait longer (in steps)
+        np.testing.assert_allclose(est, sim, rtol=0.35)
+        # upper bound really bounds
+        assert np.all(net.delay_upper_bounds() >= sim * 0.95)
+
+    def test_little_law_in_steps(self):
+        """Mean delay over completed tasks = C - 1 (each task sees C-1 others)."""
+        mu = np.array([2.0, 1.0])
+        p = np.array([0.6, 0.4])
+        res = simulate(SimConfig(mu=mu, p=p, C=5, T=100_000, seed=11))
+        all_delays = np.concatenate([np.asarray(d) for d in res.delays])
+        assert np.mean(all_delays) == pytest.approx(4.0, rel=0.03)
+
+
+class TestSaturatedRegime:
+    def test_paper_numerical_example(self):
+        """Paper §4: n=10, mu_f=1.2, mu_s=1.0, C=1000 -> ~50 fast / ~1950 slow."""
+        mu = np.array([1.2] * 5 + [1.0] * 5)
+        net = JacksonNetwork(mu=mu, p=np.full(10, 0.1), C=1000)
+        est = net.expected_delays()
+        assert est[0] == pytest.approx(50.0, rel=0.15)
+        assert est[-1] == pytest.approx(1950.0, rel=0.05)
+
+    def test_two_cluster_closed_form(self):
+        m_f, m_s = two_cluster_delay_bounds(n=10, n_f=5, mu_f=1.2, mu_s=1.0, C=1000)
+        # paper: m_f <= ~5n (45.8 with lambda=11), m_s ~ 195 * lambda
+        assert m_f == pytest.approx(45.83, rel=0.01)
+        assert m_s == pytest.approx(2145.0, rel=0.01)
+
+    def test_three_cluster_closed_form(self):
+        m_f, m_m, m_s = three_cluster_delay_bounds(
+            n=9, n_f=3, n_m=6, mu_f=10.0, mu_m=1.2, mu_s=1.0, C=1000
+        )
+        assert m_f < m_m < m_s
+        lam = 3 * 10.0 + 3 * 1.2 + 3 * 1.0
+        assert m_m == pytest.approx(lam / 1.2 / 0.2, rel=0.01)
+
+    def test_gamma_ratio_limits(self):
+        assert gamma_ratio(5, 1e6) == pytest.approx(1.0, abs=1e-6)
+        assert 0.0 < gamma_ratio(5, 1.0) < 1.0

@@ -1,0 +1,138 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.weighted_update import weighted_update
+
+_rng = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,S,H,K,D,T,window,offset,bq,bk",
+        [
+            (2, 128, 4, 2, 64, 128, 0, 0, 64, 64),
+            (1, 256, 8, 4, 64, 256, 64, 0, 128, 64),
+            (1, 64, 4, 1, 128, 64, 0, 0, 32, 32),     # MQA
+            (1, 128, 4, 4, 128, 384, 0, 256, 64, 128),  # decode-ish offset
+            (2, 64, 6, 2, 32, 64, 16, 0, 64, 64),     # narrow window
+        ],
+    )
+    def test_matches_reference(self, dtype, B, S, H, K, D, T, window, offset, bq, bk):
+        q = jnp.asarray(_rng.normal(size=(B, S, H, D)), dtype)
+        k = jnp.asarray(_rng.normal(size=(B, T, K, D)), dtype)
+        v = jnp.asarray(_rng.normal(size=(B, T, K, D)), dtype)
+        out = flash_attention(q, k, v, causal=True, window=window, q_offset=offset, bq=bq, bk=bk)
+        exp = ref.flash_attention_ref(q, k, v, causal=True, window=window, q_offset=offset)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), exp.astype(jnp.float32), **_tol(dtype)
+        )
+
+    @given(
+        S=st.sampled_from([64, 128, 192]),
+        H=st.sampled_from([2, 4]),
+        G=st.sampled_from([1, 2]),
+        window=st.sampled_from([0, 32]),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_property_sweep(self, S, H, G, window):
+        K = H // G
+        D = 32
+        q = jnp.asarray(_rng.normal(size=(1, S, H, D)), jnp.float32)
+        k = jnp.asarray(_rng.normal(size=(1, S, K, D)), jnp.float32)
+        v = jnp.asarray(_rng.normal(size=(1, S, K, D)), jnp.float32)
+        out = flash_attention(q, k, v, window=window, bq=64, bk=64)
+        exp = ref.flash_attention_ref(q, k, v, window=window)
+        np.testing.assert_allclose(out, exp, atol=1e-4, rtol=1e-4)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,S,H,P,N,chunk", [
+        (2, 128, 3, 32, 16, 32),
+        (1, 64, 2, 64, 128, 64),
+        (1, 256, 4, 16, 8, 16),
+    ])
+    def test_matches_reference(self, dtype, B, S, H, P, N, chunk):
+        x = jnp.asarray(_rng.normal(size=(B, S, H, P)), dtype)
+        dt = jnp.asarray(_rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+        A = -jnp.asarray(_rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+        Bm = jnp.asarray(_rng.normal(size=(B, S, N)), dtype)
+        Cm = jnp.asarray(_rng.normal(size=(B, S, N)), dtype)
+        y, s = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+        ye, se = ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk)
+        np.testing.assert_allclose(y.astype(jnp.float32), ye.astype(jnp.float32), **_tol(dtype))
+        np.testing.assert_allclose(s, se, atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+class TestMoEGMM:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("E,C,D,F,bc,bf,bd", [
+        (4, 256, 128, 256, 128, 128, 128),
+        (2, 128, 256, 128, 64, 64, 128),
+        (8, 64, 64, 64, 64, 64, 64),
+    ])
+    def test_matches_reference(self, dtype, E, C, D, F, bc, bf, bd):
+        x = jnp.asarray(_rng.normal(size=(E, C, D)), dtype)
+        w = jnp.asarray(_rng.normal(size=(E, D, F)), dtype)
+        out = moe_gmm(x, w, bc=bc, bf=bf, bd=bd)
+        exp = ref.moe_gmm_ref(x, w)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), exp.astype(jnp.float32), **_tol(dtype)
+        )
+
+    def test_block_shape_invariance(self):
+        x = jnp.asarray(_rng.normal(size=(2, 256, 256)), jnp.float32)
+        w = jnp.asarray(_rng.normal(size=(2, 256, 256)), jnp.float32)
+        o1 = moe_gmm(x, w, bc=64, bf=64, bd=64)
+        o2 = moe_gmm(x, w, bc=256, bf=128, bd=256)
+        np.testing.assert_allclose(o1, o2, atol=1e-4)
+
+
+class TestWeightedUpdate:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(17,), (1000, 37), (8, 128), (3, 5, 7)])
+    @pytest.mark.parametrize("momentum", [0.0, 0.9])
+    def test_matches_reference(self, dtype, shape, momentum):
+        w = jnp.asarray(_rng.normal(size=shape), dtype)
+        g = jnp.asarray(_rng.normal(size=shape), dtype)
+        m = jnp.zeros(shape, jnp.float32) if momentum else None
+        scale = jnp.float32(0.37)
+        ow, om = weighted_update(w, g, scale, m=m, momentum=momentum)
+        ew, em = ref.weighted_update_ref(w, g, scale, m=m, momentum=momentum)
+        np.testing.assert_allclose(
+            ow.astype(jnp.float32), ew.astype(jnp.float32), **_tol(dtype)
+        )
+        if momentum:
+            np.testing.assert_allclose(om, em, atol=1e-5)
+
+    def test_importance_weight_semantics(self):
+        """scale = eta/(n p_j): doubling p_j halves the applied step."""
+        w = jnp.ones((64,), jnp.float32)
+        g = jnp.ones((64,), jnp.float32)
+        eta, n = 0.1, 10
+        w1, _ = weighted_update(w, g, jnp.float32(eta / (n * 0.05)))
+        w2, _ = weighted_update(w, g, jnp.float32(eta / (n * 0.10)))
+        np.testing.assert_allclose(w - w1, 2.0 * (w - w2), rtol=1e-6)
+
+    @given(n=st.integers(1, 5000), seed=st.integers(0, 100))
+    @settings(max_examples=15, deadline=None)
+    def test_padding_correct_any_size(self, n, seed):
+        r = np.random.default_rng(seed)
+        w = jnp.asarray(r.normal(size=(n,)), jnp.float32)
+        g = jnp.asarray(r.normal(size=(n,)), jnp.float32)
+        ow, _ = weighted_update(w, g, jnp.float32(0.5))
+        np.testing.assert_allclose(ow, w - 0.5 * g, atol=1e-6)

@@ -1,0 +1,224 @@
+"""Per-architecture smoke tests + model-level equivalences.
+
+Every assigned architecture instantiates a REDUCED same-family variant
+(2 layers, d_model<=512, <=4 experts), runs one forward + one train step on
+CPU, and asserts output shapes and no NaNs.  Decode paths are checked for
+exact consistency with the full-sequence forward.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.configs.base import OptimConfig
+from repro.models import api
+from repro.models.module import abstract_params, init_params, param_count
+from repro.optim import make_optimizer
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng, with_labels=True):
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.frontend == "audio_stub":
+        b = {"embeds": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)}
+        if with_labels:
+            b["labels"] = toks
+    elif cfg.frontend == "vision_stub":
+        st = S - cfg.num_patches
+        b = {
+            "tokens": toks[:, :st],
+            "patch_embeds": jnp.asarray(
+                rng.normal(size=(B, cfg.num_patches, cfg.d_model)), jnp.float32
+            ),
+        }
+        if with_labels:
+            b["labels"] = toks[:, :st]
+    else:
+        b = {"tokens": toks}
+        if with_labels:
+            b["labels"] = toks
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = smoke_config(arch)
+        params = init_params(api.model_meta(cfg), jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        batch = _batch(cfg, rng, with_labels=False)
+        logits, aux = api.forward(params, batch, cfg)
+        s_expect = S if cfg.frontend != "vision_stub" else S
+        assert logits.shape == (B, s_expect, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    def test_train_step_no_nans(self, arch):
+        cfg = smoke_config(arch)
+        params = init_params(api.model_meta(cfg), jax.random.PRNGKey(1))
+        opt = make_optimizer(OptimConfig(name="adamw", lr=1e-3))
+        opt_state = opt.init(params)
+        rng = np.random.default_rng(1)
+        batch = _batch(cfg, rng)
+        new_params, new_opt, metrics = api.train_step(
+            params, opt_state, batch, cfg, opt, sampling_weight=1.3
+        )
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert bool(jnp.isfinite(metrics["grad_norm"]))
+        # params actually moved
+        moved = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            params, new_params,
+        )
+        assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+    def test_decode_step_shapes(self, arch):
+        cfg = smoke_config(arch)
+        params = init_params(api.model_meta(cfg), jax.random.PRNGKey(2))
+        spec = api.init_cache(cfg, B, S)
+        cache = jax.tree_util.tree_map(
+            lambda s: jnp.full(s.shape, -1, s.dtype)
+            if (s.dtype == jnp.int32 and s.ndim == 1)
+            else jnp.zeros(s.shape, s.dtype),
+            spec,
+        )
+        if cfg.frontend == "audio_stub":
+            batch = {"embeds": jnp.zeros((B, 1, cfg.d_model), jnp.float32)}
+        else:
+            batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+        out, new_cache = api.serve_step(params, cache, batch, cfg)
+        assert out["logits"].shape == (B, cfg.vocab_size)
+        assert out["next_ids"].shape == (B,)
+        assert bool(jnp.all(jnp.isfinite(out["logits"].astype(jnp.float32))))
+        assert int(new_cache["pos"]) == 1
+
+    def test_full_config_abstract_params(self, arch):
+        """The FULL assigned config builds abstract params (no allocation)."""
+        cfg = get_config(arch)
+        n = param_count(api.model_meta(cfg))
+        expected_range = {
+            "internvl2_26b": (15e9, 30e9),     # backbone only (no ViT)
+            "starcoder2_7b": (6e9, 8e9),
+            "musicgen_medium": (1e9, 2.5e9),
+            "arctic_480b": (400e9, 520e9),
+            "qwen2_5_32b": (28e9, 36e9),
+            "mamba2_130m": (0.1e9, 0.2e9),
+            "qwen2_moe_a2_7b": (12e9, 17e9),   # total (2.7B active)
+            "yi_6b": (5e9, 7e9),
+            "granite_3_2b": (2e9, 3.5e9),
+            "zamba2_2_7b": (2e9, 3.5e9),
+        }[arch]
+        assert expected_range[0] < n < expected_range[1], f"{arch}: {n:,}"
+        abstract_params(api.model_meta(cfg))  # must not allocate/crash
+
+
+class TestEquivalences:
+    @pytest.mark.parametrize("arch", ["yi_6b", "mamba2_130m", "zamba2_2_7b", "qwen2_moe_a2_7b"])
+    def test_decode_matches_forward(self, arch):
+        cfg = smoke_config(arch)
+        if cfg.family == "moe":
+            # capacity drops are group-size dependent (prefill groups B*S
+            # tokens, decode groups B); ample capacity makes paths identical
+            cfg = cfg.replace(capacity_factor=16.0)
+        params = init_params(api.model_meta(cfg), jax.random.PRNGKey(3))
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 16)), jnp.int32)
+        full, _ = api.forward(params, {"tokens": toks}, cfg)
+        spec = api.init_cache(cfg, B, 16)
+        cache = jax.tree_util.tree_map(
+            lambda s: jnp.full(s.shape, -1, s.dtype)
+            if (s.dtype == jnp.int32 and s.ndim == 1)
+            else jnp.zeros(s.shape, s.dtype),
+            spec,
+        )
+        for t in range(16):
+            lg, cache = api.decode_step(params, cache, {"tokens": toks[:, t : t + 1]}, cfg)
+            np.testing.assert_allclose(lg, full[:, t], atol=2e-4)
+
+    def test_gqa_equals_mha_when_kv_equals_heads(self):
+        """GQA with K == H must equal standard MHA math."""
+        from repro.models.layers import _sdpa
+
+        cfg = smoke_config("yi_6b").replace(num_heads=4, num_kv_heads=4)
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(2, 8, 4, 16)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, 8, 4, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, 8, 4, 16)), jnp.float32)
+        mask = jnp.tril(jnp.ones((8, 8), bool))[None, None]
+        out = _sdpa(q, k, v, mask, cfg)
+        # manual MHA
+        sc = jnp.einsum("bshd,bthd->bhst", q, k) / 4.0
+        sc = jnp.where(mask, sc, -1e30)
+        ref = jnp.einsum("bhst,bthd->bshd", jax.nn.softmax(sc, -1), v)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_sliding_window_matches_full_for_short_seq(self):
+        """window >= S is a no-op."""
+        cfg = smoke_config("yi_6b")
+        params = init_params(api.model_meta(cfg), jax.random.PRNGKey(4))
+        rng = np.random.default_rng(4)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 16)), jnp.int32)
+        full, _ = api.forward(params, {"tokens": toks}, cfg.replace(sliding_window=0))
+        win, _ = api.forward(params, {"tokens": toks}, cfg.replace(sliding_window=999))
+        np.testing.assert_allclose(full, win, atol=1e-5)
+        narrow, _ = api.forward(params, {"tokens": toks}, cfg.replace(sliding_window=4))
+        assert float(jnp.max(jnp.abs(narrow - full))) > 1e-3  # window actually bites
+
+    def test_moe_routing_mass_conservation(self):
+        """Top-k gate weights are normalized per token."""
+        from repro.models.layers import _route_group
+        from repro.models.module import init_params as ip
+
+        cfg = smoke_config("qwen2_moe_a2_7b")
+        from repro.models.layers import moe_meta
+
+        params = ip(moe_meta(cfg), jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        xg = jnp.asarray(rng.normal(size=(64, cfg.d_model)), jnp.float32)
+        out, aux = _route_group(params, xg, cfg)
+        assert out.shape == xg.shape
+        assert float(aux) > 0.5  # load-balance loss ~ E * sum f*P >= 1 at uniform
+
+    def test_moe_sort_dispatch_equals_einsum(self):
+        """Beyond-paper sort-based dispatch is bit-compatible with GShard
+        one-hot dispatch (same token->slot priority & capacity drops)."""
+        from repro.models.layers import _route_group, _route_group_sorted, moe_meta
+        from repro.models.module import init_params as ip
+
+        for arch in ("qwen2_moe_a2_7b", "arctic_480b"):
+            cfg = smoke_config(arch)
+            params = ip(moe_meta(cfg), jax.random.PRNGKey(1))
+            rng = np.random.default_rng(7)
+            xg = jnp.asarray(rng.normal(size=(96, cfg.d_model)), jnp.float32)
+            o1, a1 = _route_group(params, xg, cfg)
+            o2, a2 = _route_group_sorted(params, xg, cfg)
+            np.testing.assert_allclose(o1, o2, atol=1e-5)
+            np.testing.assert_allclose(a1, a2, atol=1e-6)
+
+    def test_moe_full_model_sort_dispatch(self):
+        cfg = smoke_config("qwen2_moe_a2_7b").replace(moe_dispatch="sort")
+        params = init_params(api.model_meta(cfg), jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        loss, _ = api.loss_fn(params, {"tokens": toks, "labels": toks}, cfg)
+        assert bool(jnp.isfinite(loss))
+
+    def test_mamba_state_handoff(self):
+        """Chunked prefill then recurrent decode == one long chunked pass."""
+        from repro.models.mamba2 import ssd_chunked, ssd_recurrent_step
+
+        rng = np.random.default_rng(5)
+        Bz, S1, S2, H, P, N = 1, 32, 8, 2, 8, 8
+        S = S1 + S2
+        x = jnp.asarray(rng.normal(size=(Bz, S, H, P)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.3, (Bz, S, H)), jnp.float32)
+        A = -jnp.asarray(rng.uniform(0.5, 1.5, (H,)), jnp.float32)
+        Bm = jnp.asarray(rng.normal(size=(Bz, S, N)), jnp.float32)
+        Cm = jnp.asarray(rng.normal(size=(Bz, S, N)), jnp.float32)
+        y_all, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+        _, h = ssd_chunked(x[:, :S1], dt[:, :S1], A, Bm[:, :S1], Cm[:, :S1], chunk=8)
+        for t in range(S1, S):
+            y_t, h = ssd_recurrent_step(h, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+            np.testing.assert_allclose(y_t, y_all[:, t], atol=1e-4)

@@ -1,0 +1,74 @@
+"""Event-driven simulator invariants (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ClosedNetworkSim, SimConfig, simulate
+
+
+@st.composite
+def sim_configs(draw):
+    n = draw(st.integers(2, 8))
+    C = draw(st.integers(1, 12))
+    T = draw(st.integers(10, 300))
+    seed = draw(st.integers(0, 2**16))
+    service = draw(st.sampled_from(["exp", "det"]))
+    mu = np.array([draw(st.floats(0.2, 8.0)) for _ in range(n)])
+    praw = np.array([draw(st.floats(0.05, 1.0)) for _ in range(n)])
+    return SimConfig(mu=mu, p=praw / praw.sum(), C=C, T=T, service=service, seed=seed)
+
+
+class TestInvariants:
+    @given(cfg=sim_configs())
+    @settings(max_examples=40, deadline=None)
+    def test_task_conservation(self, cfg):
+        """Closed network: total in-flight tasks constant == C at every step."""
+        sim = ClosedNetworkSim(cfg)
+        assert sim.total_tasks() == cfg.C
+        for _ in range(min(cfg.T, 100)):
+            sim.step()
+            assert sim.total_tasks() == cfg.C
+
+    @given(cfg=sim_configs())
+    @settings(max_examples=20, deadline=None)
+    def test_time_monotone_and_delays_nonnegative(self, cfg):
+        res = simulate(cfg)
+        assert np.all(np.diff(res.t) >= 0)
+        for d in res.delays:
+            assert all(x >= 0 for x in d)
+
+    @given(cfg=sim_configs())
+    @settings(max_examples=20, deadline=None)
+    def test_completions_at_busy_nodes_only(self, cfg):
+        sim = ClosedNetworkSim(cfg)
+        for _ in range(min(cfg.T, 80)):
+            before = sim.queue_lengths()
+            j, k = sim.step()
+            assert before[j] >= 1  # can only complete where a task was queued
+
+    def test_deterministic_given_seed(self):
+        cfg = SimConfig(mu=np.array([1.0, 2.0]), p=np.array([0.5, 0.5]), C=3, T=500, seed=42)
+        r1, r2 = simulate(cfg), simulate(cfg)
+        np.testing.assert_array_equal(r1.J, r2.J)
+        np.testing.assert_array_equal(r1.K, r2.K)
+        np.testing.assert_array_equal(r1.t, r2.t)
+
+    def test_deterministic_service_faster_node_completes_more(self):
+        mu = np.array([4.0, 1.0])
+        res = simulate(SimConfig(mu=mu, p=np.array([0.5, 0.5]), C=2, T=5000, service="det", seed=0))
+        counts = np.bincount(res.J, minlength=2)
+        assert counts[0] > counts[1]
+
+    def test_routing_follows_p(self):
+        p = np.array([0.8, 0.2])
+        res = simulate(SimConfig(mu=np.array([1.0, 1.0]), p=p, C=4, T=20_000, seed=1))
+        frac = np.bincount(res.K, minlength=2) / res.K.size
+        np.testing.assert_allclose(frac, p, atol=0.02)
+
+    def test_exp_vs_det_same_mean_similar_delays(self):
+        """Paper: delay statistics barely depend on the service distribution."""
+        mu = np.array([2.0] * 3 + [1.0] * 3)
+        p = np.full(6, 1 / 6)
+        d_exp = simulate(SimConfig(mu=mu, p=p, C=12, T=60_000, service="exp", seed=0)).mean_delay_per_node()
+        d_det = simulate(SimConfig(mu=mu, p=p, C=12, T=60_000, service="det", seed=0)).mean_delay_per_node()
+        np.testing.assert_allclose(d_exp, d_det, rtol=0.25)

@@ -1,0 +1,72 @@
+"""Optimal-sampling layer: the paper's headline qualitative claims."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BoundConstants,
+    bound_for_p,
+    optimize_general,
+    optimize_two_cluster,
+    two_cluster_p_vector,
+)
+
+
+class TestTwoCluster:
+    def test_fast_clients_sampled_less(self):
+        """The counter-intuitive headline: p_fast* < 1/n < p_slow*."""
+        n, n_f = 100, 90
+        k = BoundConstants(A=100, L=1, B=20, C=10, T=10_000)
+        res = optimize_two_cluster(8.0, 1.0, n, n_f, k)
+        assert res.p[0] < 1.0 / n < res.p[-1]
+        assert res.relative_improvement > 0.1
+
+    def test_improvement_grows_with_speed_gap(self):
+        n, n_f = 100, 90
+        k = BoundConstants(A=100, L=1, B=20, C=10, T=10_000)
+        imps = [
+            optimize_two_cluster(mf, 1.0, n, n_f, k).relative_improvement
+            for mf in (2.0, 4.0, 16.0)
+        ]
+        assert imps[0] < imps[1] < imps[2]
+
+    def test_optimal_p_matches_paper_magnitude(self):
+        """Paper: p* ~ 7.3e-3 at mu_f=16 with n=100, n_f=90."""
+        k = BoundConstants(A=100, L=1, B=20, C=10, T=10_000)
+        res = optimize_two_cluster(16.0, 1.0, 100, 90, k)
+        assert 3e-3 < res.p[0] < 9.5e-3
+
+    def test_p_vector_simplex(self):
+        p = two_cluster_p_vector(10, 4, 0.05)
+        assert p.sum() == pytest.approx(1.0)
+        assert np.all(p > 0)
+        with pytest.raises(ValueError):
+            two_cluster_p_vector(10, 4, 0.3)  # 4 * 0.3 > 1
+
+    def test_optimum_beats_uniform_and_neighbors(self):
+        n, n_f = 50, 25
+        k = BoundConstants(C=10, T=5_000)
+        mu = np.array([4.0] * n_f + [1.0] * (n - n_f))
+        res = optimize_two_cluster(4.0, 1.0, n, n_f, k)
+        assert res.bound <= res.uniform_bound + 1e-9
+        for mult in (0.7, 1.3):
+            q = two_cluster_p_vector(n, n_f, float(res.p[0] * mult))
+            bq, _, _ = bound_for_p(mu, q, k)
+            assert res.bound <= bq * 1.02
+
+
+class TestGeneral:
+    def test_mirror_descent_beats_uniform_heterogeneous(self):
+        rng = np.random.default_rng(0)
+        n = 8
+        mu = rng.uniform(0.5, 8.0, n)
+        k = BoundConstants(C=6, T=2_000)
+        res = optimize_general(mu, k, iters=40)
+        assert res.bound <= res.uniform_bound * 1.001
+        assert res.p.sum() == pytest.approx(1.0)
+
+    def test_homogeneous_stays_uniform(self):
+        n = 6
+        mu = np.full(n, 2.0)
+        k = BoundConstants(C=4, T=2_000)
+        res = optimize_general(mu, k, iters=30)
+        np.testing.assert_allclose(res.p, 1.0 / n, atol=0.02)
