@@ -1,0 +1,281 @@
+"""Before-vs-after benchmark of the analytical/simulation control plane.
+
+Times the seed (pre-vectorization) implementations — embedded here verbatim
+so the comparison stays honest as the library evolves — against the current
+fast paths, and writes the results to ``BENCH_control_plane.json`` so the
+perf trajectory is tracked from this PR onward.
+
+    PYTHONPATH=src python benchmarks/control_plane.py [--quick] [--out PATH]
+
+Cases (full mode sizes):
+  buzen                n=256, C=64      pure-Python double loop vs lfilter
+  buzen_batch          B=64 thetas      per-vector loop vs one batched pass
+  mean_queue_lengths   n=256, C=64      per-node loop vs one matrix op
+  expected_delays      n=256, C=64      seed pipeline vs vectorized pipeline
+  optimize_general     n=256, C=64      one finite-difference mirror-descent
+                                        step (n+1 seed bound evals) vs one
+                                        analytic-gradient step
+  simulate             n=1000, T=200k   O(n)-per-event seed sim vs O(1) sim
+"""
+from __future__ import annotations
+
+import argparse
+import heapq
+import json
+import sys
+import time
+from collections import deque
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import (  # noqa: E402
+    BoundConstants,
+    JacksonNetwork,
+    SimConfig,
+    bound_value_and_grad,
+    buzen_normalizing_constants,
+    simulate_batch,
+)
+from repro.core.jackson import _buzen_reference  # noqa: E402
+from repro.core.theory import generalized_bound, optimal_eta  # noqa: E402
+
+
+# --------------------------------------------------------------------- #
+# seed ("before") implementations, frozen copies of the pre-PR code
+# --------------------------------------------------------------------- #
+def _seed_mean_queue_lengths(theta: np.ndarray, G: np.ndarray, N: int) -> np.ndarray:
+    out = np.zeros(theta.size)
+    for i in range(theta.size):
+        pows = np.cumprod(np.full(N, theta[i]))
+        out[i] = float(np.dot(pows, G[N - 1 :: -1][:N] / G[N]))
+    return out
+
+
+def _seed_expected_delays(mu: np.ndarray, p: np.ndarray, C: int) -> np.ndarray:
+    theta = p / mu
+    th = theta / theta.max()
+    G = _buzen_reference(th, C)
+    ql = _seed_mean_queue_lengths(th, G, C - 1)
+    s = float(theta.max())
+    lam = float(G[C - 1] / G[C] / s)
+    return lam * (ql + 1.0) / mu * (C - 1.0) / C
+
+
+def _seed_bound_for_p(mu: np.ndarray, p: np.ndarray, k: BoundConstants) -> float:
+    m = _seed_expected_delays(mu, p, k.C)
+    eta = optimal_eta(p, m, k)
+    return generalized_bound(eta, p, m, k)
+
+
+def _seed_fd_step(mu: np.ndarray, p: np.ndarray, k: BoundConstants) -> np.ndarray:
+    """One finite-difference gradient of the seed mirror-descent loop."""
+    n = p.size
+    g = np.zeros(n)
+    v0 = _seed_bound_for_p(mu, p, k)
+    h = 1e-4 / n
+    for i in range(n):
+        q = p.copy()
+        q[i] += h
+        q /= q.sum()
+        g[i] = (_seed_bound_for_p(mu, q, k) - v0) / h
+    return g
+
+
+class _SeedSim:
+    """The pre-PR simulator: O(n) deque scans + O(n) rng.choice per event."""
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.n = int(np.asarray(cfg.mu).size)
+        self.mu = np.asarray(cfg.mu, dtype=np.float64)
+        self.p = np.asarray(cfg.p, dtype=np.float64)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.now = 0.0
+        self.step_idx = 0
+        self.queues = [deque() for _ in range(self.n)]
+        self.heap: list[tuple[float, int, int]] = []
+        self._seq = 0
+        self._inservice_seq = [-1] * self.n
+        self.delays: list[list[int]] = [[] for _ in range(self.n)]
+        self.time_delays: list[list[float]] = [[] for _ in range(self.n)]
+        self.queue_len_sum = np.zeros(self.n)
+        self.queue_len_tw = np.zeros(self.n)
+        self._task_counter = 0
+        if cfg.C > self.n:
+            nodes = [i % self.n for i in range(cfg.C)]
+        else:
+            nodes = list(self.rng.choice(self.n, size=cfg.C, replace=False, p=None))
+        for nd in nodes:
+            self._enqueue(int(nd), 0)
+
+    def _service_time(self, node: int) -> float:
+        if self.cfg.service == "exp":
+            return float(self.rng.exponential(1.0 / self.mu[node]))
+        return float(1.0 / self.mu[node])
+
+    def _start_service(self, node: int) -> None:
+        self._seq += 1
+        self._inservice_seq[node] = self._seq
+        heapq.heappush(self.heap, (self.now + self._service_time(node), self._seq, node))
+
+    def _enqueue(self, node: int, dispatch_step: int) -> None:
+        self._task_counter += 1
+        self.queues[node].append((self._task_counter, dispatch_step, self.now))
+        if len(self.queues[node]) == 1:
+            self._start_service(node)
+
+    def queue_lengths(self) -> np.ndarray:
+        return np.array([len(q) for q in self.queues])
+
+    def step(self) -> tuple[int, int]:
+        while True:
+            t_done, seq, node = heapq.heappop(self.heap)
+            if self._inservice_seq[node] == seq:
+                break
+        self.queue_len_tw += self.queue_lengths() * (t_done - self.now)
+        self.now = t_done
+        tid, disp_step, disp_time = self.queues[node].popleft()
+        self.delays[node].append(self.step_idx - disp_step)
+        self.time_delays[node].append(self.now - disp_time)
+        if self.queues[node]:
+            self._start_service(node)
+        k_new = int(self.rng.choice(self.n, p=self.p))
+        self._enqueue(k_new, self.step_idx + 1)
+        self.queue_len_sum += self.queue_lengths()
+        self.step_idx += 1
+        return node, k_new
+
+
+# --------------------------------------------------------------------- #
+# harness
+# --------------------------------------------------------------------- #
+def _timeit(fn, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run(quick: bool) -> dict:
+    rng = np.random.default_rng(0)
+    results = []
+
+    def record(name, before_us, after_us, note=""):
+        entry = {
+            "name": name,
+            "before_us": round(before_us, 2),
+            "after_us": round(after_us, 2),
+            "speedup": round(before_us / after_us, 2),
+            "note": note,
+        }
+        results.append(entry)
+        print(f"{name:42s} {before_us/1e3:10.2f} ms -> {after_us/1e3:8.3f} ms   "
+              f"x{entry['speedup']:.1f}")
+
+    # --- buzen -------------------------------------------------------- #
+    n, C = (64, 16) if quick else (256, 64)
+    th = rng.uniform(0.05, 1.0, n)
+    th /= th.max()
+    record(
+        f"buzen(n={n},C={C})",
+        _timeit(lambda: _buzen_reference(th, C)),
+        _timeit(lambda: buzen_normalizing_constants(th, C)),
+    )
+
+    # --- batched buzen ------------------------------------------------ #
+    B = 16 if quick else 64
+    TH = rng.uniform(0.05, 1.0, (B, n))
+    TH /= TH.max(axis=1, keepdims=True)
+    record(
+        f"buzen_batch(B={B},n={n},C={C})",
+        _timeit(lambda: [_buzen_reference(TH[b], C) for b in range(B)]),
+        _timeit(lambda: buzen_normalizing_constants(TH, C)),
+        note="grid evaluation as used by optimize_two_cluster",
+    )
+
+    # --- mean queue lengths ------------------------------------------- #
+    p = rng.uniform(0.1, 1.0, n)
+    p /= p.sum()
+    net = JacksonNetwork(mu=np.ones(n), p=p, C=C)
+    G = net._G
+
+    def _mql_uncached():
+        net._ql_cache.clear()
+        return net.mean_queue_lengths()
+
+    record(
+        f"mean_queue_lengths(n={n},C={C})",
+        _timeit(lambda: _seed_mean_queue_lengths(net.theta, G, C)),
+        _timeit(_mql_uncached),
+        note="uncached; repeat reads hit the per-N memo",
+    )
+
+    # --- expected delays (full pipeline) ------------------------------ #
+    mu = rng.uniform(0.5, 8.0, n)
+    record(
+        f"expected_delays(n={n},C={C})",
+        _timeit(lambda: _seed_expected_delays(mu, p, C)),
+        _timeit(lambda: JacksonNetwork(mu=mu, p=p, C=C).expected_delays()),
+    )
+
+    # --- optimize_general: one optimizer step ------------------------- #
+    k = BoundConstants(A=100.0, L=1.0, B=20.0, C=C, T=10_000)
+    record(
+        f"optimize_general_step(n={n},C={C})",
+        _timeit(lambda: _seed_fd_step(mu, p, k), warmup=0, iters=1),
+        _timeit(lambda: bound_value_and_grad(mu, p, k)),
+        note="per mirror-descent step: (n+1) seed bound evals vs one analytic "
+        "value+gradient; whole-run speedup is this ratio at equal iters",
+    )
+
+    # --- simulate ------------------------------------------------------ #
+    ns, T = (200, 10_000) if quick else (1000, 200_000)
+    mu_s = rng.uniform(0.5, 4.0, ns)
+    p_s = rng.uniform(0.1, 1.0, ns)
+    p_s /= p_s.sum()
+    cfg = SimConfig(mu=mu_s, p=p_s, C=ns // 2, T=T, seed=0)
+
+    def run_seed_sim():
+        sim = _SeedSim(cfg)
+        for _ in range(T):
+            sim.step()
+
+    record(
+        f"simulate(n={ns},T={T})",
+        _timeit(run_seed_sim, warmup=0, iters=1),
+        _timeit(lambda: simulate_batch(cfg), warmup=0, iters=1),
+    )
+
+    return {
+        "bench": "control_plane",
+        "quick": quick,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "results": results,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small sizes (CI smoke)")
+    ap.add_argument(
+        "--out",
+        default=str(Path(__file__).resolve().parent.parent / "BENCH_control_plane.json"),
+        help="output JSON path",
+    )
+    args = ap.parse_args()
+    payload = run(args.quick)
+    Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

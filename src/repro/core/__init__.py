@@ -1,15 +1,21 @@
 """Core library: the paper's contribution (queueing analysis + Generalized AsyncSGD)."""
 from .jackson import (
     JacksonNetwork,
+    batched_expected_delays,
+    buzen_add_node,
     buzen_normalizing_constants,
+    buzen_remove_node,
+    buzen_replace_node,
     gamma_ratio,
     three_cluster_delay_bounds,
     two_cluster_delay_bounds,
 )
-from .queue_sim import ClosedNetworkSim, SimConfig, SimResult, simulate
+from .queue_sim import ClosedNetworkSim, SimConfig, SimResult, simulate, simulate_batch
 from .sampling import (
     SamplingResult,
     bound_for_p,
+    bound_for_p_batch,
+    bound_value_and_grad,
     optimize_general,
     optimize_physical_time,
     optimize_two_cluster,

@@ -19,6 +19,7 @@ Faithfulness notes
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Protocol
 
@@ -108,17 +109,17 @@ def run_generalized_async_sgd(
     w = w0
     mu_virtual = w0 if cfg.track_virtual else None
     # dispatch-time parameter snapshot per client FIFO queue (mirrors sim.queues)
-    snaps: list[list[Pytree]] = [[] for _ in range(cfg.n)]
-    for i, q in enumerate(sim.queues):
-        snaps[i] = [w0 for _ in q]  # S_0 tasks all carry w_0
+    snaps: list[deque] = [deque(w0 for _ in q) for q in sim.queues]
 
     times = np.zeros(cfg.T)
     steps = np.arange(cfg.T)
     trace = TraceRecord(steps=steps, times=times)
+    if cfg.track_virtual:
+        import jax
 
     for k in range(cfg.T):
-        j, k_new = sim.step()     # J_k completes; K_{k+1} sampled; task enqueued
-        w_disp = snaps[j].pop(0)  # FIFO: the completed task's dispatch params
+        j, k_new = sim.step()          # J_k completes; K_{k+1} sampled; task enqueued
+        w_disp = snaps[j].popleft()    # FIFO: the completed task's dispatch params
         g = source.grad(j, w_disp, k)
         if cfg.weighting == "importance":
             scale = cfg.eta / (cfg.n * p[j])
@@ -136,8 +137,6 @@ def run_generalized_async_sgd(
             g_virt = source.grad(k_new, w, k)
             mu_virtual = _axpy(mu_virtual, g_virt, -cfg.eta / (cfg.n * p[k_new]))
             gap = _tree_map(lambda a, b: float(np.sum((np.asarray(a) - np.asarray(b)) ** 2)), w, mu_virtual)
-            import jax
-
             trace.virtual_gap_sq.append(sum(jax.tree_util.tree_leaves(gap)))
             trace.inflight_cardinality.append(sim.total_tasks())
 
@@ -168,14 +167,14 @@ def run_fedbuff(
     )
     apply_update = cfg.apply_update or (lambda w, g, s: _axpy(w, g, -s))
     w = w0
-    snaps: list[list[Pytree]] = [[w0 for _ in q] for q in sim.queues]
+    snaps: list[deque] = [deque(w0 for _ in q) for q in sim.queues]
     buffer: list[Pytree] = []
     times = np.zeros(cfg.T)
     trace = TraceRecord(steps=np.arange(cfg.T), times=times)
     updates = 0
     for k in range(cfg.T):
         j, k_new = sim.step()
-        w_disp = snaps[j].pop(0)
+        w_disp = snaps[j].popleft()
         buffer.append(source.grad(j, w_disp, k))
         if len(buffer) >= Z:
             g_mean = buffer[0]

@@ -12,10 +12,22 @@ Everything here is exact, host-side math (numpy): the control plane of the
 training system.  All quantities are computed with Buzen's convolution
 algorithm, in a numerically-stable normalized form (thetas are rescaled by
 max(theta) which leaves pi_C invariant, paper §4 'Scaling regime').
+
+Performance notes
+-----------------
+``buzen_normalizing_constants`` accepts a batch of theta vectors (B, n) and
+convolves all of them at once; the 1-D path runs each node's geometric-series
+convolution as an O(C) C-level linear filter instead of a Python loop.
+``buzen_remove_node`` / ``buzen_add_node`` give O(C) single-node
+unconvolution / reconvolution, so perturbing one coordinate of ``p`` does not
+cost a full O(n*C) pass.  ``mean_queue_lengths`` is one (n, N) matrix
+operation (memoized per N), and ``expected_delays_vjp`` provides the exact
+vector-Jacobian product of the delay vector w.r.t. theta via the product-form
+identity  d log H_C / d theta_i = E_C[X_i] / theta_i,  which is what makes
+analytic simplex gradients in `repro.core.sampling` O(n*C) per step.
 """
 from __future__ import annotations
 
-import itertools
 import math
 from dataclasses import dataclass, field
 
@@ -24,35 +36,134 @@ import numpy as np
 __all__ = [
     "JacksonNetwork",
     "buzen_normalizing_constants",
+    "buzen_add_node",
+    "buzen_remove_node",
+    "buzen_replace_node",
+    "batched_expected_delays",
     "two_cluster_delay_bounds",
     "three_cluster_delay_bounds",
     "gamma_ratio",
 ]
 
+_lfilter = None
+
+
+def _get_lfilter():
+    global _lfilter
+    if _lfilter is None:
+        from scipy.signal import lfilter
+
+        _lfilter = lfilter
+    return _lfilter
+
+
+def _buzen_reference(theta: np.ndarray, C: int) -> np.ndarray:
+    """Seed implementation (pure-Python double loop) — kept as the oracle for
+    tests and before/after benchmarks."""
+    theta = np.asarray(theta, dtype=np.float64)
+    G = np.zeros(C + 1, dtype=np.float64)
+    G[0] = 1.0
+    for th in theta:
+        for c in range(1, C + 1):
+            G[c] = G[c] + th * G[c - 1]
+    return G
+
 
 def buzen_normalizing_constants(theta: np.ndarray, C: int) -> np.ndarray:
-    """Buzen's convolution algorithm.
+    """Buzen's convolution algorithm, scalar or batched.
 
-    Returns ``G`` with ``G[c] = H_c = sum_{x : sum x_i = c} prod theta_i^{x_i}``
-    for ``c = 0..C``.  Complexity O(n*C).
+    For ``theta`` of shape (n,), returns ``G`` with
+    ``G[c] = H_c = sum_{x : sum x_i = c} prod theta_i^{x_i}`` for ``c = 0..C``
+    (complexity O(n*C), executed as n O(C) linear filters at C speed).
+
+    For ``theta`` of shape (B, n) — a batch of B independent theta vectors —
+    returns (B, C+1), convolving the whole batch in vectorized sweeps.  This
+    is what lets `optimize_two_cluster` evaluate its entire coarse grid in
+    one call.
 
     For numerical stability the caller should pass *rescaled* thetas
     (``theta / theta.max()``); all ratios H_{c-1}/H_c etc. are invariant.
     """
     theta = np.asarray(theta, dtype=np.float64)
-    if theta.ndim != 1 or theta.size == 0:
-        raise ValueError("theta must be a non-empty 1-D array")
+    if theta.ndim not in (1, 2) or theta.size == 0:
+        raise ValueError("theta must be a non-empty 1-D or 2-D array")
     if np.any(theta <= 0):
         raise ValueError("theta must be strictly positive")
     if C < 0:
         raise ValueError("C must be >= 0")
-    G = np.zeros(C + 1, dtype=np.float64)
-    G[0] = 1.0
-    for th in theta:
-        # G_new[c] = G_old[c] + th * G_new[c-1]
+    if theta.ndim == 1:
+        lfilter = _get_lfilter()
+        G = np.zeros(C + 1, dtype=np.float64)
+        G[0] = 1.0
+        b = np.ones(1)
+        for th in theta:
+            # G_new[c] = G_old[c] + th * G_new[c-1]: an IIR filter along c.
+            G = lfilter(b, np.array([1.0, -th]), G)
+        return G
+    B, n = theta.shape
+    G = np.zeros((B, C + 1), dtype=np.float64)
+    G[:, 0] = 1.0
+    for i in range(n):
+        th = theta[:, i]
         for c in range(1, C + 1):
-            G[c] = G[c] + th * G[c - 1]
+            G[:, c] += th * G[:, c - 1]
     return G
+
+
+def buzen_remove_node(G: np.ndarray, th: float | np.ndarray) -> np.ndarray:
+    """O(C) unconvolution: normalizing constants of the network with one node
+    (traffic intensity ``th``) removed.
+
+    Inverts the Buzen recurrence ``G[c] = G_minus[c] + th * G[c-1]``; note the
+    right-hand side uses the *full* G, so this is a fully vectorized first
+    difference, not a sequential recurrence.  Works on (C+1,) or batched
+    (B, C+1) arrays (``th`` scalar or (B,)).
+
+    Numerical caveat: the subtraction cancels catastrophically when the
+    removed node *dominates* the network (H_c ≈ th * H_{c-1}, i.e. ``th``
+    near the rescaling maximum with everyone else far below).  That regime is
+    detectable — the true constants are strictly positive, cancellation
+    drives entries to ~0 or below — so we raise instead of returning garbage;
+    fall back to a full `buzen_normalizing_constants` pass in that case.
+    """
+    G = np.asarray(G, dtype=np.float64)
+    th_arr = np.asarray(th, dtype=np.float64)
+    if G.ndim == 2:
+        th_arr = th_arr.reshape(-1, 1)
+    out = np.empty_like(G)
+    out[..., 0] = G[..., 0]
+    out[..., 1:] = G[..., 1:] - th_arr * G[..., :-1]
+    if np.any(out <= 0):
+        raise FloatingPointError(
+            "buzen_remove_node lost all precision (removed node dominates the "
+            "network); recompute with buzen_normalizing_constants instead"
+        )
+    return out
+
+
+def buzen_add_node(G: np.ndarray, th: float | np.ndarray) -> np.ndarray:
+    """O(C) reconvolution: add a node with traffic intensity ``th``.
+
+    ``buzen_add_node(buzen_remove_node(G, t), t) == G`` up to roundoff.
+    """
+    G = np.asarray(G, dtype=np.float64)
+    if G.ndim == 1:
+        lfilter = _get_lfilter()
+        return lfilter(np.ones(1), np.array([1.0, -float(th)]), G)
+    th_arr = np.asarray(th, dtype=np.float64)
+    out = G.copy()
+    C = G.shape[-1] - 1
+    for c in range(1, C + 1):
+        out[..., c] += th_arr * out[..., c - 1]
+    return out
+
+
+def buzen_replace_node(
+    G: np.ndarray, th_old: float | np.ndarray, th_new: float | np.ndarray
+) -> np.ndarray:
+    """O(C) update of G after perturbing a single node's theta — the
+    incremental alternative to a full O(n*C) reconvolution."""
+    return buzen_add_node(buzen_remove_node(G, th_old), th_new)
 
 
 def gamma_ratio(F: int, c: float) -> float:
@@ -67,6 +178,49 @@ def gamma_ratio(F: int, c: float) -> float:
     if den == 0.0:
         return 1.0
     return float(num / den)
+
+
+def _tail_matrix(theta: np.ndarray, G: np.ndarray, N: int) -> np.ndarray:
+    """P[i, c-1] = P(X_i >= c) = theta_i^c H_{N-c} / H_N, c = 1..N  (n, N).
+
+    Scale-invariant: pass the rescaled thetas with their matching G.
+    """
+    n = theta.shape[0]
+    if N == 0:
+        return np.zeros((n, 0))
+    pows = np.cumprod(np.tile(theta[:, None], (1, N)), axis=1)
+    return pows * (G[N - 1 :: -1][:N] / G[N])
+
+
+def batched_expected_delays(
+    mu: np.ndarray, P: np.ndarray, C: int, normalized: bool = True
+) -> tuple[np.ndarray, np.ndarray]:
+    """Delay vectors m and throughputs for a batch of sampling vectors.
+
+    ``mu`` (n,) shared service rates; ``P`` (B, n) rows on the simplex.
+    Returns ``(m, lam)`` with shapes (B, n) and (B,).  One batched Buzen pass
+    plus one einsum — the whole coarse grid of `optimize_two_cluster` in a
+    single call.  Memory O(B*n*C).
+    """
+    mu = np.asarray(mu, dtype=np.float64)
+    P = np.asarray(P, dtype=np.float64)
+    theta = P / mu
+    s = theta.max(axis=1, keepdims=True)
+    th = theta / s
+    G = buzen_normalizing_constants(th, C)  # (B, C+1)
+    N = C - 1
+    B, n = th.shape
+    if N == 0:
+        q = np.zeros((B, n))
+    else:
+        pows = np.cumprod(np.repeat(th[:, :, None], N, axis=2), axis=2)
+        ratios = G[:, N - 1 :: -1][:, :N] / G[:, N][:, None]  # (B, N)
+        q = np.einsum("inc,ic->in", pows, ratios)
+    lam = G[:, C - 1] / G[:, C] / s[:, 0]
+    m = lam[:, None] * (q + 1.0) / mu
+    if normalized:
+        m = m * (C - 1.0) / C
+    return m, lam
 
 
 @dataclass
@@ -85,6 +239,8 @@ class JacksonNetwork:
     C: int
     _G: np.ndarray = field(init=False, repr=False)
     _theta: np.ndarray = field(init=False, repr=False)
+    _ql_cache: dict = field(init=False, repr=False, default_factory=dict)
+    _E: np.ndarray | None = field(init=False, repr=False, default=None)
 
     def __post_init__(self) -> None:
         self.mu = np.asarray(self.mu, dtype=np.float64)
@@ -136,13 +292,35 @@ class JacksonNetwork:
         """E[X_i] = sum_{c=1..N} P(X_i >= c), for a network with N tasks.
 
         ``ntasks=C-1`` gives the arrival-theorem view (Theorem 11 / MUSTA).
+        One (n, N) matrix-vector product, memoized per N.
         """
         N = self.C if ntasks is None else ntasks
-        out = np.zeros(self.n)
-        for i in range(self.n):
-            pows = np.cumprod(np.full(N, self._theta[i]))  # theta^1..theta^N
-            out[i] = float(np.dot(pows, self._G[N - 1 :: -1][:N] / self._G[N]))
-        return out
+        cached = self._ql_cache.get(N)
+        if cached is not None:
+            return cached.copy()
+        if N == 0:
+            out = np.zeros(self.n)
+        else:
+            pows = np.cumprod(np.tile(self._theta[:, None], (1, N)), axis=1)
+            out = pows @ (self._G[N - 1 :: -1][:N] / self._G[N])
+        self._ql_cache[N] = out
+        return out.copy()
+
+    def occupancy_matrix(self) -> np.ndarray:
+        """E[i, M] = E_M[X_i] for all populations M = 0..C, shape (n, C+1).
+
+        Built in O(n*C) by the MVA-style recurrence
+        ``E_M[X_i] = theta_i (H_{M-1}/H_M) (1 + E_{M-1}[X_i])`` and cached;
+        the gradient machinery reads every column.
+        """
+        if self._E is None:
+            E = np.zeros((self.n, self.C + 1))
+            ratio = self._G[:-1] / self._G[1:]  # H_{M-1}/H_M, M = 1..C
+            for M in range(1, self.C + 1):
+                E[:, M] = self._theta * ratio[M - 1] * (1.0 + E[:, M - 1])
+            E.setflags(write=False)  # shared cache: callers get a frozen view
+            self._E = E
+        return self._E
 
     def utilization(self, ntasks: int | None = None) -> np.ndarray:
         """rho_i = P(X_i > 0) = theta_i * H_{N-1}/H_N."""
@@ -205,6 +383,42 @@ class JacksonNetwork:
         if normalized:
             m = m * (self.C - 1.0) / self.C
         return m
+
+    def expected_delays_vjp(self, v: np.ndarray, normalized: bool = True) -> np.ndarray:
+        """Exact w_j = sum_i v_i * dm_i/dtheta_j, theta_j = p_j/mu_j unrescaled.
+
+        The full Jacobian dm/dtheta is n x n; the bound optimizer only ever
+        needs its action on a cotangent v, which this computes in O(n*C) from
+        the product-form identity  dH_N/dtheta_j = E_N[X_j] H_N / theta_j:
+
+            dLambda/dtheta_j = Lambda (E_{C-1}[X_j] - E_C[X_j]) / theta_j
+            dq_i/dtheta_j    = (1/theta_j) [ sum_c P_c(i)(E_{N-c}[X_j]
+                               - E_N[X_j]) + delta_ij sum_c c P_c(i) ]
+
+        with N = C-1, q_i = E^{C-1}[X_i], P_c(i) the tail probabilities, and
+        m_i = kappa * Lambda (q_i + 1)/mu_i.  All sums reduce to tail/
+        occupancy matrices that are invariant under the theta rescaling.
+        """
+        v = np.asarray(v, dtype=np.float64)
+        C = self.C
+        N = C - 1
+        theta_unres = self.p / self.mu
+        E = self.occupancy_matrix()
+        q = E[:, N]
+        lam = self.throughput()
+        u = v / self.mu
+        kappa = (C - 1.0) / C if normalized else 1.0
+        if N > 0:
+            Pm = _tail_matrix(self._theta, self._G, N)  # (n, N)
+            a = Pm.T @ u  # a_c = sum_i u_i P_c(i), c = 1..N
+            # term1_j = sum_c a_c E_{N-c}[X_j]: columns N-1..0 of E
+            term1 = E[:, N - 1 :: -1][:, :N] @ a
+            S = Pm @ np.arange(1, N + 1, dtype=np.float64)
+            vjp_q = (term1 - E[:, N] * float(u @ q) + u * S) / theta_unres
+        else:
+            vjp_q = np.zeros_like(u)
+        dlam = lam * (E[:, C - 1] - E[:, C]) / theta_unres
+        return kappa * (dlam * float(u @ (q + 1.0)) + lam * vjp_q)
 
     def delay_upper_bounds(self) -> np.ndarray:
         ql = self.mean_queue_lengths(ntasks=self.C - 1)

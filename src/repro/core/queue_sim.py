@@ -9,16 +9,38 @@ deterministic service times.
 This is the control-plane companion of `repro.fl.engine` (which attaches real
 gradient computations to these events) and the oracle used to validate
 `repro.core.jackson` closed forms.
+
+Performance notes
+-----------------
+A CS step is O(log n) amortized, independent of the number of clients:
+
+  * queue lengths are incremental counters, never recomputed from the deques;
+  * the occupancy accumulators (event-sampled sum and time-weighted integral
+    of X_i) use per-node "last changed at step/time" bookkeeping, so each
+    event touches only the two affected nodes; reads flush lazily via the
+    `queue_len_sum` / `queue_len_tw` properties;
+  * dispatch samples and exponential service variates are pre-drawn in
+    vectorized blocks (inverse-CDF via one `searchsorted` per block), so the
+    per-event RNG cost is O(1) instead of `rng.choice`'s O(n).
+
+The event stream is deterministic given (seed, block size); it differs from
+the seed implementation's stream (which drew variates one at a time) but has
+identical law.
 """
 from __future__ import annotations
 
 import heapq
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
-__all__ = ["SimConfig", "SimResult", "ClosedNetworkSim", "simulate"]
+__all__ = ["SimConfig", "SimResult", "ClosedNetworkSim", "simulate", "simulate_batch"]
+
+#: shared RNG pre-draw block size — every entry point uses the same default so
+#: `simulate(cfg)`, `simulate_batch(cfg)` and `ClosedNetworkSim(cfg).run(T)`
+#: produce the identical event stream for the same seed
+DEFAULT_BLOCK = 4096
 
 
 @dataclass
@@ -65,9 +87,13 @@ class SimResult:
 
 
 class ClosedNetworkSim:
-    """Stepable simulator (used by repro.fl.engine to drive real training)."""
+    """Stepable simulator (used by repro.fl.engine to drive real training).
 
-    def __init__(self, cfg: SimConfig):
+    ``block`` sets the RNG pre-draw block size; it changes the (deterministic)
+    event stream but not its law.
+    """
+
+    def __init__(self, cfg: SimConfig, block: int = DEFAULT_BLOCK):
         self.cfg = cfg
         self.n = int(np.asarray(cfg.mu).size)
         self.mu = np.asarray(cfg.mu, dtype=np.float64)
@@ -76,6 +102,8 @@ class ClosedNetworkSim:
             raise ValueError("p must sum to 1")
         if cfg.C < 1:
             raise ValueError("C >= 1 required")
+        if cfg.service not in ("exp", "det"):
+            raise ValueError(f"unknown service kind {cfg.service}")
         self.rng = np.random.default_rng(cfg.seed)
         self.now = 0.0
         self.step_idx = 0
@@ -88,18 +116,63 @@ class ClosedNetworkSim:
         self._inservice_seq = [-1] * self.n
         self.delays: list[list[int]] = [[] for _ in range(self.n)]
         self.time_delays: list[list[float]] = [[] for _ in range(self.n)]
-        self.queue_len_sum = np.zeros(self.n)
-        self.queue_len_tw = np.zeros(self.n)
+        # incremental queue-length counters + lazily-flushed accumulators
+        # (python lists: O(1) scalar access is much faster than numpy indexing)
+        self._qlen = [0] * self.n
+        self._qsum = [0] * self.n          # flushed part of sum_k X_{i,k}
+        self._last_snap = [1] * self.n     # 1-indexed step of last change
+        self._tw = [0.0] * self.n          # flushed part of int X_i(t) dt
+        self._last_t = [0.0] * self.n      # time of last change
+        self._inv_mu = (1.0 / self.mu).tolist()
+        self._is_exp = cfg.service == "exp"
+        # block-buffered variates
+        self._block = int(block)
+        cdf = np.cumsum(self.p)
+        cdf[-1] = max(cdf[-1], 1.0)  # guard fp undershoot at the tail
+        self._cdf = cdf
+        self._disp_buf: list[int] = []
+        self._disp_ptr = 0
+        self._exp_buf: list[float] = []
+        self._exp_ptr = 0
         self._task_counter = 0
         self._init_tasks()
 
     # -------------------------------------------------------------- #
+    def _refill_disp(self) -> None:
+        u = self.rng.random(self._block)
+        self._disp_buf = np.minimum(
+            np.searchsorted(self._cdf, u, side="right"), self.n - 1
+        ).tolist()
+        self._disp_ptr = 0
+
+    def _refill_exp(self) -> None:
+        self._exp_buf = self.rng.standard_exponential(self._block).tolist()
+        self._exp_ptr = 0
+
     def _service_time(self, node: int) -> float:
-        if self.cfg.service == "exp":
-            return float(self.rng.exponential(1.0 / self.mu[node]))
-        if self.cfg.service == "det":
-            return float(1.0 / self.mu[node])
-        raise ValueError(f"unknown service kind {self.cfg.service}")
+        if self._is_exp:
+            i = self._exp_ptr
+            if i >= len(self._exp_buf):
+                self._refill_exp()
+                i = 0
+            self._exp_ptr = i + 1
+            return self._exp_buf[i] * self._inv_mu[node]
+        return self._inv_mu[node]
+
+    def _change(self, node: int, delta: int) -> None:
+        """Update node's queue length; settle its accumulators up to now.
+
+        The post-step states X_{i,k} are counted once per step k=1..T and the
+        time integral carries the pre-change state over (last_t, now]; both
+        only need attention at the (two) nodes an event touches.
+        """
+        k = self.step_idx + 1
+        ql = self._qlen[node]
+        self._qsum[node] += ql * (k - self._last_snap[node])
+        self._last_snap[node] = k
+        self._tw[node] += ql * (self.now - self._last_t[node])
+        self._last_t[node] = self.now
+        self._qlen[node] = ql + delta
 
     def _start_service(self, node: int) -> None:
         self._seq += 1
@@ -110,6 +183,7 @@ class ClosedNetworkSim:
         tid = self._task_counter
         self._task_counter += 1
         self.queues[node].append((tid, dispatch_step, self.now))
+        self._change(node, +1)
         if len(self.queues[node]) == 1:
             self._start_service(node)
         return tid
@@ -133,43 +207,77 @@ class ClosedNetworkSim:
 
     # -------------------------------------------------------------- #
     def total_tasks(self) -> int:
-        return sum(len(q) for q in self.queues)
+        return sum(self._qlen)
 
     def queue_lengths(self) -> np.ndarray:
-        return np.array([len(q) for q in self.queues])
+        return np.array(self._qlen)
+
+    @property
+    def queue_len_sum(self) -> np.ndarray:
+        """sum_{k=1..step_idx} X_{i,k} (post-step states), flushed on read."""
+        q = np.array(self._qlen, dtype=np.float64)
+        pending = q * (self.step_idx + 1 - np.array(self._last_snap))
+        return np.array(self._qsum, dtype=np.float64) + pending
+
+    @property
+    def queue_len_tw(self) -> np.ndarray:
+        """int_0^now X_i(t) dt, flushed on read."""
+        q = np.array(self._qlen, dtype=np.float64)
+        pending = q * (self.now - np.array(self._last_t))
+        return np.array(self._tw, dtype=np.float64) + pending
 
     def step(self) -> tuple[int, int]:
         """Advance one CS step.  Returns (J_k, K_{k+1})."""
         # pop next *valid* completion event
+        heap = self.heap
+        inservice = self._inservice_seq
         while True:
-            t_done, seq, node = heapq.heappop(self.heap)
-            if self._inservice_seq[node] == seq:
+            t_done, seq, node = heapq.heappop(heap)
+            if inservice[node] == seq:
                 break
-        # time-weighted occupancy over (self.now, t_done] — state unchanged there
-        self.queue_len_tw += self.queue_lengths() * (t_done - self.now)
         self.now = t_done
-        tid, disp_step, disp_time = self.queues[node].popleft()
+        q = self.queues[node]
+        tid, disp_step, disp_time = q.popleft()
         # delay in CS steps: completions strictly between dispatch and this one
         self.delays[node].append(self.step_idx - disp_step)
-        self.time_delays[node].append(self.now - disp_time)
-        if self.queues[node]:
+        self.time_delays[node].append(t_done - disp_time)
+        self._change(node, -1)
+        if q:
             self._start_service(node)
-        # dispatcher samples the next client
-        k_new = int(self.rng.choice(self.n, p=self.p))
+        # dispatcher samples the next client from the pre-drawn block
+        i = self._disp_ptr
+        if i >= len(self._disp_buf):
+            self._refill_disp()
+            i = 0
+        self._disp_ptr = i + 1
+        k_new = self._disp_buf[i]
         self._enqueue(k_new, dispatch_step=self.step_idx + 1)
-        self.queue_len_sum += self.queue_lengths()
         self.step_idx += 1
         return node, k_new
 
+    def run(self, T: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Advance T steps, returning the (J, K, t) trace arrays."""
+        step = self.step
+        Jl: list[int] = []
+        Kl: list[int] = []
+        tl: list[float] = []
+        append_J, append_K, append_t = Jl.append, Kl.append, tl.append
+        for _ in range(T):
+            j, k_new = step()
+            append_J(j)
+            append_K(k_new)
+            append_t(self.now)
+        return (
+            np.array(Jl, dtype=np.int32),
+            np.array(Kl, dtype=np.int32),
+            np.array(tl, dtype=np.float64),
+        )
 
-def simulate(cfg: SimConfig) -> SimResult:
-    sim = ClosedNetworkSim(cfg)
-    J = np.zeros(cfg.T, dtype=np.int32)
-    K = np.zeros(cfg.T, dtype=np.int32)
-    t = np.zeros(cfg.T, dtype=np.float64)
-    for k in range(cfg.T):
-        j, knew = sim.step()
-        J[k], K[k], t[k] = j, knew, sim.now
+
+def simulate_batch(cfg: SimConfig, block: int = DEFAULT_BLOCK) -> SimResult:
+    """Fast-path simulation: pre-drawn RNG blocks + the O(1)-per-event core."""
+    sim = ClosedNetworkSim(cfg, block=block)
+    J, K, t = sim.run(cfg.T)
     return SimResult(
         J=J,
         K=K,
@@ -181,3 +289,7 @@ def simulate(cfg: SimConfig) -> SimResult:
         queue_len_last=sim.queue_lengths(),
         steps=cfg.T,
     )
+
+
+def simulate(cfg: SimConfig) -> SimResult:
+    return simulate_batch(cfg)

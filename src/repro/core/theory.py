@@ -17,6 +17,7 @@ import numpy as np
 __all__ = [
     "BoundConstants",
     "eta_max",
+    "eta_max_components",
     "generalized_bound",
     "optimal_eta",
     "fedbuff_bound",
@@ -41,12 +42,17 @@ class BoundConstants:
     rho: float = 0.0  # strong-growth constant (App. C.2); 0 = plain A3
 
 
-def eta_max(p: np.ndarray, m: np.ndarray, k: BoundConstants) -> float:
-    """Theorem 1 step-size cap.
+def eta_max_components(
+    p: np.ndarray, m: np.ndarray, k: BoundConstants
+) -> tuple[float, float]:
+    """The two branches (a, b) of the Theorem 1 cap, eta_max = min(a, b).
 
-    eta_max = 1/(4L) * min( C^{-1/2} (max_k m_k^T)^{-1/2},
-                            2 / sum_i 1/(n^2 p_i) )
-    with m_k^T ~ stationary  m_k = sum_i m_i / (n^2 p_i^2).
+    a = (16 L^2 C m_k growth)^{-1/2} with m_k = sum_i m_i/(n^2 p_i^2),
+    b = n^2 / (8 L growth sum_i 1/p_i).
+
+    Exposed separately so the analytic gradient (sampling.bound_value_and_grad)
+    can differentiate the *active* branch from the same formulas the objective
+    uses — keep both call sites in sync through this single definition.
     """
     p = np.asarray(p, dtype=np.float64)
     m = np.asarray(m, dtype=np.float64)
@@ -55,7 +61,17 @@ def eta_max(p: np.ndarray, m: np.ndarray, k: BoundConstants) -> float:
     growth = 1.0 + k.rho**2
     a = 1.0 / np.sqrt(16.0 * k.L**2 * k.C * m_k * growth)
     b = n**2 / (8.0 * k.L * growth * np.sum(1.0 / p))
-    return float(min(a, b))
+    return float(a), float(b)
+
+
+def eta_max(p: np.ndarray, m: np.ndarray, k: BoundConstants) -> float:
+    """Theorem 1 step-size cap.
+
+    eta_max = 1/(4L) * min( C^{-1/2} (max_k m_k^T)^{-1/2},
+                            2 / sum_i 1/(n^2 p_i) )
+    with m_k^T ~ stationary  m_k = sum_i m_i / (n^2 p_i^2).
+    """
+    return min(eta_max_components(p, m, k))
 
 
 def generalized_bound(

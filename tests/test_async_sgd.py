@@ -51,13 +51,22 @@ class TestAlgorithmOne:
         np.testing.assert_allclose(w, prob.optimum(), atol=0.2)
 
     def test_converges_with_nonuniform_sampling(self):
-        """Importance weighting keeps the fixed point unbiased for ANY p."""
+        """Importance weighting keeps the fixed point unbiased for ANY p.
+
+        Constant-step async SGD fluctuates around the fixed point, so the
+        endpoint depends on the event-stream realization; average the tail
+        iterates to test the fixed point itself."""
         n = 8
         prob = Quadratic(n, seed=3)
         p = np.array([0.4, 0.2, 0.1, 0.1, 0.05, 0.05, 0.05, 0.05])
-        cfg = ServerConfig(n=n, C=4, T=20_000, eta=0.02, p=p, seed=1)
-        w, _ = run_generalized_async_sgd(np.zeros(prob.d), prob, cfg)
-        np.testing.assert_allclose(w, prob.optimum(), atol=0.25)
+        iterates = []
+        cfg = ServerConfig(n=n, C=4, T=20_000, eta=0.02, p=p, seed=1, eval_every=100)
+        run_generalized_async_sgd(
+            np.zeros(prob.d), prob, cfg,
+            eval_fn=lambda w: iterates.append(np.array(w)) or 0.0,
+        )
+        w_tail = np.mean(iterates[len(iterates) // 2 :], axis=0)
+        np.testing.assert_allclose(w_tail, prob.optimum(), atol=0.25)
 
     def test_plain_weighting_biased_under_nonuniform(self):
         """Without the 1/(n p_j) factor, non-uniform sampling shifts the
@@ -122,9 +131,14 @@ class TestBaselines:
     def test_fedbuff_converges(self):
         n = 8
         prob = Quadratic(n)
-        cfg = ServerConfig(n=n, C=4, T=10_000, eta=0.05, seed=0)
-        w, _ = run_fedbuff(np.zeros(prob.d), prob, cfg, Z=5)
-        np.testing.assert_allclose(w, prob.optimum(), atol=0.12)
+        iterates = []
+        cfg = ServerConfig(n=n, C=4, T=10_000, eta=0.05, seed=0, eval_every=100)
+        run_fedbuff(
+            np.zeros(prob.d), prob, cfg, Z=5,
+            eval_fn=lambda w: iterates.append(np.array(w)) or 0.0,
+        )
+        w_tail = np.mean(iterates[len(iterates) // 2 :], axis=0)
+        np.testing.assert_allclose(w_tail, prob.optimum(), atol=0.12)
 
     def test_favano_converges(self):
         from repro.core import run_favano

@@ -1,0 +1,287 @@
+"""Vectorized control plane: new fast paths vs seed scalar semantics.
+
+Covers the PR's acceptance invariants without optional dependencies:
+  * batched / lfilter Buzen == pure-Python seed Buzen (<= 1e-10 relative),
+  * O(C) single-node unconvolution/reconvolution round-trips,
+  * vectorized mean_queue_lengths == seed per-node loop,
+  * analytic simplex gradient == finite differences (both eta regimes),
+  * the exact Little's-law identity sum_i p_i m_i = C - 1,
+  * incremental simulator accumulators == O(n) shadow recomputation on
+    identical seeds.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BoundConstants,
+    ClosedNetworkSim,
+    JacksonNetwork,
+    SimConfig,
+    batched_expected_delays,
+    bound_for_p,
+    bound_for_p_batch,
+    bound_value_and_grad,
+    buzen_add_node,
+    buzen_normalizing_constants,
+    buzen_remove_node,
+    buzen_replace_node,
+    optimize_general,
+    simulate,
+    simulate_batch,
+)
+from repro.core.jackson import _buzen_reference
+
+
+def _random_simplex(rng, n):
+    p = rng.uniform(0.1, 1.0, n)
+    return p / p.sum()
+
+
+class TestBuzenFastPaths:
+    def test_scalar_matches_seed_reference(self):
+        rng = np.random.default_rng(0)
+        for n, C in [(3, 4), (20, 15), (100, 40)]:
+            th = rng.uniform(0.05, 1.0, n)
+            th /= th.max()
+            G = buzen_normalizing_constants(th, C)
+            G0 = _buzen_reference(th, C)
+            np.testing.assert_allclose(G, G0, rtol=1e-10)
+
+    def test_batched_matches_scalar(self):
+        rng = np.random.default_rng(1)
+        B, n, C = 9, 40, 25
+        TH = rng.uniform(0.05, 1.0, (B, n))
+        TH /= TH.max(axis=1, keepdims=True)
+        GB = buzen_normalizing_constants(TH, C)
+        assert GB.shape == (B, C + 1)
+        for b in range(B):
+            np.testing.assert_allclose(
+                GB[b], buzen_normalizing_constants(TH[b], C), rtol=1e-10
+            )
+
+    def test_unconvolve_matches_smaller_network(self):
+        rng = np.random.default_rng(2)
+        th = rng.uniform(0.1, 1.0, 12)
+        C = 10
+        G = buzen_normalizing_constants(th, C)
+        for i in (0, 5, 11):
+            G_minus = buzen_remove_node(G, th[i])
+            G_direct = buzen_normalizing_constants(np.delete(th, i), C)
+            np.testing.assert_allclose(G_minus, G_direct, rtol=1e-10)
+
+    def test_reconvolve_roundtrip_and_replace(self):
+        rng = np.random.default_rng(3)
+        th = rng.uniform(0.1, 1.0, 15)
+        C = 12
+        G = buzen_normalizing_constants(th, C)
+        np.testing.assert_allclose(
+            buzen_add_node(buzen_remove_node(G, th[4]), th[4]), G, rtol=1e-10
+        )
+        G_rep = buzen_replace_node(G, th[4], 0.63)
+        th2 = th.copy()
+        th2[4] = 0.63
+        np.testing.assert_allclose(
+            G_rep, buzen_normalizing_constants(th2, C), rtol=1e-10
+        )
+
+    def test_unconvolve_dominant_node_raises_instead_of_garbage(self):
+        """Removing the dominant node cancels catastrophically; the primitive
+        must refuse rather than silently return wrong constants."""
+        th = np.full(64, 0.02)
+        th[0] = 1.0
+        G = buzen_normalizing_constants(th, 64)
+        with pytest.raises(FloatingPointError):
+            buzen_remove_node(G, th[0])
+
+    def test_input_validation(self):
+        with pytest.raises(ValueError):
+            buzen_normalizing_constants(np.array([0.5, -1.0]), 3)
+        with pytest.raises(ValueError):
+            buzen_normalizing_constants(np.zeros((2, 2, 2)) + 0.5, 3)
+        with pytest.raises(ValueError):
+            buzen_normalizing_constants(np.array([0.5]), -1)
+
+
+class TestVectorizedQueueLengths:
+    def _mql_seed_loop(self, net, N):
+        out = np.zeros(net.n)
+        for i in range(net.n):
+            pows = np.cumprod(np.full(N, net.theta[i]))
+            out[i] = float(np.dot(pows, net._G[N - 1 :: -1][:N] / net._G[N]))
+        return out
+
+    def test_matches_seed_loop(self):
+        rng = np.random.default_rng(4)
+        for n, C in [(4, 3), (12, 20), (50, 8)]:
+            net = JacksonNetwork(
+                mu=rng.uniform(0.5, 5.0, n), p=_random_simplex(rng, n), C=C
+            )
+            for N in (C, C - 1):
+                np.testing.assert_allclose(
+                    net.mean_queue_lengths(ntasks=N),
+                    self._mql_seed_loop(net, N),
+                    rtol=1e-10,
+                )
+
+    def test_occupancy_matrix_consistent(self):
+        rng = np.random.default_rng(5)
+        net = JacksonNetwork(mu=rng.uniform(0.5, 5.0, 7), p=_random_simplex(rng, 7), C=9)
+        E = net.occupancy_matrix()
+        assert E.shape == (7, 10)
+        for N in range(10):
+            np.testing.assert_allclose(
+                E[:, N], net.mean_queue_lengths(ntasks=N), rtol=1e-8, atol=1e-12
+            )
+        # population constraint at every column
+        np.testing.assert_allclose(E.sum(axis=0), np.arange(10), rtol=1e-9)
+
+    def test_littles_law_identity(self):
+        """sum_i p_i m_i = C - 1 exactly (normalized), = C exactly (raw)."""
+        rng = np.random.default_rng(6)
+        for n, C in [(5, 2), (10, 8), (30, 12)]:
+            mu = rng.uniform(0.5, 5.0, n)
+            p = _random_simplex(rng, n)
+            net = JacksonNetwork(mu=mu, p=p, C=C)
+            assert float(p @ net.expected_delays()) == pytest.approx(C - 1, abs=1e-10)
+            assert float(p @ net.expected_delays(normalized=False)) == pytest.approx(
+                C, abs=1e-10
+            )
+
+    def test_batched_delays_match_scalar(self):
+        rng = np.random.default_rng(7)
+        n, C = 16, 11
+        mu = rng.uniform(0.5, 5.0, n)
+        P = np.stack([_random_simplex(rng, n) for _ in range(6)])
+        m_b, lam_b = batched_expected_delays(mu, P, C)
+        for b in range(6):
+            net = JacksonNetwork(mu=mu, p=P[b], C=C)
+            np.testing.assert_allclose(m_b[b], net.expected_delays(), rtol=1e-10)
+            assert lam_b[b] == pytest.approx(net.throughput(), rel=1e-10)
+
+
+class TestAnalyticGradient:
+    def _fd_projected(self, mu, p, k, h=1e-7):
+        """Central difference of f(q/sum q) — the simplex-projected gradient."""
+        fd = np.zeros(p.size)
+        for i in range(p.size):
+            qp = p.copy()
+            qp[i] += h
+            qm = p.copy()
+            qm[i] -= h
+            fd[i] = (
+                bound_for_p(mu, qp / qp.sum(), k)[0]
+                - bound_for_p(mu, qm / qm.sum(), k)[0]
+            ) / (2 * h)
+        return fd
+
+    def test_matches_finite_difference_interior_eta(self):
+        rng = np.random.default_rng(8)
+        mu = rng.uniform(0.5, 8.0, 8)
+        p = _random_simplex(rng, 8)
+        k = BoundConstants(A=100, L=1, B=20, C=6, T=2_000)
+        _, _, _, g = bound_value_and_grad(mu, p, k)
+        g_proj = g - float(g @ p)
+        fd = self._fd_projected(mu, p, k)
+        np.testing.assert_allclose(g_proj, fd, rtol=1e-5, atol=1e-8 * np.abs(fd).max())
+
+    def test_matches_finite_difference_capped_eta(self):
+        """When eta* sits on the eta_max cap the d eta_max/dp term kicks in."""
+        from repro.core import eta_max, optimal_eta
+
+        rng = np.random.default_rng(9)
+        mu = rng.uniform(0.5, 8.0, 8)
+        p = _random_simplex(rng, 8)
+        k = BoundConstants(A=1e7, L=1, B=20, C=6, T=50)
+        _, eta, m, g = bound_value_and_grad(mu, p, k)
+        assert eta == pytest.approx(eta_max(p, m, k))  # cap really active
+        g_proj = g - float(g @ p)
+        fd = self._fd_projected(mu, p, k)
+        np.testing.assert_allclose(g_proj, fd, rtol=1e-5, atol=1e-8 * np.abs(fd).max())
+
+    def test_batched_bound_matches_scalar(self):
+        rng = np.random.default_rng(10)
+        n = 12
+        mu = rng.uniform(0.5, 6.0, n)
+        k = BoundConstants(C=5, T=3_000)
+        P = np.stack([_random_simplex(rng, n) for _ in range(5)])
+        vals, etas, ms = bound_for_p_batch(mu, P, k)
+        for b in range(5):
+            v0, e0, m0 = bound_for_p(mu, P[b], k)
+            assert vals[b] == pytest.approx(v0, rel=1e-10)
+            assert etas[b] == pytest.approx(e0, rel=1e-10)
+            np.testing.assert_allclose(ms[b], m0, rtol=1e-10)
+
+    def test_analytic_optimizer_not_worse_than_fd(self):
+        rng = np.random.default_rng(11)
+        mu = rng.uniform(0.5, 8.0, 8)
+        k = BoundConstants(C=6, T=2_000)
+        res_an = optimize_general(mu, k, iters=40)
+        res_fd = optimize_general(mu, k, iters=40, method="fd")
+        assert res_an.bound <= res_fd.bound * 1.02
+        assert res_an.bound <= res_an.uniform_bound + 1e-12
+
+
+class TestIncrementalSimulator:
+    @pytest.mark.parametrize("service", ["exp", "det"])
+    def test_accumulators_match_shadow_recompute(self, service):
+        """New O(1) counters == the seed O(n)-per-step recomputation, same seed."""
+        cfg = SimConfig(
+            mu=np.array([1.0, 2.0, 0.5, 3.0, 1.5]),
+            p=np.array([0.3, 0.25, 0.2, 0.15, 0.1]),
+            C=6,
+            T=3_000,
+            service=service,
+            seed=13,
+        )
+        sim = ClosedNetworkSim(cfg)
+        shadow_sum = np.zeros(sim.n)
+        shadow_tw = np.zeros(sim.n)
+        for _ in range(cfg.T):
+            q_pre = sim.queue_lengths()
+            t_pre = sim.now
+            sim.step()
+            shadow_tw += q_pre * (sim.now - t_pre)
+            shadow_sum += sim.queue_lengths()
+        np.testing.assert_allclose(sim.queue_len_sum, shadow_sum, rtol=1e-10)
+        np.testing.assert_allclose(sim.queue_len_tw, shadow_tw, rtol=1e-10)
+
+    def test_mid_run_reads_are_consistent(self):
+        """The lazy flush must be transparent to interleaved reads."""
+        cfg = SimConfig(
+            mu=np.array([1.0, 0.7, 2.0]), p=np.array([0.5, 0.3, 0.2]), C=4, T=200, seed=1
+        )
+        sim = ClosedNetworkSim(cfg)
+        shadow_sum = np.zeros(sim.n)
+        for k in range(cfg.T):
+            sim.step()
+            shadow_sum += sim.queue_lengths()
+            if k % 17 == 0:  # interleaved reads must not disturb the counters
+                np.testing.assert_allclose(sim.queue_len_sum, shadow_sum, rtol=1e-12)
+                assert sim.total_tasks() == cfg.C
+        np.testing.assert_allclose(sim.queue_len_sum, shadow_sum, rtol=1e-12)
+
+    def test_simulate_batch_deterministic_and_equivalent(self):
+        cfg = SimConfig(
+            mu=np.array([1.0, 2.0]), p=np.array([0.6, 0.4]), C=3, T=2_000, seed=42
+        )
+        r1 = simulate_batch(cfg, block=512)
+        r2 = simulate_batch(cfg, block=512)
+        np.testing.assert_array_equal(r1.J, r2.J)
+        np.testing.assert_array_equal(r1.t, r2.t)
+        # block size changes the realization, not the law: invariants hold
+        r3 = simulate_batch(cfg, block=64)
+        assert r3.queue_len_last.sum() == cfg.C
+        assert np.all(np.diff(r3.t) >= 0)
+
+    def test_stationary_laws_still_hold(self):
+        """End-to-end: the rewritten simulator still matches the closed forms."""
+        mu = np.array([1.0, 2.0, 0.5])
+        p = np.array([0.3, 0.3, 0.4])
+        net = JacksonNetwork(mu=mu, p=p, C=4)
+        res = simulate(SimConfig(mu=mu, p=p, C=4, T=120_000, seed=3))
+        np.testing.assert_allclose(
+            res.time_avg_queue_lengths(), net.mean_queue_lengths(), rtol=0.05
+        )
+        assert res.throughput() == pytest.approx(net.throughput(), rel=0.03)
+        all_delays = np.concatenate([np.asarray(d) for d in res.delays])
+        assert np.mean(all_delays) == pytest.approx(net.C - 1, rel=0.03)

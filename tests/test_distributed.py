@@ -4,6 +4,8 @@ Device-count-dependent tests run in a subprocess so the main pytest process
 keeps its single CPU device (per the dry-run isolation requirement).
 """
 import json
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
@@ -125,12 +127,13 @@ _SUBPROC_SNIPPET = textwrap.dedent(
 
 class TestSmallMeshLowering:
     def test_smoke_archs_lower_on_2x4_mesh(self):
+        repo_root = str(pathlib.Path(__file__).resolve().parent.parent)
         res = subprocess.run(
             [sys.executable, "-c", _SUBPROC_SNIPPET],
             capture_output=True, text=True, timeout=600,
             env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                 "HOME": "/root"},
-            cwd="/root/repo",
+                 "HOME": os.environ.get("HOME", "/root")},
+            cwd=repo_root,
         )
         assert res.returncode == 0, res.stderr[-3000:]
         out = json.loads(res.stdout.strip().splitlines()[-1])

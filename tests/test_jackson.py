@@ -1,6 +1,8 @@
 """Closed Jackson network: Buzen algorithm, stationary laws, delay estimates."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency (pip install .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,6 +1,8 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency (pip install .[dev])")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -1,6 +1,8 @@
 """Event-driven simulator invariants (hypothesis property tests)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency (pip install .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ClosedNetworkSim, SimConfig, simulate

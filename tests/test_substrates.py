@@ -88,10 +88,13 @@ class TestInitDeterminism:
         )
         outs = set()
         for _ in range(2):
+            import pathlib
+            repo_root = str(pathlib.Path(__file__).resolve().parent.parent)
             r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                               text=True, cwd="/root/repo", timeout=300,
+                               text=True, cwd=repo_root, timeout=600,
                                env={"PYTHONPATH": "src", "PYTHONHASHSEED": "random",
-                                    "PATH": "/usr/bin:/bin", "HOME": "/root"})
+                                    "PATH": "/usr/bin:/bin",
+                                    "HOME": os.environ.get("HOME", "/root")})
             assert r.returncode == 0, r.stderr[-1000:]
             outs.add(r.stdout.strip())
         assert len(outs) == 1, f"init not process-deterministic: {outs}"
