@@ -1,0 +1,150 @@
+"""Training-engine benchmark: Python per-event loop vs compiled scan engine.
+
+Runs the §5 federated experiment (MLP classifier, heterogeneous client
+speeds) through both server loops at identical configuration and event law,
+and writes ``BENCH_engine.json``.  The headline case is n=256 clients, C=64
+in flight, T=5000 CS steps on CPU: the Python loop pays a host<->device round
+trip per CS step (batch generation, dispatch of the jitted grad, per-leaf
+tree updates), the scan engine replays the pre-simulated event stream as one
+XLA program.  The speedup is therefore largest in the dispatch-bound regime
+(small per-step gradient work — typical FL client models); a compute-bound
+case (batch 128) is included for calibration.
+
+    PYTHONPATH=src python benchmarks/engine.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import sys
+import time
+from dataclasses import replace
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs.base import FLConfig  # noqa: E402
+from repro.core import ServerConfig, run_fedbuff, run_generalized_async_sgd  # noqa: E402
+from repro.data.pipeline import FederatedClassification, make_client_speeds  # noqa: E402
+from repro.fl.engine import DeviceFLClients, FLClients, MLPClassifier, run_matrix  # noqa: E402
+
+
+def _best(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        gc.collect()
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _compare(data, mu, n, C, T, hidden, batch, method="gen_async", Z=10,
+             reps=4):
+    model = MLPClassifier(data.dim, data.num_classes, hidden=hidden, seed=0)
+    host = FLClients(data, model, batch_size=batch)
+    dev = DeviceFLClients(data, model, batch_size=batch, shard_size=512, seed=0)
+    cfg = ServerConfig(n=n, C=C, T=T, eta=0.05, mu=mu, seed=0,
+                       weighting="importance" if method == "gen_async" else "plain")
+    cfg_scan = replace(cfg, engine="scan")
+
+    def once(clients, c):
+        if method == "fedbuff":
+            run_fedbuff(model.init_params, clients, c, Z=Z)
+        else:
+            run_generalized_async_sgd(model.init_params, clients, c)
+
+    cold_s = _best(lambda: once(dev, cfg_scan), 1)       # includes compile
+    # interleave reps so machine-load noise hits both engines alike
+    py_s = scan_s = float("inf")
+    for _ in range(reps):
+        py_s = min(py_s, _best(lambda: once(host, cfg), 1))
+        scan_s = min(scan_s, _best(lambda: once(dev, cfg_scan), 1))
+    return py_s, cold_s, scan_s
+
+
+def run(quick: bool) -> dict:
+    n, C, T = (32, 8, 500) if quick else (256, 64, 5000)
+    data = FederatedClassification(n_clients=n, seed=0)
+    mu = make_client_speeds(n, 0.5, 10.0, seed=0)
+    results = []
+
+    def record(name, python_s, scan_s, note=""):
+        entry = {
+            "name": name,
+            "python_s": round(python_s, 3),
+            "scan_s": round(scan_s, 3),
+            "speedup": round(python_s / scan_s, 2),
+            "note": note,
+        }
+        results.append(entry)
+        print(f"{name:52s} {python_s:8.2f} s -> {scan_s:7.3f} s   x{entry['speedup']:.1f}")
+
+    # --- headline: dispatch-bound FL config ------------------------------ #
+    py_s, cold_s, scan_s = _compare(data, mu, n, C, T, hidden=32, batch=16)
+    record(
+        f"fl_mlp_gen_async(n={n},C={C},T={T},h=32,b=16)", py_s, scan_s,
+        note=f"warm scan (incl. host stream export); cold run with compile "
+        f"was {cold_s:.2f}s",
+    )
+
+    # --- fedbuff through both engines ------------------------------------ #
+    py_fb, _, sc_fb = _compare(data, mu, n, C, T, hidden=32, batch=16,
+                               method="fedbuff")
+    record(f"fl_mlp_fedbuff(n={n},C={C},T={T},h=32,b=16)", py_fb, sc_fb)
+
+    # --- compute-bound calibration point --------------------------------- #
+    py_c, _, sc_c = _compare(data, mu, n, C, T, hidden=128, batch=128,
+                             reps=2)
+    record(
+        f"fl_mlp_gen_async(n={n},C={C},T={T},h=128,b=128)", py_c, sc_c,
+        note="compute-bound: both engines dominated by the same gradient "
+        "FLOPs; speedup here is pure dispatch overhead removal",
+    )
+
+    # --- scenario matrix: amortization across vmapped streams ------------ #
+    seeds = (0, 1) if quick else (0, 1, 2, 3)
+    flc = FLConfig(n_clients=n, concurrency=C, server_steps=T // 2,
+                   sampling="uniform", speed_ratio=10.0, seed=0)
+    mat_s = _best(lambda: run_matrix(
+        flc, seeds=seeds, policies=("uniform", "optimal"),
+        speed_ratios=(1.0, 10.0), eval_every=max(T // 20, 10), data=data,
+    ), 1)
+    n_scen = len(seeds) * 2 * 2
+    results.append({
+        "name": f"run_matrix({n_scen}_scenarios,T={T // 2})",
+        "total_s": round(mat_s, 3),
+        "per_scenario_s": round(mat_s / n_scen, 3),
+        "note": "seeds x {uniform, optimal} x heterogeneity in ONE compiled "
+        "call (incl. compile + host stream exports)",
+    })
+    print(f"run_matrix: {n_scen} scenarios in {mat_s:.2f}s "
+          f"({mat_s / n_scen:.3f}s/scenario)")
+
+    return {
+        "bench": "engine",
+        "quick": quick,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "results": results,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small sizes (CI smoke)")
+    ap.add_argument(
+        "--out",
+        default=str(Path(__file__).resolve().parent.parent / "BENCH_engine.json"),
+        help="output JSON path",
+    )
+    args = ap.parse_args()
+    payload = run(args.quick)
+    Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -38,8 +38,11 @@ def main() -> None:
     print(f"bound improvement vs uniform: {100*res.relative_improvement:.1f}%")
 
     # --- 3. train --------------------------------------------------------- #
-    flc = FLConfig(n_clients=20, concurrency=8, server_steps=200, speed_ratio=10.0)
-    print("\ntraining (200 server steps, 20 clients, 10x speed gap):")
+    # engine="scan" replays the pre-simulated event stream on device as one
+    # compiled lax.scan (engine="python" is the per-event reference loop)
+    flc = FLConfig(n_clients=20, concurrency=8, server_steps=200,
+                   speed_ratio=10.0, engine="scan")
+    print("\ntraining (200 server steps, 20 clients, 10x speed gap, scan engine):")
     for method in ("gen_async", "async_sgd", "fedbuff"):
         r = run_experiment(flc, method, eta=0.08, eval_every=100)
         print(f"  {method:10s} final accuracy {r.eval_acc[-1]:.3f}")

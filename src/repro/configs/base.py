@@ -127,3 +127,7 @@ class FLConfig:
     weighting: str = "importance"  # importance (Alg. 1) | plain
     fedbuff_Z: int = 10
     seed: int = 0
+    engine: str = "python"         # python (reference loop) | scan (compiled)
+
+    def replace(self, **kw) -> "FLConfig":
+        return dataclasses.replace(self, **kw)

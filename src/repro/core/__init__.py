@@ -10,7 +10,22 @@ from .jackson import (
     three_cluster_delay_bounds,
     two_cluster_delay_bounds,
 )
-from .queue_sim import ClosedNetworkSim, SimConfig, SimResult, simulate, simulate_batch
+from .engine_scan import (
+    DeviceGradientSource,
+    jit_runner,
+    make_runner,
+    step_scales,
+    stream_arrays,
+)
+from .queue_sim import (
+    ClosedNetworkSim,
+    EventStream,
+    SimConfig,
+    SimResult,
+    export_stream,
+    simulate,
+    simulate_batch,
+)
 from .sampling import (
     SamplingResult,
     bound_for_p,

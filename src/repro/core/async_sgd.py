@@ -16,6 +16,17 @@ Faithfulness notes
   completions J_k, sampling K_{k+1} ~ p, FIFO queues per client.
 * The virtual-iterate sequence mu_k (Eq. 4) is tracked on demand to expose
   the Lemma-9 invariant |G_k| = C - 1 in tests.
+
+Engines
+-------
+Each async server loop runs through one of two interchangeable engines
+(`ServerConfig.engine`):
+  * "python" — the per-event reference loop below (the parity oracle);
+  * "scan"   — the compiled device-resident engine (repro.core.engine_scan):
+    the event stream is pre-simulated on the host and Algorithm 1 replays
+    as a single `jax.lax.scan` over a stacked snapshot ring buffer.
+Identical (seed, block) => identical event stream => iterates agree to
+float-associativity tolerance (locked in tests/test_engine.py).
 """
 from __future__ import annotations
 
@@ -25,7 +36,7 @@ from typing import Any, Callable, Protocol
 
 import numpy as np
 
-from .queue_sim import ClosedNetworkSim, SimConfig
+from .queue_sim import ClosedNetworkSim, SimConfig, export_stream
 
 __all__ = [
     "GradientSource",
@@ -73,6 +84,8 @@ class ServerConfig:
     apply_update: Callable[[Pytree, Pytree, float], Pytree] | None = None
     # apply_update(w, g, scale) -> new w.  Defaults to w - scale*g; override to
     # route through an optimizer or the Pallas weighted_update kernel.
+    engine: str = "python"      # "python" (reference loop) | "scan" (compiled)
+    update: str = "jnp"         # scan engine update path: "jnp" | "pallas"
 
 
 @dataclass
@@ -93,14 +106,96 @@ def _resolve(cfg: ServerConfig) -> tuple[np.ndarray, np.ndarray]:
     return p, mu
 
 
+def _device_grad_fn(source) -> Callable:
+    """Resolve the traceable gradient fn for the scan engine."""
+    fn = getattr(source, "device_grad", None)
+    if fn is None and callable(source):
+        fn = source
+    if fn is None:
+        raise TypeError(
+            "engine='scan' needs a DeviceGradientSource (a `device_grad(j, w, "
+            "k)` method traceable by JAX); got "
+            f"{type(source).__name__} — use engine='python' for host sources."
+        )
+    return fn
+
+
+def _scan_update_fn(cfg: ServerConfig):
+    if cfg.apply_update is not None:
+        return cfg.apply_update
+    if cfg.update == "pallas":
+        from ..kernels.weighted_update import tree_weighted_update
+
+        return tree_weighted_update
+    if cfg.update != "jnp":
+        raise ValueError(cfg.update)
+    return None  # engine default: w - scale*g
+
+
+def _run_scan(
+    w0: Pytree,
+    source,
+    cfg: ServerConfig,
+    eval_fn,
+    p: np.ndarray,
+    mu: np.ndarray,
+    *,
+    fedbuff_Z: int = 0,
+) -> tuple[Pytree, TraceRecord]:
+    """Shared scan-engine driver for Generalized AsyncSGD and FedBuff."""
+    import jax
+    import jax.numpy as jnp
+
+    from .engine_scan import jit_runner, step_scales, stream_arrays
+
+    if cfg.track_virtual:
+        raise NotImplementedError("track_virtual requires engine='python'")
+    stream = export_stream(
+        SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service, seed=cfg.seed)
+    )
+    weighting = "plain" if fedbuff_Z else cfg.weighting
+    scale = step_scales(stream, cfg.eta, p, weighting)
+    runner = jit_runner(
+        _device_grad_fn(source),
+        cfg.C,
+        fedbuff_Z=fedbuff_Z,
+        eval_fn=eval_fn,
+        eval_every=cfg.eval_every if eval_fn is not None else 0,
+        update_fn=_scan_update_fn(cfg),
+    )
+    J_dev, slot_dev = stream_arrays(stream)
+    w0_dev = _tree_map(jnp.asarray, w0)
+    w, evals = runner(w0_dev, J_dev, slot_dev, jnp.asarray(scale))
+    w = jax.block_until_ready(w)
+
+    trace = TraceRecord(steps=np.arange(cfg.T), times=np.asarray(stream.t))
+    if eval_fn is not None and cfg.eval_every:
+        n_evals = np.asarray(evals).shape[0]
+        trace.eval_steps = [(i + 1) * cfg.eval_every for i in range(n_evals)]
+        trace.eval_values = [float(v) for v in np.asarray(evals)]
+    trace.delays = stream.delays
+    trace.mean_queue_lengths = stream.queue_len_sum / cfg.T
+    return w, trace
+
+
 def run_generalized_async_sgd(
     w0: Pytree,
     source: GradientSource,
     cfg: ServerConfig,
     eval_fn: Callable[[Pytree], float] | None = None,
 ) -> tuple[Pytree, TraceRecord]:
-    """Algorithm 1.  Returns final parameters and the execution trace."""
+    """Algorithm 1.  Returns final parameters and the execution trace.
+
+    With ``cfg.engine == "scan"``, `source` must be a DeviceGradientSource
+    and `eval_fn` (if given) must be traceable — pure JAX ops returning a
+    device scalar, since it runs inside the compiled program.  The "python"
+    engine accepts any host callable returning a float.
+    """
     p, mu = _resolve(cfg)
+    if cfg.engine == "scan":
+        return _run_scan(w0, source, cfg, eval_fn, p, mu)
+    if cfg.engine != "python":
+        raise ValueError(cfg.engine)
     sim = ClosedNetworkSim(
         SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service, seed=cfg.seed)
     )
@@ -162,6 +257,10 @@ def run_fedbuff(
     completions."""
     p, mu = _resolve(cfg)
     pu = np.full(cfg.n, 1.0 / cfg.n)  # FedBuff samples uniformly
+    if cfg.engine == "scan":
+        return _run_scan(w0, source, cfg, eval_fn, pu, mu, fedbuff_Z=Z)
+    if cfg.engine != "python":
+        raise ValueError(cfg.engine)
     sim = ClosedNetworkSim(
         SimConfig(mu=mu, p=pu, C=cfg.C, T=cfg.T, service=cfg.service, seed=cfg.seed)
     )

@@ -1,0 +1,268 @@
+"""Compiled device-resident Generalized-AsyncSGD engine (one `lax.scan`).
+
+The Python reference loop in `async_sgd.py` pays a host<->device round trip
+per CS step, which caps the §5 experiment at toy sizes.  The queuing
+structure removes the need for that: the event stream (J_k, K_{k+1}, t_k) of
+the closed Jackson network is independent of the gradient values, so it can
+be pre-simulated on the host (`queue_sim.export_stream`) and Algorithm 1
+replayed on device as a single XLA program:
+
+  * the C in-flight dispatch snapshots live in a stacked ring buffer
+    (a (C, ...) leading axis on every parameter leaf);
+  * step k gathers the completing task's snapshot from `slot[k]`, computes
+    the client gradient with a traceable `grad_fn(j, w, k)`, applies the
+    importance-weighted update, and scatters the updated parameters back
+    into the same slot (the freed slot hosts the new dispatch — exactly one
+    task completes and one departs per step, Lemma 9);
+  * evaluation runs as an outer scan over chunks of `eval_every` events, so
+    the whole run — updates and metric curve — is one compiled call.
+
+`make_runner` returns a pure function of (w0, J, slot, scale): jit it for a
+single run, `jax.vmap` it over stacked streams for the scenario matrix
+(seeds x sampling policies x heterogeneity levels in one compiled call).
+
+FedBuff rides the same scan: gradients accumulate into a buffer pytree and
+the (masked, branch-free) server update fires every Z-th step.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Protocol
+
+import numpy as np
+
+from .queue_sim import EventStream
+
+__all__ = [
+    "DeviceGradientSource",
+    "jit_runner",
+    "make_runner",
+    "step_scales",
+    "stream_arrays",
+]
+
+Pytree = Any
+
+
+class DeviceGradientSource(Protocol):
+    """A gradient source the compiled engine can trace.
+
+    Unlike `GradientSource.grad` (host Python, one call per step),
+    `device_grad` is called once under tracing with abstract scalar
+    `client_id` / `server_step`; it must be expressible as pure JAX ops over
+    device-resident data (e.g. a gather from stacked per-client shards).
+    """
+
+    def device_grad(self, client_id, params: Pytree, server_step) -> Pytree:
+        ...
+
+
+def step_scales(
+    stream: EventStream, eta: float, p: np.ndarray, weighting: str
+) -> np.ndarray:
+    """Per-step update scale as a (T,) array: eta/(n p_{J_k}) or plain eta."""
+    if weighting == "importance":
+        return (eta / (stream.n * np.asarray(p, float)))[stream.J]
+    if weighting == "plain":
+        return np.full(stream.T, eta)
+    raise ValueError(weighting)
+
+
+def stream_arrays(stream: EventStream):
+    """Device copies of the scan inputs (J, slot) for one stream."""
+    import jax.numpy as jnp
+
+    return jnp.asarray(stream.J), jnp.asarray(stream.slot)
+
+
+def make_runner(
+    grad_fn: Callable[[Any, Pytree, Any], Pytree],
+    C: int,
+    *,
+    fedbuff_Z: int = 0,
+    eval_fn: Callable[[Pytree], Any] | None = None,
+    eval_every: int = 0,
+    update_fn: Callable[[Pytree, Pytree, Any], Pytree] | None = None,
+    unroll: int = 1,
+):
+    """Build the scan engine for a fixed algorithm shape.
+
+    Returns ``run(w0, J, slot, scale) -> (w_final, evals)`` — a pure
+    function: `jax.jit` it directly, or `jax.vmap(run, in_axes=(None, 0, 0,
+    0))` to execute a whole scenario matrix in one compiled call.  ``evals``
+    is the eval_fn curve sampled every `eval_every` steps (empty array when
+    evaluation is off).
+
+    grad_fn(j, w, k): traceable stochastic gradient of client j at params w,
+    server step k.  update_fn(w, g, scale) defaults to w - scale*g.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    tree_map = jax.tree_util.tree_map
+    default_update = update_fn is None
+    if update_fn is None:
+        # cast back per leaf so the scan carry dtype stays stable (bf16
+        # params with an fp32 scale would otherwise promote)
+        update_fn = lambda w, g, s: tree_map(
+            lambda x, y: (x - s * y).astype(x.dtype), w, g
+        )
+
+    def _snapshot_codec(w0):
+        """Flat-packed snapshot storage when all leaves share a dtype.
+
+        The ring buffer then is ONE (C, P) array — a single gather/scatter
+        per step instead of two per leaf, which matters for small models
+        where per-op overhead inside the scan dominates.  Mixed-dtype trees
+        fall back to per-leaf (C, ...) buffers.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(w0)
+        dtypes = {jnp.asarray(l).dtype for l in leaves}
+        if len(dtypes) != 1:
+            return None, None  # per-leaf buffers
+        shapes = [jnp.shape(l) for l in leaves]
+        sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+        offs = np.concatenate([[0], np.cumsum(sizes)]).tolist()
+
+        def pack(w):
+            ls = jax.tree_util.tree_leaves(w)
+            return jnp.concatenate([jnp.ravel(x) for x in ls])
+
+        def unpack(flat):
+            ls = [
+                flat[offs[i] : offs[i + 1]].reshape(shapes[i])
+                for i in range(len(shapes))
+            ]
+            return jax.tree_util.tree_unflatten(treedef, ls)
+
+        return pack, unpack
+
+    def make_body(pack, unpack, flat_mode):
+        def body(carry, xs):
+            w, snaps, acc = carry  # w (and acc) are flat vectors in flat_mode
+            j, s, scale, k = xs
+            # gather the completing task's dispatch-time snapshot (Alg. 1 line 9)
+            if unpack is None:
+                w_disp = tree_map(lambda b: b[s], snaps)
+            else:
+                w_disp = unpack(snaps[s])
+            g = grad_fn(j, w_disp, k)
+            if flat_mode:
+                # default update on the packed vector: one axpy, one scatter
+                g = pack(g)
+                if fedbuff_Z > 0:
+                    acc = acc + g
+                    fire = ((k + 1) % fedbuff_Z) == 0
+                    eff = jnp.where(fire, scale / fedbuff_Z, 0.0)
+                    w = (w - eff * acc).astype(w.dtype)
+                    acc = acc * (~fire).astype(acc.dtype)
+                else:
+                    w = (w - scale * g).astype(w.dtype)
+                snaps = snaps.at[s].set(w)
+                return (w, snaps, acc), ()
+            if fedbuff_Z > 0:
+                acc = tree_map(lambda a, y: a + y, acc, g)
+                fire = ((k + 1) % fedbuff_Z) == 0
+                eff = jnp.where(fire, scale / fedbuff_Z, 0.0)
+                w = update_fn(w, acc, eff)
+                acc = tree_map(lambda a: a * (~fire).astype(a.dtype), acc)
+            else:
+                w = update_fn(w, g, scale)
+            # the freed slot hosts the new dispatch with the updated params
+            if unpack is None:
+                snaps = tree_map(lambda b, x: b.at[s].set(x), snaps, w)
+            else:
+                snaps = snaps.at[s].set(pack(w))
+            return (w, snaps, acc), ()
+
+        return body
+
+    def run(w0, J, slot, scale):
+        pack, unpack = _snapshot_codec(w0)
+        flat_mode = default_update and unpack is not None
+        body = make_body(pack, unpack, flat_mode)
+        to_tree = (lambda w: unpack(w)) if flat_mode else (lambda w: w)
+
+        def scan(carry, Jc, slotc, scalec, k0):
+            ks = k0 + jnp.arange(Jc.shape[0], dtype=Jc.dtype)
+            return jax.lax.scan(body, carry, (Jc, slotc, scalec, ks), unroll=unroll)[0]
+
+        if unpack is None:
+            snaps0 = tree_map(
+                lambda x: jnp.broadcast_to(x[None], (C,) + jnp.shape(x)), w0
+            )
+            w_init = w0
+        else:
+            flat0 = pack(w0)
+            snaps0 = jnp.broadcast_to(flat0[None], (C, flat0.shape[0]))
+            w_init = flat0 if flat_mode else w0
+        acc0 = tree_map(jnp.zeros_like, w_init) if fedbuff_Z > 0 else ()
+        carry = (w_init, snaps0, acc0)
+        T = int(J.shape[0])
+        if eval_fn is not None and eval_every and T >= eval_every:
+            n_chunks = T // eval_every
+            Tc = n_chunks * eval_every
+
+            # per-chunk absolute step offsets ride along as a scan input
+            def chunk_body(c, xs):
+                Jc, sc, scc, k0 = xs
+                c = scan(c, Jc, sc, scc, k0)
+                return c, eval_fn(to_tree(c[0]))
+
+            xs = (
+                J[:Tc].reshape(n_chunks, eval_every),
+                slot[:Tc].reshape(n_chunks, eval_every),
+                scale[:Tc].reshape(n_chunks, eval_every),
+                jnp.arange(n_chunks, dtype=J.dtype) * eval_every,
+            )
+            carry, evals = jax.lax.scan(chunk_body, carry, xs)
+            if Tc < T:  # tail events past the last eval point
+                carry = scan(carry, J[Tc:], slot[Tc:], scale[Tc:], k0=Tc)
+            return to_tree(carry[0]), evals
+        carry = scan(carry, J, slot, scale, k0=0)
+        return to_tree(carry[0]), jnp.zeros((0,))
+
+    return run
+
+
+def jit_runner(
+    grad_fn,
+    C: int,
+    fedbuff_Z: int = 0,
+    eval_fn=None,
+    eval_every: int = 0,
+    update_fn=None,
+    unroll: int = 1,
+):
+    """Jitted, memoized `make_runner`.
+
+    `make_runner` builds a fresh closure per call, which would defeat
+    `jax.jit`'s compilation cache, so the jitted runner is memoized on the
+    object owning `grad_fn` (its `__self__` for bound methods like
+    `source.device_grad`, else the function's own `__dict__`): repeated runs
+    with the same source reuse the compiled executable, and the memo — a
+    plain attribute forming an internal reference cycle — is garbage
+    collected together with the source instead of pinning device shards and
+    executables in a process-global cache.
+    """
+    import jax
+
+    owner = getattr(grad_fn, "__self__", grad_fn)
+    key = (getattr(grad_fn, "__func__", grad_fn), C, fedbuff_Z, eval_fn,
+           eval_every, update_fn, unroll)
+    try:
+        cache = owner.__dict__.setdefault("_scan_runner_cache", {})
+    except AttributeError:  # no instance dict (slots/builtin): skip memoization
+        cache = {}
+    if key not in cache:
+        cache[key] = jax.jit(
+            make_runner(
+                grad_fn,
+                C,
+                fedbuff_Z=fedbuff_Z,
+                eval_fn=eval_fn,
+                eval_every=eval_every,
+                update_fn=update_fn,
+                unroll=unroll,
+            )
+        )
+    return cache[key]

@@ -35,7 +35,15 @@ from dataclasses import dataclass
 
 import numpy as np
 
-__all__ = ["SimConfig", "SimResult", "ClosedNetworkSim", "simulate", "simulate_batch"]
+__all__ = [
+    "SimConfig",
+    "SimResult",
+    "EventStream",
+    "ClosedNetworkSim",
+    "simulate",
+    "simulate_batch",
+    "export_stream",
+]
 
 #: shared RNG pre-draw block size — every entry point uses the same default so
 #: `simulate(cfg)`, `simulate_batch(cfg)` and `ClosedNetworkSim(cfg).run(T)`
@@ -84,6 +92,77 @@ class SimResult:
     def throughput(self) -> float:
         """CS steps per unit physical time."""
         return self.steps / float(self.t[-1]) if self.steps else 0.0
+
+
+@dataclass
+class EventStream:
+    """Pre-computed event stream of a closed-network run, in array form.
+
+    This is the bridge between the host-side event simulator and the compiled
+    (scan-based) training engine: the queuing structure makes every CS step's
+    control decisions — who completes (``J``), who is sampled next (``K``),
+    when (``t``) — independent of the gradient values, so they can be
+    simulated once on the host and the whole training run replayed on device
+    as a single XLA program.
+
+    ``slot`` encodes the FIFO snapshot bookkeeping: the engine keeps C
+    dispatch-time parameter snapshots in a ring buffer; at step k the
+    completing task's snapshot lives in ``slot[k]``, and — because exactly one
+    task completes and one is dispatched per step — the newly dispatched
+    task reuses the same slot.
+    """
+
+    J: np.ndarray            # (T,) completing client per CS step
+    K: np.ndarray            # (T,) newly-sampled client per CS step
+    t: np.ndarray            # (T,) physical time of each CS step
+    slot: np.ndarray         # (T,) ring-buffer slot of the completing task
+    init_nodes: np.ndarray   # (C,) client of the initial task in each slot
+    n: int                   # number of clients
+    C: int                   # concurrency
+    p: np.ndarray            # (n,) dispatch probabilities the stream was drawn from
+    delays: list[list[int]] | None = None       # per-node CS-step delays
+    queue_len_sum: np.ndarray | None = None     # (n,) event-sampled occupancy sum
+
+    @property
+    def T(self) -> int:
+        return int(self.J.size)
+
+
+def export_stream(cfg: SimConfig, block: int = DEFAULT_BLOCK) -> EventStream:
+    """Simulate ``cfg`` and export the event stream as replayable arrays.
+
+    The (J, K, t) trace is identical to what ``ClosedNetworkSim(cfg).run(T)``
+    produces for the same seed/block.  On top of it we compute the FIFO slot
+    assignment by replaying per-client queues of slot ids — an O(T) host pass.
+    """
+    sim = ClosedNetworkSim(cfg, block=block)
+    C = cfg.C
+    # initial placement: task ids 0..C-1 were enqueued in order, one per slot
+    init_nodes = np.empty(C, dtype=np.int32)
+    for node, q in enumerate(sim.queues):
+        for tid, _, _ in q:
+            init_nodes[tid] = node
+    J, K, t = sim.run(cfg.T)
+    slot = np.empty(cfg.T, dtype=np.int32)
+    slot_queues: list[deque] = [deque() for _ in range(sim.n)]
+    for s, node in enumerate(init_nodes):
+        slot_queues[node].append(s)
+    for k in range(cfg.T):
+        s = slot_queues[J[k]].popleft()   # FIFO: oldest in-flight task completes
+        slot[k] = s
+        slot_queues[K[k]].append(s)       # freed slot hosts the new dispatch
+    return EventStream(
+        J=J,
+        K=K,
+        t=t,
+        slot=slot,
+        init_nodes=init_nodes,
+        n=sim.n,
+        C=C,
+        p=sim.p.copy(),
+        delays=sim.delays,
+        queue_len_sum=sim.queue_len_sum,
+    )
 
 
 class ClosedNetworkSim:

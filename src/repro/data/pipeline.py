@@ -90,6 +90,24 @@ class FederatedClassification:
         xs = self._protos[ys] + self.noise * self._eval_rng.normal(size=(batch_size, self.dim))
         return {"x": xs.astype(np.float32), "y": ys.astype(np.int32)}
 
+    def device_shards(self, samples_per_client: int) -> tuple[np.ndarray, np.ndarray]:
+        """Materialize fixed-size per-client datasets as stacked arrays.
+
+        Returns (x, y) with shapes (n_clients, m, dim) / (n_clients, m) —
+        the device-resident form the compiled scan engine gathers minibatches
+        from (client axis indexed by the traced J_k).  Deterministic given the
+        dataset seed and independent of the streaming `client_batch` RNG state.
+        """
+        m = int(samples_per_client)
+        xs = np.empty((self.n_clients, m, self.dim), np.float32)
+        ys = np.empty((self.n_clients, m), np.int32)
+        for i in range(self.n_clients):
+            rng = np.random.default_rng(self.seed * 104_729 + 613 * i + 7)
+            yi = rng.choice(self._client_classes[i], size=m)
+            xs[i] = self._protos[yi] + self.noise * rng.normal(size=(m, self.dim))
+            ys[i] = yi
+        return xs, ys
+
 
 def make_client_speeds(
     n: int, frac_fast: float, speed_ratio: float, mu_slow: float = 1.0, seed: int = 0

@@ -1,1 +1,10 @@
-from .engine import FLClients, FLRun, MLPClassifier, run_experiment, sampling_for
+from .engine import (
+    DeviceFLClients,
+    FLClients,
+    FLRun,
+    MatrixResult,
+    MLPClassifier,
+    run_experiment,
+    run_matrix,
+    sampling_for,
+)

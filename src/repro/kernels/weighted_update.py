@@ -93,3 +93,22 @@ def weighted_update(
         interpret=interpret,
     )(scale_arr, w2, g2)
     return ow.reshape(-1)[:n].reshape(shape), None
+
+
+def tree_weighted_update(
+    w, g, scale, momentum: float = 0.0, interpret: bool = True
+):
+    """Leaf-wise fused server update over a parameter pytree.
+
+    This is the `update="pallas"` path of the compiled scan engine
+    (`repro.core.engine_scan`): each leaf goes through the single-pass
+    kernel; `scale` may be a traced scalar (it rides in SMEM).
+    """
+    return jax.tree_util.tree_map(
+        lambda wl, gl: weighted_update(
+            wl, gl, jnp.asarray(scale, jnp.float32), momentum=momentum,
+            interpret=interpret,
+        )[0],
+        w,
+        g,
+    )

@@ -126,6 +126,7 @@ _SUBPROC_SNIPPET = textwrap.dedent(
 
 
 class TestSmallMeshLowering:
+    @pytest.mark.slow  # subprocess compiling 6 sharded programs on 8 host devices
     def test_smoke_archs_lower_on_2x4_mesh(self):
         repo_root = str(pathlib.Path(__file__).resolve().parent.parent)
         res = subprocess.run(

@@ -1,0 +1,318 @@
+"""Compiled scan engine: parity vs the Python reference loop, exported
+event-stream properties, and weighted_update kernel parity.
+
+The hypothesis-based property tests are optional (pip install .[dev]); the
+deterministic checks below them cover the same invariants dependency-free.
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ServerConfig,
+    SimConfig,
+    export_stream,
+    make_runner,
+    run_fedbuff,
+    run_generalized_async_sgd,
+    step_scales,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+class Quadratic:
+    """Clients hold quadratics f_i(w) = 0.5 ||w - c_i||^2, in both host
+    (GradientSource) and device (DeviceGradientSource) form — the parity
+    oracle: identical event stream => identical iterates up to float assoc."""
+
+    def __init__(self, n, d=4, seed=0):
+        rng = np.random.default_rng(seed)
+        self.c = rng.normal(size=(n, d)).astype(np.float32)
+        self.c_dev = jnp.asarray(self.c)
+        self.d = d
+
+    def grad(self, i, w, k):
+        return w - self.c[i]
+
+    def device_grad(self, j, w, k):
+        return w - self.c_dev[j]
+
+
+def _nonuniform_p(n, seed=1):
+    p = np.random.default_rng(seed).uniform(0.5, 1.5, n)
+    return p / p.sum()
+
+
+# ------------------------------------------------------------------ #
+# parity: scan engine vs Python reference on identical event streams
+# ------------------------------------------------------------------ #
+class TestScanParity:
+    N, T = 8, 1200
+
+    @pytest.mark.parametrize("C", [1, 4, 8])  # C == n at 8
+    @pytest.mark.parametrize("weighting", ["importance", "plain"])
+    def test_gen_async_parity(self, C, weighting):
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(
+            n=self.N, C=C, T=self.T, eta=0.02, p=_nonuniform_p(self.N),
+            seed=3, weighting=weighting,
+        )
+        w_py, _ = run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg)
+        cfg_scan = replace(cfg, engine="scan")
+        w_sc, _ = run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg_scan)
+        np.testing.assert_allclose(np.asarray(w_sc), w_py, atol=1e-5)
+
+    @pytest.mark.parametrize("Z", [1, 5])
+    def test_fedbuff_parity(self, Z):
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=4, T=self.T, eta=0.05, seed=0, weighting="plain")
+        w_py, _ = run_fedbuff(np.zeros(prob.d, np.float32), prob, cfg, Z=Z)
+        cfg_scan = replace(cfg, engine="scan")
+        w_sc, _ = run_fedbuff(np.zeros(prob.d, np.float32), prob, cfg_scan, Z=Z)
+        np.testing.assert_allclose(np.asarray(w_sc), w_py, atol=1e-5)
+
+    def test_eval_curve_parity(self):
+        """The chunked outer scan evaluates at the same steps as the Python
+        loop and sees the same iterates."""
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=4, T=500, eta=0.02, seed=7, eval_every=100)
+        cfg_scan = replace(cfg, engine="scan")
+        _, tr_py = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob, cfg, eval_fn=lambda w: float(np.sum(np.asarray(w) ** 2))
+        )
+        _, tr_sc = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob, cfg_scan, eval_fn=lambda w: jnp.sum(w**2)
+        )
+        assert tr_sc.eval_steps == tr_py.eval_steps
+        np.testing.assert_allclose(tr_sc.eval_values, tr_py.eval_values, atol=1e-5)
+
+    def test_trace_metadata_parity(self):
+        """times / delays / mean queue lengths come from the same stream."""
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=4, T=400, eta=0.02, seed=5)
+        _, tr_py = run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg)
+        cfg_scan = replace(cfg, engine="scan")
+        _, tr_sc = run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg_scan)
+        np.testing.assert_allclose(tr_sc.times, tr_py.times)
+        np.testing.assert_allclose(tr_sc.mean_queue_lengths, tr_py.mean_queue_lengths)
+        assert tr_sc.delays == tr_py.delays
+
+    def test_pallas_update_path_matches_jnp(self):
+        prob = Quadratic(self.N, d=37)  # non-tile-aligned parameter
+        cfg = ServerConfig(n=self.N, C=4, T=200, eta=0.02, seed=2, engine="scan")
+        w_jnp, _ = run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg)
+        cfg_pl = replace(cfg, update="pallas")
+        w_pl, _ = run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg_pl)
+        np.testing.assert_allclose(np.asarray(w_pl), np.asarray(w_jnp), atol=1e-6)
+
+    def test_vmap_over_seeds(self):
+        """One vmapped call over stacked streams == per-seed scan runs."""
+        n, C, T, eta = 6, 3, 300, 0.03
+        prob = Quadratic(n)
+        p = _nonuniform_p(n)
+        streams = [
+            export_stream(SimConfig(mu=np.ones(n), p=p, C=C, T=T, seed=s))
+            for s in (0, 1, 2)
+        ]
+        J = jnp.asarray(np.stack([st_.J for st_ in streams]))
+        slot = jnp.asarray(np.stack([st_.slot for st_ in streams]))
+        scale = jnp.asarray(
+            np.stack([step_scales(st_, eta, p, "importance") for st_ in streams])
+        )
+        run = make_runner(prob.device_grad, C=C)
+        w0 = jnp.zeros(prob.d, jnp.float32)
+        w_batch, _ = jax.jit(jax.vmap(run, in_axes=(None, 0, 0, 0)))(w0, J, slot, scale)
+        for b in range(3):
+            w_one, _ = jax.jit(run)(w0, J[b], slot[b], scale[b])
+            np.testing.assert_allclose(np.asarray(w_batch[b]), np.asarray(w_one), atol=1e-6)
+
+    def test_bf16_params_keep_dtype(self):
+        """Carry dtypes must stay stable across the scan (no fp32 promotion)."""
+        prob = Quadratic(self.N)
+        w0 = jnp.zeros(prob.d, jnp.bfloat16)
+
+        class Bf16Quad:
+            def device_grad(self, j, w, k):
+                return w - prob.c_dev[j].astype(jnp.bfloat16)
+
+        cfg = ServerConfig(n=self.N, C=4, T=100, eta=0.05, seed=1, engine="scan")
+        w, _ = run_generalized_async_sgd(w0, Bf16Quad(), cfg)
+        assert w.dtype == jnp.bfloat16
+        assert np.all(np.isfinite(np.asarray(w, np.float32)))
+        w_fb, _ = run_fedbuff(w0, Bf16Quad(), cfg, Z=5)
+        assert w_fb.dtype == jnp.bfloat16
+
+    def test_scan_rejects_host_only_source(self):
+        class HostOnly:
+            def grad(self, i, w, k):
+                return w
+
+        cfg = ServerConfig(n=4, C=2, T=10, eta=0.1, engine="scan")
+        with pytest.raises(TypeError):
+            run_generalized_async_sgd(np.zeros(2, np.float32), HostOnly(), cfg)
+
+
+# ------------------------------------------------------------------ #
+# FL wiring: device clients + scenario matrix
+# ------------------------------------------------------------------ #
+class TestFLScanEngine:
+    def test_run_experiment_engines_agree_on_quality(self):
+        from repro.configs.base import FLConfig
+        from repro.fl import run_experiment
+
+        flc = FLConfig(n_clients=12, concurrency=4, server_steps=300, speed_ratio=4.0)
+        accs = {}
+        for eng in ("python", "scan"):
+            r = run_experiment(flc, "gen_async", eta=0.08, eval_every=300, engine=eng)
+            accs[eng] = r.eval_acc[-1]
+            assert r.extras["engine"] == eng
+        # different minibatch RNG streams, same law: final accuracy comparable
+        assert abs(accs["python"] - accs["scan"]) < 0.15
+
+    def test_run_matrix_shapes(self):
+        from repro.configs.base import FLConfig
+        from repro.fl import run_matrix
+
+        flc = FLConfig(n_clients=10, concurrency=4, server_steps=120)
+        m = run_matrix(
+            flc, seeds=(0, 1), policies=("uniform", "optimal"),
+            speed_ratios=(1.0, 8.0), eval_every=60,
+        )
+        assert m.final_acc.shape == (2, 2, 2)
+        assert m.eval_acc.shape == (2, 2, 2, 2)
+        assert m.eval_times.shape == (2, 2, 2, 2)
+        assert list(m.eval_steps) == [60, 120]
+        assert m.p_vectors.shape == (2, 2, 10)
+        # physical time is monotone within every scenario
+        assert np.all(np.diff(m.eval_times, axis=-1) >= 0)
+        # uniform policy rows really are uniform
+        np.testing.assert_allclose(m.p_vectors[0], 0.1, atol=1e-12)
+
+
+# ------------------------------------------------------------------ #
+# exported event-stream invariants
+# ------------------------------------------------------------------ #
+def _check_stream(stream):
+    """FIFO conservation, Lemma-9 in-flight count, slot-uniqueness."""
+    C, n, T = stream.C, stream.n, stream.T
+    # replay: per-client FIFO of (dispatch_step, slot)
+    fifo = [list() for _ in range(n)]
+    for s, node in enumerate(stream.init_nodes):
+        fifo[node].append((0, int(s)))
+    outstanding = {int(s) for s in range(C)}
+    recomputed_delays = [[] for _ in range(n)]
+    for k in range(T):
+        j, k_new, s = int(stream.J[k]), int(stream.K[k]), int(stream.slot[k])
+        assert fifo[j], "completion at a client with no outstanding task"
+        disp_step, disp_slot = fifo[j].pop(0)   # FIFO: oldest dispatch completes
+        assert disp_slot == s, "slot must belong to the oldest in-flight task"
+        recomputed_delays[j].append(k - disp_step)
+        outstanding.discard(s)
+        assert len(outstanding) == C - 1        # Lemma 9: C-1 tasks in flight
+        fifo[k_new].append((k + 1, s))
+        outstanding.add(s)
+        assert len(outstanding) == C            # freed slot reused exactly once
+    assert sum(len(q) for q in fifo) == C
+    # FIFO order reproduces the simulator's recorded per-node delays exactly
+    assert recomputed_delays == stream.delays
+
+
+class TestStreamProperties:
+    @pytest.mark.parametrize("seed", [0, 1, 7])
+    @pytest.mark.parametrize("C", [1, 3, 12])
+    def test_invariants_deterministic(self, seed, C):
+        n = 5
+        p = _nonuniform_p(n, seed=seed + 1)
+        mu = np.random.default_rng(seed).uniform(0.3, 4.0, n)
+        _check_stream(export_stream(SimConfig(mu=mu, p=p, C=C, T=400, seed=seed)))
+
+    def test_K_frequencies_match_p_chi_square(self):
+        from scipy.stats import chi2
+
+        n, T = 6, 40_000
+        p = np.array([0.3, 0.25, 0.2, 0.1, 0.1, 0.05])
+        stream = export_stream(SimConfig(mu=np.ones(n), p=p, C=4, T=T, seed=0))
+        obs = np.bincount(stream.K, minlength=n)
+        stat = float(np.sum((obs - T * p) ** 2 / (T * p)))
+        assert stat < chi2.ppf(1 - 1e-3, df=n - 1)
+
+    def test_matches_simulate_trace(self):
+        """export_stream replays the exact (J, K, t) of ClosedNetworkSim."""
+        from repro.core import simulate
+
+        cfg = SimConfig(mu=np.array([1.0, 2.0, 0.5]), p=np.full(3, 1 / 3), C=4, T=600, seed=9)
+        stream, res = export_stream(cfg), simulate(cfg)
+        np.testing.assert_array_equal(stream.J, res.J)
+        np.testing.assert_array_equal(stream.K, res.K)
+        np.testing.assert_allclose(stream.t, res.t)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def stream_configs(draw):
+        n = draw(st.integers(2, 8))
+        C = draw(st.integers(1, 12))
+        T = draw(st.integers(10, 300))
+        seed = draw(st.integers(0, 2**16))
+        service = draw(st.sampled_from(["exp", "det"]))
+        mu = np.array([draw(st.floats(0.2, 8.0)) for _ in range(n)])
+        praw = np.array([draw(st.floats(0.05, 1.0)) for _ in range(n)])
+        return SimConfig(mu=mu, p=praw / praw.sum(), C=C, T=T, service=service, seed=seed)
+
+    class TestStreamPropertiesHypothesis:
+        @given(cfg=stream_configs())
+        @settings(max_examples=30, deadline=None)
+        def test_invariants(self, cfg):
+            _check_stream(export_stream(cfg))
+
+
+# ------------------------------------------------------------------ #
+# weighted_update kernel parity (interpret mode; the engine's update path)
+# ------------------------------------------------------------------ #
+class TestWeightedUpdateKernelParity:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(3, 1000), (127,), (64, 128), (5, 3, 11)])
+    @pytest.mark.parametrize("momentum", [0.0, 0.9])
+    def test_kernel_vs_jnp_reference(self, dtype, shape, momentum):
+        from repro.kernels.ref import weighted_update_ref
+        from repro.kernels.weighted_update import weighted_update
+
+        rng = np.random.default_rng(17)
+        w = jnp.asarray(rng.normal(size=shape), dtype)
+        g = jnp.asarray(rng.normal(size=shape), dtype)
+        m = jnp.asarray(rng.normal(size=shape), jnp.float32) if momentum else None
+        scale = jnp.float32(0.123)
+        ow, om = weighted_update(w, g, scale, m=m, momentum=momentum, interpret=True)
+        ew, em = weighted_update_ref(w, g, scale, m=m, momentum=momentum)
+        tol = dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-6, rtol=2e-6)
+        np.testing.assert_allclose(
+            ow.astype(jnp.float32), ew.astype(jnp.float32), **tol
+        )
+        assert ow.dtype == w.dtype
+        if momentum:
+            np.testing.assert_allclose(om, em, atol=1e-5)
+
+    def test_tree_weighted_update_matches_leafwise(self):
+        from repro.kernels.weighted_update import tree_weighted_update
+
+        rng = np.random.default_rng(3)
+        w = {"a": jnp.asarray(rng.normal(size=(3, 1000)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(17,)), jnp.float32)}
+        g = {"a": jnp.asarray(rng.normal(size=(3, 1000)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(17,)), jnp.float32)}
+        out = tree_weighted_update(w, g, 0.25)
+        for key in w:
+            np.testing.assert_allclose(
+                out[key], w[key] - 0.25 * g[key], atol=1e-6
+            )

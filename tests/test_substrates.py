@@ -71,6 +71,7 @@ class TestData:
 
 
 class TestInitDeterminism:
+    @pytest.mark.slow  # two cold subprocesses, each compiling a model init
     def test_init_params_stable_across_processes(self):
         """crc32 path hashing: same seed -> same params in any process
         (PYTHONHASHSEED-proof) — checkpoint reproducibility depends on it."""
