@@ -242,7 +242,7 @@ def run(quick: bool) -> dict:
     mu_s = rng.uniform(0.5, 4.0, ns)
     p_s = rng.uniform(0.1, 1.0, ns)
     p_s /= p_s.sum()
-    cfg = SimConfig(mu=mu_s, p=p_s, C=ns // 2, T=T, seed=0)
+    cfg = SimConfig(mu=mu_s, p=p_s, C=ns // 2, T=T, seed=0, record_delays=True)
 
     def run_seed_sim():
         sim = _SeedSim(cfg)

@@ -30,8 +30,11 @@ def bench_fig1_transient():
     for n in (10, 50):
         mu = np.array([10.0] * 5 + [1.0] * (n - 5))
         p = np.full(n, 1 / n)
-        us = timeit(lambda: simulate(SimConfig(mu=mu, p=p, C=n, T=500, seed=0)), iters=3)
-        res = simulate(SimConfig(mu=mu, p=p, C=n, T=5000, seed=0))
+        us = timeit(
+            lambda: simulate(SimConfig(mu=mu, p=p, C=n, T=500, seed=0, record_delays=True)),
+            iters=3,
+        )
+        res = simulate(SimConfig(mu=mu, p=p, C=n, T=5000, seed=0, record_delays=True))
         d = np.asarray(res.delays[0], float)
         half = len(d) // 2
         gap = abs(np.mean(d[:half]) - np.mean(d[half:])) / max(np.mean(d), 1e-9)
@@ -164,8 +167,11 @@ def bench_fig5_delays():
     mu = np.array([1.2] * n_f + [1.0] * (n - n_f))
     p = np.full(n, 1 / n)
 
-    us = timeit(lambda: simulate(SimConfig(mu=mu, p=p, C=C, T=50_000, seed=0)), iters=1, warmup=0)
-    res = simulate(SimConfig(mu=mu, p=p, C=C, T=400_000, seed=0))
+    us = timeit(
+        lambda: simulate(SimConfig(mu=mu, p=p, C=C, T=50_000, seed=0, record_delays=True)),
+        iters=1, warmup=0,
+    )
+    res = simulate(SimConfig(mu=mu, p=p, C=C, T=400_000, seed=0, record_delays=True))
     d = res.mean_delay_per_node()
     bf, bs = two_cluster_delay_bounds(n, n_f, 1.2, 1.0, C)
     est = JacksonNetwork(mu=mu, p=p, C=C).expected_delays()
@@ -183,8 +189,9 @@ def bench_fig11_optimal_delays():
     mu = np.array([1.2] * n_f + [1.0] * (n - n_f))
     p_f = 7.5e-3
     p = np.array([p_f] * n_f + [2 / n - p_f] * (n - n_f))
-    uni = simulate(SimConfig(mu=mu, p=np.full(n, 1 / n), C=C, T=400_000, seed=0))
-    opt = simulate(SimConfig(mu=mu, p=p, C=C, T=400_000, seed=0))
+    uni = simulate(SimConfig(mu=mu, p=np.full(n, 1 / n), C=C, T=400_000, seed=0,
+                             record_delays=True))
+    opt = simulate(SimConfig(mu=mu, p=p, C=C, T=400_000, seed=0, record_delays=True))
     du, do = uni.mean_delay_per_node(), opt.mean_delay_per_node()
     return [
         row("fig11_delay_reduction_fast", 0.0,
@@ -199,7 +206,7 @@ def bench_fig12_3cluster():
     n, C = 9, 1000
     mu = np.array([10.0] * 3 + [1.2] * 3 + [1.0] * 3)
     p = np.full(n, 1 / n)
-    res = simulate(SimConfig(mu=mu, p=p, C=C, T=400_000, seed=0))
+    res = simulate(SimConfig(mu=mu, p=p, C=C, T=400_000, seed=0, record_delays=True))
     d = res.mean_delay_per_node()
     busy_frac = res.queue_len_tw[:3].sum() / res.t[-1] / 3
     mf, mm, ms = three_cluster_delay_bounds(9, 3, 6, 10.0, 1.2, 1.0, C,

@@ -44,7 +44,7 @@ def main() -> None:
     bounds = two_cluster_delay_bounds(n2, nf2, 1.2, 1.0, C2)
     net = JacksonNetwork(mu=mu, p=p, C=C2)
     est = net.expected_delays()
-    sim = simulate(SimConfig(mu=mu, p=p, C=C2, T=300_000, seed=0))
+    sim = simulate(SimConfig(mu=mu, p=p, C=C2, T=300_000, seed=0, record_delays=True))
     sd = sim.mean_delay_per_node()
     print(f"fast: closed-form<= {bounds[0]:7.1f}  jackson-est {est[0]:7.1f}  sim {np.mean(sd[:nf2]):7.1f}")
     print(f"slow: closed-form<= {bounds[1]:7.1f}  jackson-est {est[-1]:7.1f}  sim {np.mean(sd[nf2:]):7.1f}")

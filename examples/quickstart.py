@@ -26,7 +26,7 @@ def main() -> None:
     p = np.full(n, 1 / n)
     net = JacksonNetwork(mu=mu, p=p, C=C)
     m_hat = net.expected_delays()
-    sim = simulate(SimConfig(mu=mu, p=p, C=C, T=50_000, seed=0))
+    sim = simulate(SimConfig(mu=mu, p=p, C=C, T=50_000, seed=0, record_delays=True))
     print("expected delays (steps)  theory:", np.round(m_hat, 1))
     print("                        simulated:", np.round(sim.mean_delay_per_node(), 1))
 

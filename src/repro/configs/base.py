@@ -128,6 +128,12 @@ class FLConfig:
     fedbuff_Z: int = 10
     seed: int = 0
     engine: str = "python"         # python (reference loop) | scan (compiled)
+    stream: str = "host"           # scan event source: host (pre-simulated
+                                   # replay) | device (fused on-device
+                                   # generator — zero host pre-simulation)
+    adaptive: bool = False         # device stream: adaptive sampling control
+                                   # loop (re-optimize p from observed queues)
+    refresh_every: int = 250       # control-loop cadence in CS steps
 
     def replace(self, **kw) -> "FLConfig":
         return dataclasses.replace(self, **kw)

@@ -12,10 +12,18 @@ from .jackson import (
 )
 from .engine_scan import (
     DeviceGradientSource,
+    jit_fused_runner,
     jit_runner,
+    make_fused_runner,
     make_runner,
     step_scales,
     stream_arrays,
+)
+from .stream_device import (
+    ctrl_refresh,
+    generate_stream,
+    make_bound_value_and_grad,
+    mva_throughput_delays,
 )
 from .queue_sim import (
     ClosedNetworkSim,

@@ -86,6 +86,14 @@ class ServerConfig:
     # route through an optimizer or the Pallas weighted_update kernel.
     engine: str = "python"      # "python" (reference loop) | "scan" (compiled)
     update: str = "jnp"         # scan engine update path: "jnp" | "pallas"
+    stream: str = "host"        # scan engine event source: "host" (pre-simulated
+                                # EventStream replay, the parity oracle) |
+                                # "device" (fused on-device generator, exp only)
+    adaptive: bool = False      # device stream: re-optimize p from running
+                                # occupancy estimates every refresh_every steps
+    refresh_every: int = 0      # control-loop cadence (CS steps)
+    ctrl_lr: float = 0.3        # control-loop mirror-descent step size
+    ctrl_iters: int = 4         # mirror-descent steps per refresh
 
 
 @dataclass
@@ -98,6 +106,8 @@ class TraceRecord:
     mean_queue_lengths: np.ndarray | None = None
     virtual_gap_sq: list[float] = field(default_factory=list)
     inflight_cardinality: list[int] = field(default_factory=list)
+    extras: dict = field(default_factory=dict)  # device stream: p_final,
+                                                # p_traj, delay_sum, comp, ...
 
 
 def _resolve(cfg: ServerConfig) -> tuple[np.ndarray, np.ndarray]:
@@ -142,39 +152,92 @@ def _run_scan(
     *,
     fedbuff_Z: int = 0,
 ) -> tuple[Pytree, TraceRecord]:
-    """Shared scan-engine driver for Generalized AsyncSGD and FedBuff."""
+    """Shared scan-engine driver for Generalized AsyncSGD and FedBuff.
+
+    ``cfg.stream`` picks the event source: "host" pre-simulates the event
+    stream with `queue_sim.export_stream` and replays it (the parity
+    oracle); "device" generates it inside the compiled program
+    (`engine_scan.make_fused_runner`) — zero host pre-simulation, and the
+    only mode supporting ``cfg.adaptive`` sampling.
+    """
     import jax
     import jax.numpy as jnp
 
-    from .engine_scan import jit_runner, step_scales, stream_arrays
+    from .engine_scan import jit_fused_runner, jit_runner, step_scales, stream_arrays
 
     if cfg.track_virtual:
         raise NotImplementedError("track_virtual requires engine='python'")
-    stream = export_stream(
-        SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service, seed=cfg.seed)
-    )
     weighting = "plain" if fedbuff_Z else cfg.weighting
-    scale = step_scales(stream, cfg.eta, p, weighting)
-    runner = jit_runner(
-        _device_grad_fn(source),
-        cfg.C,
-        fedbuff_Z=fedbuff_Z,
-        eval_fn=eval_fn,
-        eval_every=cfg.eval_every if eval_fn is not None else 0,
-        update_fn=_scan_update_fn(cfg),
-    )
-    J_dev, slot_dev = stream_arrays(stream)
     w0_dev = _tree_map(jnp.asarray, w0)
-    w, evals = runner(w0_dev, J_dev, slot_dev, jnp.asarray(scale))
-    w = jax.block_until_ready(w)
 
-    trace = TraceRecord(steps=np.arange(cfg.T), times=np.asarray(stream.t))
+    if cfg.stream == "device":
+        if cfg.service != "exp":
+            raise ValueError(
+                "stream='device' supports exponential service only "
+                "(the on-device race relies on memorylessness)"
+            )
+        runner = jit_fused_runner(
+            _device_grad_fn(source),
+            cfg.n,
+            cfg.C,
+            cfg.T,
+            weighting=weighting,
+            fedbuff_Z=fedbuff_Z,
+            eval_fn=eval_fn,
+            eval_every=cfg.eval_every if eval_fn is not None else 0,
+            adaptive=cfg.adaptive,
+            refresh_every=cfg.refresh_every,
+            ctrl_lr=cfg.ctrl_lr,
+            ctrl_iters=cfg.ctrl_iters,
+            update_fn=_scan_update_fn(cfg),
+        )
+        w, evals, extras = runner(
+            w0_dev, jnp.asarray(mu), jnp.asarray(p),
+            jax.random.PRNGKey(cfg.seed), cfg.eta,
+        )
+        w = jax.block_until_ready(w)
+        trace = TraceRecord(
+            steps=np.arange(cfg.T), times=np.asarray(extras["t"], np.float64)
+        )
+        trace.mean_queue_lengths = np.asarray(extras["occ_mean"], np.float64)
+        comp = np.asarray(extras["comp"], np.float64)
+        trace.extras = {
+            "p_final": np.asarray(extras["p_final"], np.float64),
+            "p_traj": np.asarray(extras["p_traj"], np.float64),
+            "mean_delays": np.asarray(extras["delay_sum"], np.float64)
+            / np.maximum(comp, 1.0),
+            "comp": comp,
+            "busy_time": np.asarray(extras["busy_time"], np.float64),
+        }
+    else:
+        if cfg.stream != "host":
+            raise ValueError(cfg.stream)
+        if cfg.adaptive:
+            raise ValueError("adaptive sampling requires stream='device'")
+        stream = export_stream(
+            SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service,
+                      seed=cfg.seed, record_delays=True)
+        )
+        scale = step_scales(stream, cfg.eta, p, weighting)
+        runner = jit_runner(
+            _device_grad_fn(source),
+            cfg.C,
+            fedbuff_Z=fedbuff_Z,
+            eval_fn=eval_fn,
+            eval_every=cfg.eval_every if eval_fn is not None else 0,
+            update_fn=_scan_update_fn(cfg),
+        )
+        J_dev, slot_dev = stream_arrays(stream)
+        w, evals = runner(w0_dev, J_dev, slot_dev, jnp.asarray(scale))
+        w = jax.block_until_ready(w)
+        trace = TraceRecord(steps=np.arange(cfg.T), times=np.asarray(stream.t))
+        trace.delays = stream.delays
+        trace.mean_queue_lengths = stream.queue_len_sum / cfg.T
+
     if eval_fn is not None and cfg.eval_every:
         n_evals = np.asarray(evals).shape[0]
         trace.eval_steps = [(i + 1) * cfg.eval_every for i in range(n_evals)]
         trace.eval_values = [float(v) for v in np.asarray(evals)]
-    trace.delays = stream.delays
-    trace.mean_queue_lengths = stream.queue_len_sum / cfg.T
     return w, trace
 
 
@@ -196,8 +259,11 @@ def run_generalized_async_sgd(
         return _run_scan(w0, source, cfg, eval_fn, p, mu)
     if cfg.engine != "python":
         raise ValueError(cfg.engine)
+    if cfg.stream == "device" or cfg.adaptive:
+        raise ValueError("stream='device' / adaptive require engine='scan'")
     sim = ClosedNetworkSim(
-        SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service, seed=cfg.seed)
+        SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service,
+                  seed=cfg.seed, record_delays=True)
     )
     apply_update = cfg.apply_update or (lambda w, g, s: _axpy(w, g, -s))
 
@@ -261,8 +327,11 @@ def run_fedbuff(
         return _run_scan(w0, source, cfg, eval_fn, pu, mu, fedbuff_Z=Z)
     if cfg.engine != "python":
         raise ValueError(cfg.engine)
+    if cfg.stream == "device" or cfg.adaptive:
+        raise ValueError("stream='device' / adaptive require engine='scan'")
     sim = ClosedNetworkSim(
-        SimConfig(mu=mu, p=pu, C=cfg.C, T=cfg.T, service=cfg.service, seed=cfg.seed)
+        SimConfig(mu=mu, p=pu, C=cfg.C, T=cfg.T, service=cfg.service,
+                  seed=cfg.seed, record_delays=True)
     )
     apply_update = cfg.apply_update or (lambda w, g, s: _axpy(w, g, -s))
     w = w0

@@ -3,22 +3,39 @@
 The Python reference loop in `async_sgd.py` pays a host<->device round trip
 per CS step, which caps the §5 experiment at toy sizes.  The queuing
 structure removes the need for that: the event stream (J_k, K_{k+1}, t_k) of
-the closed Jackson network is independent of the gradient values, so it can
-be pre-simulated on the host (`queue_sim.export_stream`) and Algorithm 1
-replayed on device as a single XLA program:
+the closed Jackson network is independent of the gradient values, so
+Algorithm 1 runs on device as a single XLA program:
 
   * the C in-flight dispatch snapshots live in a stacked ring buffer
     (a (C, ...) leading axis on every parameter leaf);
-  * step k gathers the completing task's snapshot from `slot[k]`, computes
-    the client gradient with a traceable `grad_fn(j, w, k)`, applies the
-    importance-weighted update, and scatters the updated parameters back
-    into the same slot (the freed slot hosts the new dispatch — exactly one
-    task completes and one departs per step, Lemma 9);
-  * evaluation runs as an outer scan over chunks of `eval_every` events, so
-    the whole run — updates and metric curve — is one compiled call.
+  * `update_step` — the algorithm half — gathers the completing task's
+    snapshot from its slot, computes the client gradient with a traceable
+    `grad_fn(j, w, k)`, applies the importance-weighted update, and scatters
+    the updated parameters back into the same slot (the freed slot hosts the
+    new dispatch — exactly one task completes and one departs per step,
+    Lemma 9);
+  * the event half comes from one of two *streams* (`make_runner(stream=)`):
 
-`make_runner` returns a pure function of (w0, J, slot, scale): jit it for a
-single run, `jax.vmap` it over stacked streams for the scenario matrix
+      "host"    replay a pre-simulated `queue_sim.EventStream` — the parity
+                oracle.  `run(w0, J, slot, scale[, eval_every])`.
+      "device"  fuse `stream_device.stream_step` with `update_step` behind a
+                single scan carry: the closed network advances one CS step
+                per iteration *inside* the compiled program — zero host
+                pre-simulation, and the sampling vector p becomes state.
+                `run(w0, mu, p0, key, eta) -> (w, evals, extras)`.
+
+  * on the fused path an optional control loop (``adaptive=True``)
+    re-optimizes p every `refresh_every` steps from the running occupancy /
+    rate estimates (`stream_device.ctrl_refresh` — projected analytic
+    simplex gradient steps on the Theorem-1 bound), giving an adaptive
+    variant of the paper's sampling scheme.  Importance weights stay
+    unbiased under time-varying p because each in-flight slot remembers the
+    scale computed from its *dispatch-time* p.
+  * evaluation runs as an outer scan over chunks, so the whole run —
+    updates and metric curve — is one compiled call.
+
+`make_runner` returns a pure function: jit it for a single run, `jax.vmap`
+it over stacked streams / (mu, p, key) triples for the scenario matrix
 (seeds x sampling policies x heterogeneity levels in one compiled call).
 
 FedBuff rides the same scan: gradients accumulate into a buffer pytree and
@@ -26,16 +43,20 @@ the (masked, branch-free) server update fires every Z-th step.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, Callable, Protocol
 
 import numpy as np
 
 from .queue_sim import EventStream
+from .theory import BoundConstants
 
 __all__ = [
     "DeviceGradientSource",
     "jit_runner",
+    "jit_fused_runner",
     "make_runner",
+    "make_fused_runner",
     "step_scales",
     "stream_arrays",
 ]
@@ -74,7 +95,133 @@ def stream_arrays(stream: EventStream):
     return jnp.asarray(stream.J), jnp.asarray(stream.slot)
 
 
-def make_runner(
+# ------------------------------------------------------------------ #
+# shared pieces: snapshot codec + the algorithm step
+# ------------------------------------------------------------------ #
+def _snapshot_codec(w0):
+    """Flat-packed snapshot storage when all leaves share a dtype.
+
+    The ring buffer then is ONE (C, P) array — a single gather/scatter
+    per step instead of two per leaf, which matters for small models
+    where per-op overhead inside the scan dominates.  Mixed-dtype trees
+    fall back to per-leaf (C, ...) buffers.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree_util.tree_flatten(w0)
+    dtypes = {jnp.asarray(l).dtype for l in leaves}
+    if len(dtypes) != 1:
+        return None, None  # per-leaf buffers
+    shapes = [jnp.shape(l) for l in leaves]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    offs = np.concatenate([[0], np.cumsum(sizes)]).tolist()
+
+    def pack(w):
+        ls = jax.tree_util.tree_leaves(w)
+        return jnp.concatenate([jnp.ravel(x) for x in ls])
+
+    def unpack(flat):
+        ls = [
+            flat[offs[i] : offs[i + 1]].reshape(shapes[i])
+            for i in range(len(shapes))
+        ]
+        return jax.tree_util.tree_unflatten(treedef, ls)
+
+    return pack, unpack
+
+
+def _make_update_step(grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode):
+    """The algorithm half of a CS step, independent of the event source.
+
+    ``update_step(ucarry, j, s, scale, k) -> ucarry`` consumes one event
+    (completing client j, ring slot s, update scale, server step k) exactly
+    as Algorithm 1 lines 9-11 — both the host-replay scan body and the fused
+    device-stream body compose it with their event producer.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    tree_map = jax.tree_util.tree_map
+
+    def update_step(ucarry, j, s, scale, k):
+        w, snaps, acc = ucarry  # w (and acc) are flat vectors in flat_mode
+        # gather the completing task's dispatch-time snapshot (Alg. 1 line 9)
+        if unpack is None:
+            w_disp = tree_map(lambda b: b[s], snaps)
+        else:
+            w_disp = unpack(snaps[s])
+        g = grad_fn(j, w_disp, k)
+        if flat_mode:
+            # default update on the packed vector: one axpy, one scatter
+            g = pack(g)
+            if fedbuff_Z > 0:
+                acc = acc + g
+                fire = ((k + 1) % fedbuff_Z) == 0
+                eff = jnp.where(fire, scale / fedbuff_Z, 0.0)
+                w = (w - eff * acc).astype(w.dtype)
+                acc = acc * (~fire).astype(acc.dtype)
+            else:
+                w = (w - scale * g).astype(w.dtype)
+            snaps = snaps.at[s].set(w)
+            return (w, snaps, acc)
+        if fedbuff_Z > 0:
+            acc = tree_map(lambda a, y: a + y, acc, g)
+            fire = ((k + 1) % fedbuff_Z) == 0
+            eff = jnp.where(fire, scale / fedbuff_Z, 0.0)
+            w = update_fn(w, acc, eff)
+            acc = tree_map(lambda a: a * (~fire).astype(a.dtype), acc)
+        else:
+            w = update_fn(w, g, scale)
+        # the freed slot hosts the new dispatch with the updated params
+        if unpack is None:
+            snaps = tree_map(lambda b, x: b.at[s].set(x), snaps, w)
+        else:
+            snaps = snaps.at[s].set(pack(w))
+        return (w, snaps, acc)
+
+    return update_step
+
+
+def _init_update_carry(w0, C, pack, unpack, flat_mode, fedbuff_Z):
+    """(w, snaps, acc) initial carry + the carry->pytree decoder."""
+    import jax
+    import jax.numpy as jnp
+
+    tree_map = jax.tree_util.tree_map
+    if unpack is None:
+        snaps0 = tree_map(
+            lambda x: jnp.broadcast_to(x[None], (C,) + jnp.shape(x)), w0
+        )
+        w_init = w0
+    else:
+        flat0 = pack(w0)
+        snaps0 = jnp.broadcast_to(flat0[None], (C, flat0.shape[0]))
+        w_init = flat0 if flat_mode else w0
+    acc0 = tree_map(jnp.zeros_like, w_init) if fedbuff_Z > 0 else ()
+    to_tree = (lambda w: unpack(w)) if flat_mode else (lambda w: w)
+    return (w_init, snaps0, acc0), to_tree
+
+
+def _default_update(update_fn):
+    """Resolve update_fn; the default casts back per leaf so the scan carry
+    dtype stays stable (bf16 params with an fp32 scale would otherwise
+    promote)."""
+    import jax
+
+    if update_fn is not None:
+        return update_fn, False
+    tree_map = jax.tree_util.tree_map
+    return (
+        lambda w, g, s: tree_map(lambda x, y: (x - s * y).astype(x.dtype), w, g),
+        True,
+    )
+
+
+# ------------------------------------------------------------------ #
+# host stream: replay a pre-simulated EventStream
+# ------------------------------------------------------------------ #
+def _make_host_runner(
     grad_fn: Callable[[Any, Pytree, Any], Pytree],
     C: int,
     *,
@@ -84,13 +231,15 @@ def make_runner(
     update_fn: Callable[[Pytree, Pytree, Any], Pytree] | None = None,
     unroll: int = 1,
 ):
-    """Build the scan engine for a fixed algorithm shape.
+    """Build the replay engine for a fixed algorithm shape.
 
-    Returns ``run(w0, J, slot, scale) -> (w_final, evals)`` — a pure
-    function: `jax.jit` it directly, or `jax.vmap(run, in_axes=(None, 0, 0,
-    0))` to execute a whole scenario matrix in one compiled call.  ``evals``
-    is the eval_fn curve sampled every `eval_every` steps (empty array when
-    evaluation is off).
+    Returns ``run(w0, J, slot, scale, eval_every=...) -> (w_final, evals)``
+    — a pure function: `jax.jit` it directly (``eval_every`` is a Python
+    int, pass it via ``static_argnames``), or `jax.vmap(run, in_axes=(None,
+    0, 0, 0))` to execute a whole scenario matrix in one compiled call.
+    ``evals`` is the eval_fn curve sampled every `eval_every` steps (empty
+    array when evaluation is off).  The factory-level ``eval_every`` only
+    sets the run-time default, so one runner serves any eval cadence.
 
     grad_fn(j, w, k): traceable stochastic gradient of client j at params w,
     server step k.  update_fn(w, g, scale) defaults to w - scale*g.
@@ -98,105 +247,25 @@ def make_runner(
     import jax
     import jax.numpy as jnp
 
-    tree_map = jax.tree_util.tree_map
-    default_update = update_fn is None
-    if update_fn is None:
-        # cast back per leaf so the scan carry dtype stays stable (bf16
-        # params with an fp32 scale would otherwise promote)
-        update_fn = lambda w, g, s: tree_map(
-            lambda x, y: (x - s * y).astype(x.dtype), w, g
-        )
+    update_fn, default_update = _default_update(update_fn)
+    eval_every_default = eval_every
 
-    def _snapshot_codec(w0):
-        """Flat-packed snapshot storage when all leaves share a dtype.
-
-        The ring buffer then is ONE (C, P) array — a single gather/scatter
-        per step instead of two per leaf, which matters for small models
-        where per-op overhead inside the scan dominates.  Mixed-dtype trees
-        fall back to per-leaf (C, ...) buffers.
-        """
-        leaves, treedef = jax.tree_util.tree_flatten(w0)
-        dtypes = {jnp.asarray(l).dtype for l in leaves}
-        if len(dtypes) != 1:
-            return None, None  # per-leaf buffers
-        shapes = [jnp.shape(l) for l in leaves]
-        sizes = [int(np.prod(s)) if s else 1 for s in shapes]
-        offs = np.concatenate([[0], np.cumsum(sizes)]).tolist()
-
-        def pack(w):
-            ls = jax.tree_util.tree_leaves(w)
-            return jnp.concatenate([jnp.ravel(x) for x in ls])
-
-        def unpack(flat):
-            ls = [
-                flat[offs[i] : offs[i + 1]].reshape(shapes[i])
-                for i in range(len(shapes))
-            ]
-            return jax.tree_util.tree_unflatten(treedef, ls)
-
-        return pack, unpack
-
-    def make_body(pack, unpack, flat_mode):
-        def body(carry, xs):
-            w, snaps, acc = carry  # w (and acc) are flat vectors in flat_mode
-            j, s, scale, k = xs
-            # gather the completing task's dispatch-time snapshot (Alg. 1 line 9)
-            if unpack is None:
-                w_disp = tree_map(lambda b: b[s], snaps)
-            else:
-                w_disp = unpack(snaps[s])
-            g = grad_fn(j, w_disp, k)
-            if flat_mode:
-                # default update on the packed vector: one axpy, one scatter
-                g = pack(g)
-                if fedbuff_Z > 0:
-                    acc = acc + g
-                    fire = ((k + 1) % fedbuff_Z) == 0
-                    eff = jnp.where(fire, scale / fedbuff_Z, 0.0)
-                    w = (w - eff * acc).astype(w.dtype)
-                    acc = acc * (~fire).astype(acc.dtype)
-                else:
-                    w = (w - scale * g).astype(w.dtype)
-                snaps = snaps.at[s].set(w)
-                return (w, snaps, acc), ()
-            if fedbuff_Z > 0:
-                acc = tree_map(lambda a, y: a + y, acc, g)
-                fire = ((k + 1) % fedbuff_Z) == 0
-                eff = jnp.where(fire, scale / fedbuff_Z, 0.0)
-                w = update_fn(w, acc, eff)
-                acc = tree_map(lambda a: a * (~fire).astype(a.dtype), acc)
-            else:
-                w = update_fn(w, g, scale)
-            # the freed slot hosts the new dispatch with the updated params
-            if unpack is None:
-                snaps = tree_map(lambda b, x: b.at[s].set(x), snaps, w)
-            else:
-                snaps = snaps.at[s].set(pack(w))
-            return (w, snaps, acc), ()
-
-        return body
-
-    def run(w0, J, slot, scale):
+    def run(w0, J, slot, scale, eval_every=eval_every_default):
         pack, unpack = _snapshot_codec(w0)
         flat_mode = default_update and unpack is not None
-        body = make_body(pack, unpack, flat_mode)
-        to_tree = (lambda w: unpack(w)) if flat_mode else (lambda w: w)
+        update_step = _make_update_step(
+            grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode
+        )
+
+        def body(carry, xs):
+            j, s, sc, k = xs
+            return update_step(carry, j, s, sc, k), ()
 
         def scan(carry, Jc, slotc, scalec, k0):
             ks = k0 + jnp.arange(Jc.shape[0], dtype=Jc.dtype)
             return jax.lax.scan(body, carry, (Jc, slotc, scalec, ks), unroll=unroll)[0]
 
-        if unpack is None:
-            snaps0 = tree_map(
-                lambda x: jnp.broadcast_to(x[None], (C,) + jnp.shape(x)), w0
-            )
-            w_init = w0
-        else:
-            flat0 = pack(w0)
-            snaps0 = jnp.broadcast_to(flat0[None], (C, flat0.shape[0]))
-            w_init = flat0 if flat_mode else w0
-        acc0 = tree_map(jnp.zeros_like, w_init) if fedbuff_Z > 0 else ()
-        carry = (w_init, snaps0, acc0)
+        carry, to_tree = _init_update_carry(w0, C, pack, unpack, flat_mode, fedbuff_Z)
         T = int(J.shape[0])
         if eval_fn is not None and eval_every and T >= eval_every:
             n_chunks = T // eval_every
@@ -224,16 +293,236 @@ def make_runner(
     return run
 
 
-def jit_runner(
-    grad_fn,
+# ------------------------------------------------------------------ #
+# device stream: fused generator + control loop
+# ------------------------------------------------------------------ #
+def make_fused_runner(
+    grad_fn: Callable[[Any, Pytree, Any], Pytree],
+    n: int,
     C: int,
+    T: int,
+    *,
+    weighting: str = "importance",
     fedbuff_Z: int = 0,
-    eval_fn=None,
+    eval_fn: Callable[[Pytree], Any] | None = None,
     eval_every: int = 0,
-    update_fn=None,
+    adaptive: bool = False,
+    refresh_every: int = 0,
+    bound: BoundConstants | None = None,
+    ctrl_lr: float = 0.3,
+    ctrl_iters: int = 4,
+    update_fn: Callable[[Pytree, Pytree, Any], Pytree] | None = None,
+    init: str = "distinct",
     unroll: int = 1,
 ):
-    """Jitted, memoized `make_runner`.
+    """Build the fused engine: `stream_device.stream_step` ∘ `update_step`.
+
+    Returns ``run(w0, mu, p0, key, eta) -> (w_final, evals, extras)``.  The
+    closed network advances inside the scan (exponential service only), so
+    nothing is pre-simulated on the host; `jax.vmap(run, in_axes=(None, 0,
+    0, 0, None))` executes a scenario matrix in one compiled call.
+
+    With ``adaptive=True`` the sampling vector is re-optimized from the
+    running occupancy/rate estimates every `refresh_every` steps
+    (`stream_device.ctrl_refresh`); each in-flight task keeps the
+    importance scale of its dispatch-time p, so the weighted update stays
+    unbiased under the time-varying policy.  ``extras`` carries the
+    per-step event times plus the final/trajectory sampling vectors and
+    the on-device occupancy, busy-time, delay and completion statistics.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from . import stream_device as sd
+
+    if weighting not in ("importance", "plain"):
+        raise ValueError(weighting)
+    if adaptive:
+        if fedbuff_Z:
+            raise ValueError("adaptive sampling applies to Algorithm 1, not FedBuff")
+        if refresh_every <= 0:
+            raise ValueError("adaptive=True requires refresh_every > 0")
+        if eval_fn is not None and eval_every and eval_every % refresh_every:
+            raise ValueError("eval_every must be a multiple of refresh_every")
+    bound = bound if bound is not None else BoundConstants(C=C, T=T)
+    importance = weighting == "importance"
+
+    # chunk length: refresh and eval both happen at chunk boundaries
+    if adaptive:
+        L = min(refresh_every, T)
+    elif eval_fn is not None and eval_every:
+        L = min(eval_every, T)
+    else:
+        L = T
+    n_chunks, Tc = T // L, (T // L) * L
+    eval_on = eval_fn is not None and eval_every > 0
+    eval_stride = max(eval_every // L, 1) if eval_on else 0
+
+    update_fn, default_update = _default_update(update_fn)
+
+    def run(w0, mu, p0, key, eta):
+        pack, unpack = _snapshot_codec(w0)
+        flat_mode = default_update and unpack is not None
+        update_step = _make_update_step(
+            grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode
+        )
+        ucarry, to_tree = _init_update_carry(w0, C, pack, unpack, flat_mode, fedbuff_Z)
+
+        mu = jnp.asarray(mu, jnp.float32)
+        p0 = jnp.asarray(p0, jnp.float32)
+        eta = jnp.asarray(eta, jnp.float32)
+        k_init, k_race, k_exp, k_disp = jax.random.split(key, 4)
+        u_race = jax.random.uniform(k_race, (T,))
+        u_exp = jax.random.uniform(k_exp, (T,))
+        u_disp = jax.random.uniform(k_disp, (T,))
+        sstate, init_nodes = sd.stream_init(k_init, n, C, p0, init=init)
+        stats = sd.stats_init(n, C)
+        # dispatch-time importance scale per in-flight slot (Alg. 1 line 10)
+        if importance:
+            slot_scale0 = eta / (n * p0[init_nodes])
+        else:
+            slot_scale0 = jnp.broadcast_to(eta, (C,))
+
+        def inner(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0):
+            """One chunk of fused CS steps (p constant within the chunk)."""
+
+            def body(c, x):
+                ucarry, sstate, stats, slot_scale = c
+                urk, uek, kn, k = x
+                occ_pre = sstate.occ
+                sstate, ev = sd.stream_step(sstate, mu, (urk, uek, kn))
+                scale = slot_scale[ev.slot] if importance else eta
+                ucarry = update_step(ucarry, ev.j, ev.slot, scale, k)
+                stats = sd.stats_step(stats, ev, occ_pre, sstate.occ, k)
+                if importance:
+                    slot_scale = slot_scale.at[ev.slot].set(eta / (n * p[ev.k]))
+                return (ucarry, sstate, stats, slot_scale), ev.t
+
+            ks = k0 + jnp.arange(Kc.shape[0], dtype=jnp.int32)
+            (ucarry, sstate, stats, slot_scale), ts = jax.lax.scan(
+                body, (ucarry, sstate, stats, slot_scale), (ur, ue, Kc, ks),
+                unroll=unroll,
+            )
+            return ucarry, sstate, stats, slot_scale, ts
+
+        def sample_dispatch(cdf, u):
+            return jnp.minimum(
+                jnp.searchsorted(cdf, u, side="right"), n - 1
+            ).astype(jnp.int32)
+
+        def chunk_step(carry, xs):
+            ucarry, sstate, stats, slot_scale, p, cdf = carry
+            ur, ue, ud, k0 = xs
+            Kc = sample_dispatch(cdf, ud)
+            ucarry, sstate, stats, slot_scale, ts = inner(
+                ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0
+            )
+            if adaptive:
+                p = sd.ctrl_refresh(
+                    p, stats.comp, stats.busy_t, bound, lr=ctrl_lr, iters=ctrl_iters
+                )
+                cdf = jnp.cumsum(p)
+            if not eval_on:
+                ev_val = jnp.float32(0.0)
+            elif eval_stride == 1:
+                ev_val = eval_fn(to_tree(ucarry[0]))
+            else:
+                # eval fires every eval_stride-th refresh chunk; the predicate
+                # is unbatched under vmap, so the cond stays a real branch and
+                # off-cadence chunks skip the eval work entirely
+                fire = ((k0 // L + 1) % eval_stride) == 0
+                ev_val = jax.lax.cond(
+                    fire,
+                    lambda u: jnp.asarray(eval_fn(to_tree(u)), jnp.float32),
+                    lambda u: jnp.float32(0.0),
+                    ucarry[0],
+                )
+            return (ucarry, sstate, stats, slot_scale, p, cdf), (ts, ev_val, p)
+
+        carry = (ucarry, sstate, stats, slot_scale0, p0, jnp.cumsum(p0))
+        xs = (
+            u_race[:Tc].reshape(n_chunks, L),
+            u_exp[:Tc].reshape(n_chunks, L),
+            u_disp[:Tc].reshape(n_chunks, L),
+            jnp.arange(n_chunks, dtype=jnp.int32) * L,
+        )
+        carry, (ts, evals, p_traj) = jax.lax.scan(chunk_step, carry, xs)
+        ucarry, sstate, stats, slot_scale, p, cdf = carry
+        ts = ts.reshape(Tc)
+        if Tc < T:  # tail events past the last chunk boundary
+            Kc = sample_dispatch(cdf, u_disp[Tc:])
+            ucarry, sstate, stats, slot_scale, ts_tail = inner(
+                ucarry, sstate, stats, slot_scale, p,
+                u_race[Tc:], u_exp[Tc:], Kc, Tc,
+            )
+            ts = jnp.concatenate([ts, ts_tail])
+        if eval_on:
+            evals = evals[eval_stride - 1 :: eval_stride]
+        else:
+            evals = jnp.zeros((0,))
+        extras = {
+            "t": ts,
+            "p_final": p,
+            "p_traj": p_traj,
+            "occ_mean": stats.occ_sum.astype(jnp.float32) / T,
+            "occ_time_avg": stats.occ_tw / ts[-1],
+            "busy_time": stats.busy_t,
+            "delay_sum": stats.delay_sum,
+            "comp": stats.comp,
+        }
+        return to_tree(ucarry[0]), evals, extras
+
+    return run
+
+
+def make_runner(
+    grad_fn: Callable[[Any, Pytree, Any], Pytree],
+    C: int,
+    *,
+    stream: str = "host",
+    fedbuff_Z: int = 0,
+    eval_fn: Callable[[Pytree], Any] | None = None,
+    eval_every: int = 0,
+    update_fn: Callable[[Pytree, Pytree, Any], Pytree] | None = None,
+    unroll: int = 1,
+    **device_kw,
+):
+    """Build the scan engine; ``stream`` selects the event source.
+
+    ``stream="host"`` (default) replays a pre-simulated `EventStream` — the
+    parity oracle: ``run(w0, J, slot, scale[, eval_every])``.
+
+    ``stream="device"`` fuses the on-device closed-network generator with
+    the update step (zero host pre-simulation): ``run(w0, mu, p0, key, eta)``.
+    Requires ``n=`` and ``T=`` (and accepts `make_fused_runner`'s
+    ``weighting / adaptive / refresh_every / bound / ctrl_lr / ctrl_iters /
+    init`` knobs).
+    """
+    if stream == "host":
+        if device_kw:
+            raise TypeError(f"host stream does not accept {sorted(device_kw)}")
+        return _make_host_runner(
+            grad_fn, C, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
+            eval_every=eval_every, update_fn=update_fn, unroll=unroll,
+        )
+    if stream == "device":
+        try:
+            n, T = device_kw.pop("n"), device_kw.pop("T")
+        except KeyError as e:
+            raise TypeError(f"stream='device' requires {e.args[0]}=") from None
+        return make_fused_runner(
+            grad_fn, n, C, T, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
+            eval_every=eval_every, update_fn=update_fn, unroll=unroll,
+            **device_kw,
+        )
+    raise ValueError(stream)
+
+
+# ------------------------------------------------------------------ #
+# memoized jitted runners
+# ------------------------------------------------------------------ #
+def _runner_cache(grad_fn):
+    """Per-owner memo for jitted runners.
 
     `make_runner` builds a fresh closure per call, which would defeat
     `jax.jit`'s compilation cache, so the jitted runner is memoized on the
@@ -244,25 +533,93 @@ def jit_runner(
     collected together with the source instead of pinning device shards and
     executables in a process-global cache.
     """
-    import jax
-
     owner = getattr(grad_fn, "__self__", grad_fn)
-    key = (getattr(grad_fn, "__func__", grad_fn), C, fedbuff_Z, eval_fn,
-           eval_every, update_fn, unroll)
+    func = getattr(grad_fn, "__func__", grad_fn)
     try:
         cache = owner.__dict__.setdefault("_scan_runner_cache", {})
     except AttributeError:  # no instance dict (slots/builtin): skip memoization
         cache = {}
+    return cache, func
+
+
+def jit_runner(
+    grad_fn,
+    C: int,
+    fedbuff_Z: int = 0,
+    eval_fn=None,
+    eval_every: int = 0,
+    update_fn=None,
+    unroll: int = 1,
+    vmap_streams: bool = False,
+):
+    """Jitted, memoized host-replay runner.
+
+    The memo key deliberately excludes ``eval_every``: the cadence is a
+    static *call-time* argument of the jitted function (``static_argnames``),
+    so sweeps over eval cadence reuse one runner object and share
+    `jax.jit`'s compilation cache instead of rebuilding the closure (and
+    with it the whole trace) per cadence.  ``vmap_streams=True`` returns the
+    batched variant mapping over stacked (J, slot, scale).
+    """
+    import jax
+
+    cache, func = _runner_cache(grad_fn)
+    key = ("host", func, C, fedbuff_Z, eval_fn, update_fn, unroll, vmap_streams)
     if key not in cache:
-        cache[key] = jax.jit(
-            make_runner(
-                grad_fn,
-                C,
-                fedbuff_Z=fedbuff_Z,
-                eval_fn=eval_fn,
-                eval_every=eval_every,
-                update_fn=update_fn,
-                unroll=unroll,
-            )
+        run = _make_host_runner(
+            grad_fn, C, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn, eval_every=0,
+            update_fn=update_fn, unroll=unroll,
         )
+        if vmap_streams:
+            def vrun(w0, J, slot, scale, eval_every=0):
+                return jax.vmap(
+                    lambda w, a, b, c: run(w, a, b, c, eval_every),
+                    in_axes=(None, 0, 0, 0),
+                )(w0, J, slot, scale)
+
+            cache[key] = jax.jit(vrun, static_argnames=("eval_every",))
+        else:
+            cache[key] = jax.jit(run, static_argnames=("eval_every",))
+    return partial(cache[key], eval_every=eval_every)
+
+
+def jit_fused_runner(
+    grad_fn,
+    n: int,
+    C: int,
+    T: int,
+    *,
+    vmap_scenarios: bool = False,
+    shard_devices: int = 1,
+    **kw,
+):
+    """Jitted, memoized fused (device-stream) runner.
+
+    Memoized on the gradient source like `jit_runner`; ``vmap_scenarios``
+    maps over stacked (mu, p0, key) with shared (w0, eta) — the zero-host-
+    presimulation scenario matrix.  ``shard_devices > 1`` additionally
+    `pmap`s the batched runner over that many devices (inputs carry an extra
+    leading device axis) — the scenario matrix then runs data-parallel
+    across the host platform's cores/accelerators, which the serial
+    host-export path cannot.
+    """
+    import jax
+
+    cache, func = _runner_cache(grad_fn)
+    kw_key = tuple(
+        (k, v) if k != "bound" else
+        (k, None if v is None else (v.A, v.L, v.B, v.C, v.T, v.rho))
+        for k, v in sorted(kw.items())
+    )
+    key = ("device", func, n, C, T, vmap_scenarios, shard_devices, kw_key)
+    if key not in cache:
+        run = make_fused_runner(grad_fn, n, C, T, **kw)
+        if vmap_scenarios:
+            batched = jax.vmap(run, in_axes=(None, 0, 0, 0, None))
+            if shard_devices > 1:
+                cache[key] = jax.pmap(batched, in_axes=(None, 0, 0, 0, None))
+            else:
+                cache[key] = jax.jit(batched)
+        else:
+            cache[key] = jax.jit(run)
     return cache[key]

@@ -21,7 +21,11 @@ A CS step is O(log n) amortized, independent of the number of clients:
     `queue_len_sum` / `queue_len_tw` properties;
   * dispatch samples and exponential service variates are pre-drawn in
     vectorized blocks (inverse-CDF via one `searchsorted` per block), so the
-    per-event RNG cost is O(1) instead of `rng.choice`'s O(n).
+    per-event RNG cost is O(1) instead of `rng.choice`'s O(n);
+  * per-event delay recording is opt-in (``SimConfig.record_delays``) and
+    stored as flat numpy arrays — the old always-on list-of-lists cost
+    hundreds of MB of Python objects at T=1e6.  The per-node views
+    (``delays`` / ``time_delays``) are derived lazily.
 
 The event stream is deterministic given (seed, block size); it differs from
 the seed implementation's stream (which drew variates one at a time) but has
@@ -61,6 +65,9 @@ class SimConfig:
     seed: int = 0
     initial: str = "distinct"   # "distinct": C tasks on C distinct clients (S_0)
                                 # "sampled": C iid draws from p
+    record_delays: bool = False  # opt-in per-event delay recording (flat arrays;
+                                 # off by default — the queue-length accumulators
+                                 # and the (J, K, t) trace are always available)
 
 
 @dataclass
@@ -68,18 +75,27 @@ class SimResult:
     J: np.ndarray               # (T,) completing client per CS step
     K: np.ndarray               # (T,) newly-sampled client per CS step
     t: np.ndarray               # (T,) physical time of each CS step
-    delays: list[list[int]]     # per-node list of delays in CS steps (M_{i,k})
-    time_delays: list[list[float]]  # per-node physical-time sojourns
+    delays: list[list[int]] | None       # per-node delays in CS steps (M_{i,k});
+                                         # None unless cfg.record_delays
+    time_delays: list[list[float]] | None  # per-node physical-time sojourns
     queue_len_sum: np.ndarray   # (n,) event-sampled sum over steps of X_{i,k}
     queue_len_tw: np.ndarray    # (n,) time-weighted integral of X_i(t)
     queue_len_last: np.ndarray  # (n,) final queue lengths
     steps: int
 
+    def _need_delays(self) -> list[list[int]]:
+        if self.delays is None:
+            raise ValueError(
+                "delays were not recorded; simulate with "
+                "SimConfig(record_delays=True)"
+            )
+        return self.delays
+
     def mean_delay_per_node(self) -> np.ndarray:
-        return np.array([np.mean(d) if d else np.nan for d in self.delays])
+        return np.array([np.mean(d) if d else np.nan for d in self._need_delays()])
 
     def max_delay_per_node(self) -> np.ndarray:
-        return np.array([np.max(d) if d else np.nan for d in self.delays])
+        return np.array([np.max(d) if d else np.nan for d in self._need_delays()])
 
     def mean_queue_lengths(self) -> np.ndarray:
         """Event-sampled means (Palm view at CS steps)."""
@@ -120,12 +136,36 @@ class EventStream:
     n: int                   # number of clients
     C: int                   # concurrency
     p: np.ndarray            # (n,) dispatch probabilities the stream was drawn from
-    delays: list[list[int]] | None = None       # per-node CS-step delays
+    delay_steps: np.ndarray | None = None       # (T,) CS-step delay of the task
+                                                # completing at step k (node J[k]);
+                                                # None unless record_delays
     queue_len_sum: np.ndarray | None = None     # (n,) event-sampled occupancy sum
+    queue_len_tw: np.ndarray | None = None      # (n,) time-weighted occupancy
+                                                # integral (device streams)
 
     @property
     def T(self) -> int:
         return int(self.J.size)
+
+    @property
+    def delays(self) -> list[list[int]] | None:
+        """Per-node CS-step delays, derived lazily from the flat arrays.
+
+        The flat ``(J, delay_steps)`` pair is the stored form (O(T) ints —
+        list-of-lists over 1e6 events used to cost hundreds of MB of Python
+        objects); the per-node view is materialized on demand.
+        """
+        if self.delay_steps is None:
+            return None
+        return _split_delays(self.J, self.delay_steps, self.n)
+
+
+def _split_delays(node: np.ndarray, value: np.ndarray, n: int) -> list:
+    """Per-node lists from flat (node, value) event records, in event order."""
+    out: list[list] = [[] for _ in range(n)]
+    for j, v in zip(node.tolist(), value.tolist()):
+        out[j].append(v)
+    return out
 
 
 def export_stream(cfg: SimConfig, block: int = DEFAULT_BLOCK) -> EventStream:
@@ -160,7 +200,7 @@ def export_stream(cfg: SimConfig, block: int = DEFAULT_BLOCK) -> EventStream:
         n=sim.n,
         C=C,
         p=sim.p.copy(),
-        delays=sim.delays,
+        delay_steps=sim.delay_steps,
         queue_len_sum=sim.queue_len_sum,
     )
 
@@ -193,8 +233,20 @@ class ClosedNetworkSim:
         self.heap: list[tuple[float, int, int]] = []
         self._seq = 0
         self._inservice_seq = [-1] * self.n
-        self.delays: list[list[int]] = [[] for _ in range(self.n)]
-        self.time_delays: list[list[float]] = [[] for _ in range(self.n)]
+        # delay recording (opt-in): flat per-event arrays with doubling growth
+        # — the completing node of record k is the k-th completion, so the
+        # per-node view is derivable and never materialized here.
+        self._record = bool(cfg.record_delays)
+        self._dcap = 0
+        self._dlen = 0
+        self._d_node: np.ndarray | None = None
+        self._d_steps: np.ndarray | None = None
+        self._d_time: np.ndarray | None = None
+        if self._record:
+            self._dcap = max(int(cfg.T), 1024)
+            self._d_node = np.empty(self._dcap, np.int32)
+            self._d_steps = np.empty(self._dcap, np.int32)
+            self._d_time = np.empty(self._dcap, np.float64)
         # incremental queue-length counters + lazily-flushed accumulators
         # (python lists: O(1) scalar access is much faster than numpy indexing)
         self._qlen = [0] * self.n
@@ -285,6 +337,35 @@ class ClosedNetworkSim:
             self._enqueue(int(nd), dispatch_step=0)
 
     # -------------------------------------------------------------- #
+    def _grow_delay_buffers(self) -> None:
+        self._dcap *= 2
+        for name in ("_d_node", "_d_steps", "_d_time"):
+            buf = getattr(self, name)
+            new = np.empty(self._dcap, buf.dtype)
+            new[: self._dlen] = buf[: self._dlen]
+            setattr(self, name, new)
+
+    @property
+    def delay_steps(self) -> np.ndarray | None:
+        """(k,) flat CS-step delays in completion order (node k is J_k)."""
+        if not self._record:
+            return None
+        return self._d_steps[: self._dlen].copy()
+
+    @property
+    def delays(self) -> list[list[int]] | None:
+        """Per-node CS-step delays (derived view; None unless record_delays)."""
+        if not self._record:
+            return None
+        return _split_delays(self._d_node[: self._dlen], self._d_steps[: self._dlen], self.n)
+
+    @property
+    def time_delays(self) -> list[list[float]] | None:
+        """Per-node physical-time sojourns (derived view)."""
+        if not self._record:
+            return None
+        return _split_delays(self._d_node[: self._dlen], self._d_time[: self._dlen], self.n)
+
     def total_tasks(self) -> int:
         return sum(self._qlen)
 
@@ -317,9 +398,15 @@ class ClosedNetworkSim:
         self.now = t_done
         q = self.queues[node]
         tid, disp_step, disp_time = q.popleft()
-        # delay in CS steps: completions strictly between dispatch and this one
-        self.delays[node].append(self.step_idx - disp_step)
-        self.time_delays[node].append(t_done - disp_time)
+        if self._record:
+            # delay in CS steps: completions strictly between dispatch and this
+            i = self._dlen
+            if i >= self._dcap:
+                self._grow_delay_buffers()
+            self._d_node[i] = node
+            self._d_steps[i] = self.step_idx - disp_step
+            self._d_time[i] = t_done - disp_time
+            self._dlen = i + 1
         self._change(node, -1)
         if q:
             self._start_service(node)

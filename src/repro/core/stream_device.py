@@ -1,0 +1,477 @@
+"""JAX-native closed-Jackson-network simulator + adaptive sampling control.
+
+`queue_sim.ClosedNetworkSim` is the host-side oracle: exact, per-event
+Python.  This module is the same closed network as a *device-resident* scan
+step, so the event stream can be generated inside the compiled training
+program (`engine_scan.make_runner(stream="device")`) instead of being
+pre-simulated on the host and replayed:
+
+  * `StreamState` carries per-node queue occupancy, fixed-shape ``(n, C)``
+    FIFO ring buffers of slot ids and per-node head/tail counters — the
+    device analogue of the host simulator's deques;
+  * `stream_step` advances one CS step: the exponential completion race is
+    sampled by inverse-CDF over the busy-rate vector (the same distribution
+    as ``categorical(mu * busy_mask)``, but driven by pre-drawn uniform
+    blocks — per-step Gumbel/threefry sampling costs ~10x more on CPU), the
+    dispatch draw comes from ``p`` the same way, and the step emits the same
+    ``(J, K, t, slot)`` tuple `queue_sim.EventStream` carries;
+  * `StatsState`/`stats_step` accumulate running occupancy, busy time,
+    completion counts and FIFO delays on device — the observables the
+    adaptive control loop (and the parity tests) consume;
+  * the control-plane section ports the exact Jackson analysis to ``jnp``:
+    `mva_throughput_delays` (Mean Value Analysis — mathematically identical
+    to Buzen-based `jackson.JacksonNetwork.expected_delays`, but a C-length
+    scan of O(n) vectorized ops), `optimal_eta_jnp` (cubic stationary point
+    by guarded Newton + the Theorem-1 cap) and `make_bound_value_and_grad`
+    (the Theorem-1 objective G(p, eta*(p)) with exact simplex gradients via
+    AD through the MVA recurrence — the `jnp` port of
+    `sampling.bound_value_and_grad`);
+  * `ctrl_refresh` is one control-loop update: re-estimate per-node service
+    rates from observed (completions, busy time), then take a few
+    exponentiated-gradient steps on the bound — `sampling.optimize_general`
+    running *inside* the compiled program on *measured* rates.
+
+Only exponential service is supported on device (the race relies on
+memorylessness); ``service="det"`` stays host-only.  The stream is
+deterministic given the PRNG key but does **not** reproduce the host
+simulator's realization — law-level parity is locked in
+tests/test_stream_device.py (chi-square, Little's law, delay means).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from .queue_sim import EventStream
+from .theory import BoundConstants
+
+__all__ = [
+    "StreamState",
+    "StatsState",
+    "Event",
+    "stream_init",
+    "stream_step",
+    "stats_init",
+    "stats_step",
+    "stats_stream_fn",
+    "generate_stream",
+    "mva_throughput_delays",
+    "optimal_eta_jnp",
+    "generalized_bound_jnp",
+    "make_bound_value_and_grad",
+    "ctrl_refresh",
+    "estimate_mu",
+]
+
+
+class StreamState(NamedTuple):
+    """Device state of the closed network (one scenario)."""
+
+    occ: Any    # (n,) int32 — queue length per node (X_i)
+    ring: Any   # (n, C) int32 — FIFO ring buffer of slot ids per node
+    head: Any   # (n,) int32 — pop counter per node (ring index = head % C)
+    tail: Any   # (n,) int32 — push counter per node
+    t: Any      # () float32 — physical time
+
+
+class Event(NamedTuple):
+    """One CS step, as emitted by `stream_step` (matches EventStream columns)."""
+
+    j: Any      # completing client J_k
+    k: Any      # newly sampled client K_{k+1}
+    t: Any      # physical completion time
+    slot: Any   # ring-buffer slot of the completing task (freed & reused)
+    dt: Any     # time since the previous CS step
+
+
+class StatsState(NamedTuple):
+    """Running observables accumulated on device (one scenario)."""
+
+    occ_sum: Any    # (n,) int32 — sum over steps of post-step X_{i,k} (Palm)
+    occ_tw: Any     # (n,) float32 — time-weighted integral of X_i(t)
+    busy_t: Any     # (n,) float32 — integral of 1{X_i > 0} dt
+    comp: Any       # (n,) int32 — completions per node
+    delay_sum: Any  # (n,) float32 — sum of CS-step delays per node
+    slot_step: Any  # (C,) int32 — dispatch step of the task in each slot
+
+
+def stream_init(key, n: int, C: int, p, init: str = "distinct"):
+    """Initial placement of the C tasks.  Returns (state, init_nodes).
+
+    ``"distinct"`` places the tasks on C distinct clients (uniform random
+    subset; round-robin when C > n), ``"sampled"`` draws C iid clients from
+    ``p`` — the same two conventions as `queue_sim.SimConfig.initial`.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if init == "distinct":
+        if C <= n:
+            nodes = jax.random.permutation(key, n)[:C].astype(jnp.int32)
+        else:
+            nodes = (jnp.arange(C, dtype=jnp.int32) % n)
+    elif init == "sampled":
+        cdf = jnp.cumsum(p)
+        u = jax.random.uniform(key, (C,))
+        nodes = jnp.minimum(
+            jnp.searchsorted(cdf, u, side="right"), n - 1
+        ).astype(jnp.int32)
+    else:
+        raise ValueError(init)
+    # FIFO position of task s at its node = number of earlier tasks there
+    eq = nodes[None, :] == nodes[:, None]
+    pos = jnp.sum(jnp.tril(eq, -1), axis=1).astype(jnp.int32)
+    occ = jnp.zeros(n, jnp.int32).at[nodes].add(1)
+    ring = jnp.zeros((n, C), jnp.int32).at[nodes, pos].set(
+        jnp.arange(C, dtype=jnp.int32)
+    )
+    state = StreamState(
+        occ=occ,
+        ring=ring,
+        head=jnp.zeros(n, jnp.int32),
+        tail=occ,
+        t=jnp.float32(0.0),
+    )
+    return state, nodes
+
+
+def stream_step(state: StreamState, mu, xs) -> tuple[StreamState, Event]:
+    """One CS step of the closed network.
+
+    ``xs = (u_race, u_exp, k_new)``: two pre-drawn uniforms (completion race
+    and holding time) plus the pre-sampled dispatch target K_{k+1} ~ p.  With
+    exponential service the network is a CTMC, so given the occupancy the
+    next completion is at node j w.p. mu_j 1{X_j>0} / sum(...) after an
+    Exp(sum) holding time — no per-node residual clocks needed.
+    """
+    import jax.numpy as jnp
+
+    u_race, u_exp, k_new = xs
+    occ, ring, head, tail, t = state
+    n, C = ring.shape
+    rates = jnp.where(occ > 0, mu, 0.0)
+    cr = jnp.cumsum(rates)
+    tot = cr[-1]
+    dt = -jnp.log1p(-u_exp) / tot
+    t = t + dt
+    j = jnp.minimum(
+        jnp.searchsorted(cr, u_race * tot, side="right"), n - 1
+    ).astype(jnp.int32)
+    # pop the oldest in-flight task at j; its freed slot hosts the dispatch
+    s = ring[j, head[j] % C]
+    head = head.at[j].add(1)
+    occ = occ.at[j].add(-1)
+    ring = ring.at[k_new, tail[k_new] % C].set(s)
+    tail = tail.at[k_new].add(1)
+    occ = occ.at[k_new].add(1)
+    return (
+        StreamState(occ=occ, ring=ring, head=head, tail=tail, t=t),
+        Event(j=j, k=k_new, t=t, slot=s, dt=dt),
+    )
+
+
+def stats_init(n: int, C: int) -> StatsState:
+    import jax.numpy as jnp
+
+    return StatsState(
+        occ_sum=jnp.zeros(n, jnp.int32),
+        occ_tw=jnp.zeros(n, jnp.float32),
+        busy_t=jnp.zeros(n, jnp.float32),
+        comp=jnp.zeros(n, jnp.int32),
+        delay_sum=jnp.zeros(n, jnp.float32),
+        slot_step=jnp.zeros(C, jnp.int32),
+    )
+
+
+def stats_step(stats: StatsState, ev: Event, occ_pre, occ_post, k) -> StatsState:
+    """Accumulate observables for step k (0-based).
+
+    ``occ_pre`` is the pre-step occupancy (the state that persisted over
+    ``ev.dt`` — its time integral is the quantity product form predicts),
+    ``occ_post`` the post-step occupancy (the X_{i,k} the Palm accumulators
+    of the host simulator count).
+    """
+    import jax.numpy as jnp
+
+    delay = (k - stats.slot_step[ev.slot]).astype(jnp.float32)
+    return StatsState(
+        occ_sum=stats.occ_sum + occ_post,
+        occ_tw=stats.occ_tw + occ_pre.astype(jnp.float32) * ev.dt,
+        busy_t=stats.busy_t + jnp.where(occ_pre > 0, ev.dt, 0.0),
+        comp=stats.comp.at[ev.j].add(1),
+        delay_sum=stats.delay_sum.at[ev.j].add(delay),
+        slot_step=stats.slot_step.at[ev.slot].set(k + 1),
+    )
+
+
+def _network_scan(n: int, C: int, T: int, init: str, emit_events: bool):
+    """Shared scan harness: T fused CS steps of stream_step + stats_step.
+
+    Returns ``gen(key, mu, p) -> (init_nodes, events | None, stats)`` where
+    ``events = (J, K, t, slot, delay)`` arrays when ``emit_events`` (the
+    exportable stream) and None otherwise (the cheaper stats-only pass the
+    adaptive control loop and the stream benchmarks consume).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def gen(key, mu, p):
+        k_init, k_race, k_exp, k_disp = jax.random.split(key, 4)
+        state, init_nodes = stream_init(k_init, n, C, p, init=init)
+        u_race = jax.random.uniform(k_race, (T,))
+        u_exp = jax.random.uniform(k_exp, (T,))
+        # all T dispatch draws in one vectorized inverse-CDF op
+        K = jnp.minimum(
+            jnp.searchsorted(jnp.cumsum(p), jax.random.uniform(k_disp, (T,)),
+                             side="right"),
+            n - 1,
+        ).astype(jnp.int32)
+        stats = stats_init(n, C)
+
+        def body(carry, xs):
+            state, stats, k = carry
+            occ_pre = state.occ
+            state, ev = stream_step(state, mu, xs)
+            delay = k - stats.slot_step[ev.slot]  # before stats_step advances it
+            stats = stats_step(stats, ev, occ_pre, state.occ, k)
+            ys = (ev.j, ev.k, ev.t, ev.slot, delay) if emit_events else None
+            return (state, stats, k + 1), ys
+
+        carry = (state, stats, jnp.int32(0))
+        (state, stats, _), events = jax.lax.scan(body, carry, (u_race, u_exp, K))
+        return init_nodes, events, stats
+
+    return gen
+
+
+@lru_cache(maxsize=32)
+def _stream_generator(n: int, C: int, T: int, init: str):
+    import jax
+
+    return jax.jit(_network_scan(n, C, T, init, emit_events=True))
+
+
+@lru_cache(maxsize=32)
+def stats_stream_fn(n: int, C: int, T: int, init: str = "distinct"):
+    """Stats-only fused network scan: ``gen(key, mu, p) -> StatsState``.
+
+    No per-event outputs — just the running occupancy / busy-time /
+    completion / delay accumulators.  Returned un-jitted so callers compose
+    it with vmap/pmap over scenarios before compiling.
+    """
+    base = _network_scan(n, C, T, init, emit_events=False)
+    return lambda key, mu, p: base(key, mu, p)[2]
+
+
+def generate_stream(
+    mu,
+    p,
+    C: int,
+    T: int,
+    seed: int | Any = 0,
+    init: str = "distinct",
+) -> EventStream:
+    """Simulate T CS steps on device and export a host `EventStream`.
+
+    Drop-in replacement for `queue_sim.export_stream` (exponential service
+    only): same arrays, same invariants, different — but law-identical —
+    realization.  ``seed`` may be an int or a PRNG key.  The jitted
+    generator is cached per (n, C, T, init), so sweeps over (mu, p, seed)
+    reuse one compiled program.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    mu = np.asarray(mu, dtype=np.float64)
+    p = np.asarray(p, dtype=np.float64)
+    n = mu.size
+    if abs(p.sum() - 1.0) > 1e-8:
+        raise ValueError("p must sum to 1")
+    key = jax.random.PRNGKey(seed) if np.ndim(seed) == 0 else seed
+    gen = _stream_generator(n, int(C), int(T), init)
+    init_nodes, (J, K, t, slot, delays), stats = gen(
+        key, jnp.asarray(mu, jnp.float32), jnp.asarray(p, jnp.float32)
+    )
+    return EventStream(
+        J=np.asarray(J, np.int32),
+        K=np.asarray(K, np.int32),
+        t=np.asarray(t, np.float64),
+        slot=np.asarray(slot, np.int32),
+        init_nodes=np.asarray(init_nodes, np.int32),
+        n=n,
+        C=int(C),
+        p=p.copy(),
+        delay_steps=np.asarray(delays, np.int32),
+        queue_len_sum=np.asarray(stats.occ_sum, np.float64),
+        queue_len_tw=np.asarray(stats.occ_tw, np.float64),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# jnp control plane: exact Jackson analysis + Theorem-1 bound, traceable
+# ---------------------------------------------------------------------- #
+def mva_throughput_delays(mu, p, C: int, normalized: bool = True):
+    """Exact (m, lam) of the closed network via Mean Value Analysis.
+
+    The MVA recurrence over populations M = 1..C
+
+        W = (1 + Q_{M-1}) / mu,   lam_M = M / (p . W),   Q_M = lam_M p W
+
+    computes the arrival-theorem queue lengths Q_{C-1} and throughput
+    Lambda(C) without normalizing constants — identical values to the
+    Buzen pipeline in `jackson.JacksonNetwork` (locked in tests), but a
+    C-step scan of O(n) vectorized ops that AD flows through cheaply.
+    Returns ``(m, lam)``: delays in CS steps (Prop. 3 estimate, with the
+    (C-1)/C Little's-law normalization by default) and the throughput.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    mu = jnp.asarray(mu)
+    p = jnp.asarray(p)
+    n = p.shape[0]
+
+    def body(Q, M):
+        W = (1.0 + Q) / mu
+        lam = M / jnp.dot(p, W)
+        return lam * p * W, lam
+
+    Ms = jnp.arange(1, C + 1, dtype=p.dtype)
+    Q_C, lams = jax.lax.scan(body, jnp.zeros(n, p.dtype), Ms)
+    lam_C = lams[-1]
+    if C == 1:
+        Q_prev = jnp.zeros(n, p.dtype)
+    else:
+        # invert the last MVA step: Q_C = lam_C p (1 + Q_{C-1}) / mu
+        Q_prev = mu * Q_C / (lam_C * p) - 1.0
+    m = lam_C * (Q_prev + 1.0) / mu
+    if normalized:
+        m = m * (C - 1.0) / C
+    return m, lam_C
+
+
+def generalized_bound_jnp(eta, p, m, k: BoundConstants):
+    """G(p, eta) of Eq. (3) — jnp port of `theory.generalized_bound`."""
+    import jax.numpy as jnp
+
+    n = p.shape[0]
+    n2 = float(n) ** 2
+    t1 = k.A / (eta * (k.T + 1))
+    t2 = eta * k.L * k.B * jnp.sum(1.0 / (n2 * p))
+    t3 = eta**2 * k.L**2 * k.B * k.C * jnp.sum(m / (n2 * p**2))
+    return t1 + t2 + t3
+
+
+def optimal_eta_jnp(p, m, k: BoundConstants, newton_iters: int = 20):
+    """argmin_eta G(p, eta) s.t. eta <= eta_max, traceable.
+
+    The stationary point solves 2c eta^3 + b eta^2 = D (unique positive
+    root); Newton from eta0 = cbrt(D / 2c) >= root converges monotonically
+    (f is convex increasing on eta > 0).  The Theorem-1 cap
+    min(a, b) mirrors `theory.eta_max_components`.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n = p.shape[0]
+    n2 = float(n) ** 2
+    D = k.A / (k.T + 1)
+    b = k.L * k.B * jnp.sum(1.0 / (n2 * p))
+    c = k.L**2 * k.B * k.C * jnp.sum(m / (n2 * p**2))
+
+    eta0 = jnp.cbrt(D / (2.0 * c))
+
+    def newton(eta, _):
+        f = 2.0 * c * eta**3 + b * eta**2 - D
+        fp = 6.0 * c * eta**2 + 2.0 * b * eta
+        return eta - f / fp, None
+
+    eta, _ = jax.lax.scan(newton, eta0, None, length=newton_iters)
+    growth = 1.0 + k.rho**2
+    m_k = jnp.sum(m / (n2 * p**2))
+    a_cap = 1.0 / jnp.sqrt(16.0 * k.L**2 * k.C * m_k * growth)
+    b_cap = n2 / (8.0 * k.L * growth * jnp.sum(1.0 / p))
+    return jnp.minimum(eta, jnp.minimum(a_cap, b_cap))
+
+
+@lru_cache(maxsize=32)
+def _bound_value_and_grad(k_tuple):
+    import jax
+
+    k = BoundConstants(*k_tuple)
+
+    def objective(p, mu):
+        m, _ = mva_throughput_delays(mu, p, k.C)
+        eta = optimal_eta_jnp(p, m, k)
+        return generalized_bound_jnp(eta, p, m, k)
+
+    return jax.value_and_grad(objective)
+
+
+def make_bound_value_and_grad(k: BoundConstants):
+    """(value, grad) of f(p) = G(p, eta*(p)) with delays from MVA — the jnp
+    port of `sampling.bound_value_and_grad`.
+
+    The gradient is exact AD through the MVA recurrence (the delay channel),
+    the explicit 1/p terms, and eta*(p): when the cubic stationary point is
+    interior the eta channel vanishes by the envelope theorem (dG/deta = 0
+    there, so the Newton iterates' sensitivity is multiplied by ~0); when
+    the cap is active, ``jnp.minimum`` routes the chain rule through the
+    active branch — the same case split `sampling.bound_value_and_grad`
+    does by hand.  Cached per BoundConstants.
+    """
+    return _bound_value_and_grad(
+        (k.A, k.L, k.B, int(k.C), int(k.T), k.rho)
+    )
+
+
+def estimate_mu(comp, busy_t, prior_weight: float = 1.0):
+    """Per-node service-rate MLE from observed (completions, busy time).
+
+    While a node is busy its completions are Poisson(mu_i), so
+    mu_i ~ comp_i / busy_i.  Nodes with little observed busy time shrink
+    toward the busy-time-weighted global mean rate (``prior_weight``
+    pseudo-completions at the global rate).
+    """
+    import jax.numpy as jnp
+
+    comp = comp.astype(jnp.float32)
+    mu_bar = jnp.sum(comp) / jnp.maximum(jnp.sum(busy_t), 1e-20)
+    return (comp + prior_weight) / (busy_t + prior_weight / mu_bar)
+
+
+def ctrl_refresh(
+    p,
+    comp,
+    busy_t,
+    k: BoundConstants,
+    lr: float = 0.3,
+    iters: int = 4,
+    floor_scale: float = 1e-5,
+):
+    """One adaptive-sampling refresh: re-optimize p from running estimates.
+
+    Estimates per-node rates from the observed stream, then takes ``iters``
+    exponentiated-gradient steps on the Theorem-1 bound (the same projected
+    mirror-descent update as `sampling.optimize_general`, with the analytic
+    jnp gradient).  Pure function of device values — traceable, vmappable.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    vg = make_bound_value_and_grad(k)
+    mu_hat = estimate_mu(comp, busy_t)
+    n = p.shape[0]
+    floor = floor_scale / n
+
+    def one(p, _):
+        _, g = vg(p, mu_hat)
+        g = g - jnp.dot(g, p)
+        p = p * jnp.exp(-lr * g / (jnp.max(jnp.abs(g)) + 1e-12))
+        p = jnp.maximum(p, floor)
+        return p / jnp.sum(p), None
+
+    p, _ = jax.lax.scan(one, p, None, length=iters)
+    return p

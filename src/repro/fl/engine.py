@@ -25,7 +25,8 @@ from repro.core import (
     ServerConfig,
     SimConfig,
     export_stream,
-    make_runner,
+    jit_fused_runner,
+    jit_runner,
     optimize_two_cluster,
     run_favano,
     run_fedavg,
@@ -192,6 +193,24 @@ def _accuracy_fn(model: MLPClassifier, data: FederatedClassification, batch: int
     return acc
 
 
+def _cached_fl_setup(data: FederatedClassification, seed: int):
+    """(model, device clients, eval fn) memoized on the dataset object.
+
+    The compiled-engine memoization (`jit_runner` / `jit_fused_runner`) keys
+    on the gradient-source and eval-fn *objects*; rebuilding them per
+    `run_matrix` call would defeat it.  Caching them on ``data`` lets sweeps
+    (e.g. over eval cadence, eta or sampling policies) reuse one compiled
+    program — and the cache dies with the dataset instead of pinning device
+    shards globally.
+    """
+    cache = data.__dict__.setdefault("_fl_setup_cache", {})
+    if seed not in cache:
+        model = MLPClassifier(data.dim, data.num_classes, seed=seed)
+        clients = DeviceFLClients(data, model, seed=seed)
+        cache[seed] = (model, clients, _accuracy_fn(model, data))
+    return cache[seed]
+
+
 def run_experiment(
     flc: FLConfig,
     method: str,
@@ -205,23 +224,35 @@ def run_experiment(
     ``engine`` (default: ``flc.engine``) picks the server loop for the
     asynchronous methods: "python" is the per-event reference loop, "scan"
     the compiled device-resident engine (one XLA program for the whole run).
-    The synchronous baselines (fedavg, favano) always use the Python loop.
+    ``flc.stream`` picks the scan engine's event source ("host" replay vs
+    fused "device" generation — the latter implies the scan engine and is
+    required for ``flc.adaptive`` sampling).  The synchronous baselines
+    (fedavg, favano) always use the Python loop.
     """
-    engine = flc.engine if engine is None else engine
+    if flc.stream == "device":
+        if engine == "python":
+            raise ValueError("stream='device' requires the scan engine")
+        engine = "scan"
+    else:
+        engine = flc.engine if engine is None else engine
     if engine not in ("python", "scan"):
         raise ValueError(engine)
     data = data or FederatedClassification(n_clients=flc.n_clients, seed=flc.seed)
-    model = MLPClassifier(data.dim, data.num_classes, seed=flc.seed)
     mu = make_client_speeds(flc.n_clients, flc.frac_fast, flc.speed_ratio, seed=flc.seed)
-    acc_fn = _accuracy_fn(model, data)
 
     async_method = method in ("gen_async", "async_sgd", "fedbuff")
     use_scan = engine == "scan" and async_method
+    if flc.adaptive and async_method and not use_scan:
+        raise ValueError(
+            "adaptive sampling requires engine='scan' with stream='device'"
+        )
     clients: FLClients | DeviceFLClients
     if use_scan:
-        clients = DeviceFLClients(data, model, seed=flc.seed)
+        model, clients, acc_fn = _cached_fl_setup(data, flc.seed)
     else:
+        model = MLPClassifier(data.dim, data.num_classes, seed=flc.seed)
         clients = FLClients(data, model)
+        acc_fn = _accuracy_fn(model, data)
 
     base = ServerConfig(
         n=flc.n_clients,
@@ -233,6 +264,9 @@ def run_experiment(
         seed=flc.seed,
         eval_every=eval_every,
         engine="scan" if use_scan else "python",
+        stream=flc.stream if use_scan else "host",
+        adaptive=flc.adaptive if use_scan else False,
+        refresh_every=flc.refresh_every,
     )
 
     if method == "gen_async":
@@ -265,6 +299,10 @@ def run_experiment(
     if tr.delays is not None:
         delays = np.array([np.mean(d) if d else np.nan for d in tr.delays])
     grad_calls = flc.server_steps if use_scan else clients.grad_calls
+    extras = {"grad_calls": grad_calls, "engine": "scan" if use_scan else "python"}
+    extras.update(getattr(tr, "extras", {}))  # device stream: p_final, p_traj, ...
+    if delays is None and "mean_delays" in extras:
+        delays = extras.pop("mean_delays")
     return FLRun(
         name=method,
         eval_steps=ev_steps,
@@ -272,7 +310,7 @@ def run_experiment(
         eval_times=times,
         mean_delays=delays,
         final_params=w,
-        extras={"grad_calls": grad_calls, "engine": "scan" if use_scan else "python"},
+        extras=extras,
     )
 
 
@@ -291,6 +329,8 @@ class MatrixResult:
     eval_times: np.ndarray    # (S, P, H, n_evals) physical time at each eval
     final_acc: np.ndarray     # (S, P, H)
     p_vectors: np.ndarray     # (P, H, n) sampling vector per (policy, ratio)
+    extras: dict = field(default_factory=dict)  # device stream: p_final,
+                                                # mean_delays, comp, ...
 
 
 def run_matrix(
@@ -301,25 +341,40 @@ def run_matrix(
     eta: float = 0.05,
     eval_every: int = 50,
     data: FederatedClassification | None = None,
+    stream: str | None = None,
 ) -> MatrixResult:
     """Run the whole scenario grid in ONE compiled call.
 
-    Event streams (one per scenario) are pre-simulated on the host — cheap,
-    O(T) each — then the scan engine is `jax.vmap`-ed over the stacked
-    streams, so seeds x sampling policies x heterogeneity levels all train
-    simultaneously inside a single XLA program.  The model/dataset are shared
-    across scenarios; only the queueing clock, sampling vector and event
-    realization differ.
+    ``stream`` (default ``flc.stream``) picks the event source:
+
+      "host"    event streams (one per scenario) are pre-simulated on the
+                host — O(T) Python each, serial in the number of scenarios —
+                then the scan engine is `jax.vmap`-ed over the stacked
+                arrays.
+      "device"  zero host pre-simulation: the fused engine generates every
+                scenario's closed-network events inside the one compiled
+                program, vmapped over (mu, p, key).  Exponential service
+                only; supports ``flc.adaptive`` sampling (the "uniform"
+                policy rows then double as adaptive-from-uniform runs).
+
+    The model/dataset are shared across scenarios; only the queueing clock,
+    sampling vector and event realization differ.  Pass a persistent
+    ``data`` object to reuse the compiled program across calls (the jitted
+    runner is memoized on the dataset's cached gradient source, and the
+    eval cadence is a static call-time argument, so sweeping ``eval_every``
+    does not rebuild the runner).
     """
+    stream = flc.stream if stream is None else stream
+    if stream not in ("host", "device"):
+        raise ValueError(stream)
     speed_ratios = (flc.speed_ratio,) if speed_ratios is None else tuple(speed_ratios)
     seeds, policies = tuple(seeds), tuple(policies)
     data = data or FederatedClassification(n_clients=flc.n_clients, seed=flc.seed)
-    model = MLPClassifier(data.dim, data.num_classes, seed=flc.seed)
-    clients = DeviceFLClients(data, model, seed=flc.seed)
-    acc_fn = _accuracy_fn(model, data)
+    model, clients, acc_fn = _cached_fl_setup(data, flc.seed)
 
     n, C, T = flc.n_clients, flc.concurrency, flc.server_steps
     S, P, H = len(seeds), len(policies), len(speed_ratios)
+    B = S * P * H
     # (policy, ratio) -> (mu, p) is seed-independent: compute each cell once
     mus = {hi: make_client_speeds(n, flc.frac_fast, ratio, seed=flc.seed)
            for hi, ratio in enumerate(speed_ratios)}
@@ -327,31 +382,87 @@ def run_matrix(
     for pi, pol in enumerate(policies):
         for hi in range(H):
             p_vectors[pi, hi] = sampling_for(replace(flc, sampling=pol), mus[hi])
-    Js = np.empty((S * P * H, T), np.int32)
-    slots = np.empty((S * P * H, T), np.int32)
-    scales = np.empty((S * P * H, T), np.float64)
-    t_phys = np.empty((S * P * H, T))
-    b = 0
-    for seed in seeds:
-        for pi in range(P):
-            for hi in range(H):
-                p = p_vectors[pi, hi]
-                stream = export_stream(
-                    SimConfig(mu=mus[hi], p=p, C=C, T=T, service=flc.service, seed=seed)
-                )
-                Js[b], slots[b] = stream.J, stream.slot
-                scales[b] = step_scales(stream, eta, p, flc.weighting)
-                t_phys[b] = stream.t
-                b += 1
-
-    runner = make_runner(
-        clients.device_grad, C=C, eval_fn=acc_fn, eval_every=eval_every
-    )
-    batched = jax.jit(jax.vmap(runner, in_axes=(None, 0, 0, 0)))
     w0 = model.init_params
-    w_final, evals = batched(
-        w0, jnp.asarray(Js), jnp.asarray(slots), jnp.asarray(scales)
-    )
+    extras: dict = {"stream": stream}
+
+    if stream == "device":
+        if flc.service != "exp":
+            raise ValueError(
+                "stream='device' supports exponential service only; use "
+                "stream='host' for service='det'"
+            )
+        mu_b = np.empty((B, n))
+        p_b = np.empty((B, n))
+        keys = []
+        b = 0
+        for seed in seeds:
+            base_key = jax.random.PRNGKey(seed)
+            for pi in range(P):
+                for hi in range(H):
+                    mu_b[b], p_b[b] = mus[hi], p_vectors[pi, hi]
+                    keys.append(jax.random.fold_in(base_key, pi * H + hi))
+                    b += 1
+        # shard scenarios across devices when they divide evenly (e.g. CPU
+        # with --xla_force_host_platform_device_count, or a TPU/GPU pod) —
+        # the host-export path is serial Python and cannot
+        D = jax.device_count()
+        shard = D if (D > 1 and B % D == 0) else 1
+        runner = jit_fused_runner(
+            clients.device_grad, n, C, T,
+            vmap_scenarios=True,
+            shard_devices=shard,
+            weighting=flc.weighting,
+            eval_fn=acc_fn,
+            eval_every=eval_every,
+            adaptive=flc.adaptive,
+            refresh_every=flc.refresh_every,
+        )
+        args = (jnp.asarray(mu_b), jnp.asarray(p_b), jnp.stack(keys))
+        if shard > 1:
+            args = tuple(a.reshape((shard, B // shard) + a.shape[1:]) for a in args)
+        w_final, evals, dev_extras = runner(w0, *args, eta)
+        if shard > 1:
+            unshard = lambda x: np.asarray(x).reshape((B,) + x.shape[2:])
+            w_final = jax.tree_util.tree_map(
+                lambda x: jnp.asarray(x).reshape((B,) + x.shape[2:]), w_final
+            )
+            evals = unshard(evals)
+            dev_extras = {k: unshard(v) for k, v in dev_extras.items()}
+        t_phys = np.asarray(dev_extras["t"], np.float64)
+        comp = np.asarray(dev_extras["comp"], np.float64)
+        extras.update(
+            p_final=np.asarray(dev_extras["p_final"], np.float64).reshape(S, P, H, n),
+            mean_delays=(np.asarray(dev_extras["delay_sum"], np.float64)
+                         / np.maximum(comp, 1.0)).reshape(S, P, H, n),
+            comp=comp.reshape(S, P, H, n),
+            occ_mean=np.asarray(dev_extras["occ_mean"], np.float64).reshape(S, P, H, n),
+        )
+    else:
+        Js = np.empty((B, T), np.int32)
+        slots = np.empty((B, T), np.int32)
+        scales = np.empty((B, T), np.float64)
+        t_phys = np.empty((B, T))
+        b = 0
+        for seed in seeds:
+            for pi in range(P):
+                for hi in range(H):
+                    p = p_vectors[pi, hi]
+                    es = export_stream(
+                        SimConfig(mu=mus[hi], p=p, C=C, T=T,
+                                  service=flc.service, seed=seed)
+                    )
+                    Js[b], slots[b] = es.J, es.slot
+                    scales[b] = step_scales(es, eta, p, flc.weighting)
+                    t_phys[b] = es.t
+                    b += 1
+        runner = jit_runner(
+            clients.device_grad, C, eval_fn=acc_fn, eval_every=eval_every,
+            vmap_streams=True,
+        )
+        w_final, evals = runner(
+            w0, jnp.asarray(Js), jnp.asarray(slots), jnp.asarray(scales)
+        )
+
     final_acc = np.asarray(jax.jit(jax.vmap(acc_fn))(w_final))
     evals = np.asarray(evals)
     n_evals = evals.shape[1]
@@ -366,4 +477,5 @@ def run_matrix(
         eval_times=eval_times.reshape(S, P, H, n_evals),
         final_acc=final_acc.reshape(S, P, H),
         p_vectors=p_vectors,
+        extras=extras,
     )

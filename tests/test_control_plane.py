@@ -278,7 +278,7 @@ class TestIncrementalSimulator:
         mu = np.array([1.0, 2.0, 0.5])
         p = np.array([0.3, 0.3, 0.4])
         net = JacksonNetwork(mu=mu, p=p, C=4)
-        res = simulate(SimConfig(mu=mu, p=p, C=4, T=120_000, seed=3))
+        res = simulate(SimConfig(mu=mu, p=p, C=4, T=120_000, seed=3, record_delays=True))
         np.testing.assert_allclose(
             res.time_avg_queue_lengths(), net.mean_queue_lengths(), rtol=0.05
         )

@@ -179,6 +179,37 @@ class TestFLScanEngine:
         # different minibatch RNG streams, same law: final accuracy comparable
         assert abs(accs["python"] - accs["scan"]) < 0.15
 
+    def test_jit_runner_memo_survives_eval_cadence_sweep(self):
+        """The memo key excludes eval_every: a cadence sweep reuses ONE
+        runner object (jit's own cache handles per-cadence tracing)."""
+        from repro.core import jit_runner
+
+        prob = Quadratic(self.N if hasattr(self, "N") else 6)
+        r1 = jit_runner(prob.device_grad, 3, eval_fn=None, eval_every=0)
+        r2 = jit_runner(prob.device_grad, 3, eval_fn=None, eval_every=50)
+        assert r1.func is r2.func  # same underlying jitted callable
+        assert len(prob.__dict__["_scan_runner_cache"]) == 1
+        # different algorithm shape -> different entry
+        jit_runner(prob.device_grad, 3, fedbuff_Z=5)
+        assert len(prob.__dict__["_scan_runner_cache"]) == 2
+
+    def test_run_matrix_reuses_setup_across_calls(self):
+        """Sweeping eval cadence over one dataset keeps one cached gradient
+        source (and with it the memoized compiled runner)."""
+        from repro.configs.base import FLConfig
+        from repro.data.pipeline import FederatedClassification
+        from repro.fl import run_matrix
+
+        flc = FLConfig(n_clients=8, concurrency=3, server_steps=60)
+        data = FederatedClassification(n_clients=8, seed=0)
+        for ev in (30, 20):
+            run_matrix(flc, seeds=(0,), policies=("uniform",),
+                       speed_ratios=(1.0,), eval_every=ev, data=data)
+        (_, clients, _), = data.__dict__["_fl_setup_cache"].values()
+        host_keys = [k for k in clients.__dict__["_scan_runner_cache"]
+                     if k[0] == "host"]
+        assert len(host_keys) == 1  # one runner across both cadences
+
     def test_run_matrix_shapes(self):
         from repro.configs.base import FLConfig
         from repro.fl import run_matrix
@@ -234,7 +265,9 @@ class TestStreamProperties:
         n = 5
         p = _nonuniform_p(n, seed=seed + 1)
         mu = np.random.default_rng(seed).uniform(0.3, 4.0, n)
-        _check_stream(export_stream(SimConfig(mu=mu, p=p, C=C, T=400, seed=seed)))
+        _check_stream(
+            export_stream(SimConfig(mu=mu, p=p, C=C, T=400, seed=seed, record_delays=True))
+        )
 
     def test_K_frequencies_match_p_chi_square(self):
         from scipy.stats import chi2
@@ -268,7 +301,8 @@ if HAVE_HYPOTHESIS:
         service = draw(st.sampled_from(["exp", "det"]))
         mu = np.array([draw(st.floats(0.2, 8.0)) for _ in range(n)])
         praw = np.array([draw(st.floats(0.05, 1.0)) for _ in range(n)])
-        return SimConfig(mu=mu, p=praw / praw.sum(), C=C, T=T, service=service, seed=seed)
+        return SimConfig(mu=mu, p=praw / praw.sum(), C=C, T=T, service=service, seed=seed,
+                         record_delays=True)
 
     class TestStreamPropertiesHypothesis:
         @given(cfg=stream_configs())

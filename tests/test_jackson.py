@@ -98,7 +98,7 @@ class TestAgainstSimulation:
         mu = np.array([1.0, 2.0, 0.5])
         p = np.array([0.3, 0.3, 0.4])
         net = JacksonNetwork(mu=mu, p=p, C=4)
-        res = simulate(SimConfig(mu=mu, p=p, C=4, T=150_000, seed=5))
+        res = simulate(SimConfig(mu=mu, p=p, C=4, T=150_000, seed=5, record_delays=True))
         theory = [(net.mean_queue_lengths(ntasks=3)[i] + 1) / mu[i] for i in range(3)]
         sim = [np.mean(d) for d in res.time_delays]
         np.testing.assert_allclose(sim, theory, rtol=0.05)
@@ -108,7 +108,7 @@ class TestAgainstSimulation:
         mu = np.array([3.0, 3.0, 1.0, 1.0])
         p = np.full(4, 0.25)
         net = JacksonNetwork(mu=mu, p=p, C=8)
-        res = simulate(SimConfig(mu=mu, p=p, C=8, T=200_000, seed=7))
+        res = simulate(SimConfig(mu=mu, p=p, C=8, T=200_000, seed=7, record_delays=True))
         est = net.expected_delays()
         sim = res.mean_delay_per_node()
         assert est[2] > est[0]  # slow nodes wait longer (in steps)
@@ -120,7 +120,7 @@ class TestAgainstSimulation:
         """Mean delay over completed tasks = C - 1 (each task sees C-1 others)."""
         mu = np.array([2.0, 1.0])
         p = np.array([0.6, 0.4])
-        res = simulate(SimConfig(mu=mu, p=p, C=5, T=100_000, seed=11))
+        res = simulate(SimConfig(mu=mu, p=p, C=5, T=100_000, seed=11, record_delays=True))
         all_delays = np.concatenate([np.asarray(d) for d in res.delays])
         assert np.mean(all_delays) == pytest.approx(4.0, rel=0.03)
 

@@ -17,7 +17,8 @@ def sim_configs(draw):
     service = draw(st.sampled_from(["exp", "det"]))
     mu = np.array([draw(st.floats(0.2, 8.0)) for _ in range(n)])
     praw = np.array([draw(st.floats(0.05, 1.0)) for _ in range(n)])
-    return SimConfig(mu=mu, p=praw / praw.sum(), C=C, T=T, service=service, seed=seed)
+    return SimConfig(mu=mu, p=praw / praw.sum(), C=C, T=T, service=service, seed=seed,
+                     record_delays=True)
 
 
 class TestInvariants:
@@ -71,6 +72,8 @@ class TestInvariants:
         """Paper: delay statistics barely depend on the service distribution."""
         mu = np.array([2.0] * 3 + [1.0] * 3)
         p = np.full(6, 1 / 6)
-        d_exp = simulate(SimConfig(mu=mu, p=p, C=12, T=60_000, service="exp", seed=0)).mean_delay_per_node()
-        d_det = simulate(SimConfig(mu=mu, p=p, C=12, T=60_000, service="det", seed=0)).mean_delay_per_node()
+        d_exp = simulate(SimConfig(mu=mu, p=p, C=12, T=60_000, service="exp", seed=0,
+                                   record_delays=True)).mean_delay_per_node()
+        d_det = simulate(SimConfig(mu=mu, p=p, C=12, T=60_000, service="det", seed=0,
+                                   record_delays=True)).mean_delay_per_node()
         np.testing.assert_allclose(d_exp, d_det, rtol=0.25)

@@ -1,0 +1,431 @@
+"""Device-resident event stream + fused engine + adaptive control loop.
+
+Law-level parity of `stream_device.generate_stream` against the host
+`ClosedNetworkSim` oracle (the realizations differ; the distributions must
+not), structural invariants of the fused engine, exactness of the jnp
+control-plane port, and convergence of the adaptive sampling loop.
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    BoundConstants,
+    JacksonNetwork,
+    ServerConfig,
+    SimConfig,
+    generate_stream,
+    make_bound_value_and_grad,
+    make_runner,
+    mva_throughput_delays,
+    run_fedbuff,
+    run_generalized_async_sgd,
+    simulate,
+)
+from repro.core.sampling import bound_for_p, bound_value_and_grad, optimize_general
+from repro.core.stream_device import optimal_eta_jnp
+from repro.core.theory import optimal_eta
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+def _nonuniform_p(n, seed=1):
+    p = np.random.default_rng(seed).uniform(0.5, 1.5, n)
+    return p / p.sum()
+
+
+def _check_stream(stream):
+    """FIFO conservation, Lemma-9 in-flight count, slot uniqueness, delays.
+
+    Same replay check as tests/test_engine.py, applied to the on-device
+    generator's export — including that the device-computed `delay_steps`
+    match an exact host recomputation from (J, K, slot, init_nodes).
+    """
+    C, n, T = stream.C, stream.n, stream.T
+    fifo = [list() for _ in range(n)]
+    for s, node in enumerate(stream.init_nodes):
+        fifo[node].append((0, int(s)))
+    outstanding = {int(s) for s in range(C)}
+    for k in range(T):
+        j, k_new, s = int(stream.J[k]), int(stream.K[k]), int(stream.slot[k])
+        assert fifo[j], "completion at a client with no outstanding task"
+        disp_step, disp_slot = fifo[j].pop(0)   # FIFO: oldest dispatch completes
+        assert disp_slot == s, "slot must belong to the oldest in-flight task"
+        assert int(stream.delay_steps[k]) == k - disp_step
+        outstanding.discard(s)
+        assert len(outstanding) == C - 1        # Lemma 9: C-1 tasks in flight
+        fifo[k_new].append((k + 1, s))
+        outstanding.add(s)
+        assert len(outstanding) == C            # freed slot reused exactly once
+    assert sum(len(q) for q in fifo) == C
+
+
+class Quadratic:
+    def __init__(self, n, d=4, seed=0):
+        rng = np.random.default_rng(seed)
+        self.c = rng.normal(size=(n, d)).astype(np.float32)
+        self.c_dev = jnp.asarray(self.c)
+        self.d = d
+
+    def grad(self, i, w, k):
+        return w - self.c[i]
+
+    def device_grad(self, j, w, k):
+        return w - self.c_dev[j]
+
+
+# ------------------------------------------------------------------ #
+# device event stream: invariants + distributional parity
+# ------------------------------------------------------------------ #
+class TestDeviceStream:
+    @pytest.mark.parametrize("C,init", [(1, "distinct"), (3, "distinct"),
+                                        (12, "distinct"), (4, "sampled"),
+                                        (9, "distinct")])  # 9 > n: round-robin
+    def test_invariants(self, C, init):
+        n = 5
+        p = _nonuniform_p(n, seed=C + 2)
+        mu = np.random.default_rng(C).uniform(0.3, 4.0, n)
+        _check_stream(generate_stream(mu, p, C, T=400, seed=C, init=init))
+
+    def test_deterministic_given_seed(self):
+        mu, p = np.array([1.0, 2.0]), np.array([0.5, 0.5])
+        s1 = generate_stream(mu, p, C=3, T=500, seed=7)
+        s2 = generate_stream(mu, p, C=3, T=500, seed=7)
+        np.testing.assert_array_equal(s1.J, s2.J)
+        np.testing.assert_array_equal(s1.slot, s2.slot)
+        np.testing.assert_allclose(s1.t, s2.t)
+
+    def test_chi_square_completions_and_dispatches(self):
+        """J and K frequencies match the stationary shares.
+
+        Flow balance on the complete graph gives lambda_i = p_i Lambda, so
+        the completion counts (J) — not just the dispatch draws (K) — must
+        be multinomial-close to T * p.
+        """
+        from scipy.stats import chi2
+
+        n, T = 6, 40_000
+        p = np.array([0.3, 0.25, 0.2, 0.1, 0.1, 0.05])
+        mu = np.random.default_rng(2).uniform(0.5, 4.0, n)
+        stream = generate_stream(mu, p, C=4, T=T, seed=0)
+        crit = chi2.ppf(1 - 1e-3, df=n - 1)
+        for counts in (np.bincount(stream.K, minlength=n),
+                       np.bincount(stream.J, minlength=n)):
+            stat = float(np.sum((counts - T * p) ** 2 / (T * p)))
+            assert stat < crit
+
+    def test_littles_law_and_occupancy(self):
+        """sum_i p_i m_i = C-1 and running occupancy vs product form / oracle."""
+        n, C, T = 6, 4, 40_000
+        p = _nonuniform_p(n, seed=3)
+        mu = np.random.default_rng(4).uniform(0.5, 4.0, n)
+        stream = generate_stream(mu, p, C, T=T, seed=1)
+        # every completed task saw C-1 other completions on average
+        assert np.mean(stream.delay_steps) == pytest.approx(C - 1, rel=0.02)
+        # time-weighted occupancy matches the exact product form
+        net = JacksonNetwork(mu=mu, p=p, C=C)
+        np.testing.assert_allclose(
+            stream.queue_len_tw / stream.t[-1], net.mean_queue_lengths(),
+            rtol=0.12, atol=0.06,
+        )
+        # event-sampled (Palm) occupancy matches the host oracle's Palm view
+        host = simulate(SimConfig(mu=mu, p=p, C=C, T=T, seed=1))
+        np.testing.assert_allclose(
+            stream.queue_len_sum / T, host.queue_len_sum / T, rtol=0.1, atol=0.05
+        )
+
+    def test_delay_means_match_host_sim(self):
+        """Per-node delay means: device stream vs ClosedNetworkSim, same law."""
+        n, C, T = 6, 4, 40_000
+        p = _nonuniform_p(n, seed=1)
+        mu = np.random.default_rng(0).uniform(0.5, 4.0, n)
+        dev = generate_stream(mu, p, C, T=T, seed=0)
+        host = simulate(SimConfig(mu=mu, p=p, C=C, T=T, seed=0, record_delays=True))
+        d_dev = np.array([np.mean(d) for d in dev.delays])
+        d_host = host.mean_delay_per_node()
+        np.testing.assert_allclose(d_dev, d_host, rtol=0.2, atol=0.2)
+        # time axis: throughput agrees between the two simulators
+        assert dev.t[-1] == pytest.approx(host.t[-1], rel=0.05)
+
+    def test_replayable_through_host_engine(self):
+        """A device-generated stream drives the replay engine like a host one."""
+        from repro.core import step_scales
+
+        n, C, T = 6, 3, 300
+        prob = Quadratic(n)
+        p = _nonuniform_p(n)
+        stream = generate_stream(np.ones(n), p, C, T=T, seed=5)
+        scale = step_scales(stream, 0.05, p, "importance")
+        run = make_runner(prob.device_grad, C=C)
+        w, _ = jax.jit(run)(jnp.zeros(prob.d), jnp.asarray(stream.J),
+                            jnp.asarray(stream.slot), jnp.asarray(scale))
+        assert np.all(np.isfinite(np.asarray(w)))
+
+
+# ------------------------------------------------------------------ #
+# jnp control plane == numpy control plane
+# ------------------------------------------------------------------ #
+class TestControlPlanePort:
+    @pytest.mark.parametrize("C", [1, 4, 64])
+    def test_mva_matches_buzen(self, C):
+        n = 16
+        rng = np.random.default_rng(C)
+        mu = rng.uniform(0.5, 8.0, n)
+        p = _nonuniform_p(n, seed=C + 1)
+        net = JacksonNetwork(mu=mu, p=p, C=C)
+        m, lam = mva_throughput_delays(mu, p, C)
+        np.testing.assert_allclose(np.asarray(m), net.expected_delays(), rtol=1e-5)
+        assert float(lam) == pytest.approx(net.throughput(), rel=1e-5)
+
+    def test_bound_value_and_grad_match_numpy(self):
+        n = 12
+        rng = np.random.default_rng(5)
+        mu = rng.uniform(0.5, 6.0, n)
+        p = _nonuniform_p(n, seed=6)
+        k = BoundConstants(C=6, T=3000)
+        vg = make_bound_value_and_grad(k)
+        v_j, g_j = vg(jnp.asarray(p), jnp.asarray(mu))
+        v_n, _, _, g_n = bound_value_and_grad(mu, p, k)
+        assert float(v_j) == pytest.approx(v_n, rel=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(g_j), g_n, rtol=1e-4, atol=1e-4 * np.abs(g_n).max()
+        )
+
+    def test_optimal_eta_newton_matches_roots(self):
+        n = 8
+        for seed in (0, 1, 2):
+            rng = np.random.default_rng(seed)
+            mu = rng.uniform(0.5, 6.0, n)
+            p = _nonuniform_p(n, seed=seed + 3)
+            k = BoundConstants(C=4, T=1000 * (seed + 1))
+            m, _ = mva_throughput_delays(mu, p, k.C)
+            eta_j = optimal_eta_jnp(jnp.asarray(p), m, k)
+            eta_n = optimal_eta(p, np.asarray(m), k)
+            assert float(eta_j) == pytest.approx(eta_n, rel=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# fused engine: law parity with the replay oracle + adaptive control
+# ------------------------------------------------------------------ #
+class TestFusedEngine:
+    N, C, T = 8, 4, 3000
+
+    def test_matches_python_engine_in_law(self):
+        """Same fixed point (mean of client optima, by unbiasedness) and
+        comparable residual spread — realizations differ, laws must not."""
+        prob = Quadratic(self.N)
+        p = _nonuniform_p(self.N)
+        mu = np.random.default_rng(2).uniform(0.5, 4.0, self.N)
+        run = make_runner(prob.device_grad, C=self.C, stream="device",
+                          n=self.N, T=self.T)
+        target = prob.c.mean(0)
+        resid = []
+        for seed in (0, 1, 2):
+            w, _, _ = jax.jit(run)(jnp.zeros(prob.d), jnp.asarray(mu),
+                                   jnp.asarray(p), jax.random.PRNGKey(seed), 0.05)
+            resid.append(np.linalg.norm(np.asarray(w) - target))
+        cfg = ServerConfig(n=self.N, C=self.C, T=self.T, eta=0.05, p=p, mu=mu,
+                           seed=0, weighting="importance")
+        w_py, _ = run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg)
+        resid_py = np.linalg.norm(np.asarray(w_py) - target)
+        # SGD noise ball around the shared fixed point: same scale
+        assert np.mean(resid) < 5 * max(resid_py, 0.05)
+        assert resid_py < 5 * max(np.mean(resid), 0.05)
+
+    def test_extras_invariants(self):
+        prob = Quadratic(self.N)
+        p = _nonuniform_p(self.N)
+        mu = np.random.default_rng(3).uniform(0.5, 4.0, self.N)
+        run = make_runner(prob.device_grad, C=self.C, stream="device",
+                          n=self.N, T=self.T)
+        _, _, ex = jax.jit(run)(jnp.zeros(prob.d), jnp.asarray(mu),
+                                jnp.asarray(p), jax.random.PRNGKey(0), 0.05)
+        t = np.asarray(ex["t"])
+        assert t.shape == (self.T,) and np.all(np.diff(t) >= 0)
+        assert int(np.asarray(ex["comp"]).sum()) == self.T
+        # Little's law on the on-device delay accumulators
+        assert float(np.asarray(ex["delay_sum"]).sum()) / self.T == pytest.approx(
+            self.C - 1, rel=0.05
+        )
+        assert float(np.asarray(ex["occ_mean"]).sum()) == pytest.approx(self.C, abs=1e-3)
+
+    def test_eval_curve_and_tail(self):
+        """Chunked eval + non-divisible tail steps both execute."""
+        prob = Quadratic(self.N)
+        run = make_runner(prob.device_grad, C=self.C, stream="device",
+                          n=self.N, T=1150, eval_fn=lambda w: jnp.sum(w**2),
+                          eval_every=300)
+        w, evals, ex = jax.jit(run)(jnp.zeros(prob.d), jnp.ones(self.N),
+                                    jnp.full(self.N, 1 / self.N),
+                                    jax.random.PRNGKey(0), 0.05)
+        assert evals.shape == (3,)          # evals at 300/600/900; tail 1050..1150
+        assert ex["t"].shape == (1150,)
+        assert np.all(np.isfinite(np.asarray(evals)))
+
+    def test_fedbuff_fused_runs(self):
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=self.C, T=800, eta=0.05, seed=0,
+                           weighting="plain", engine="scan", stream="device")
+        w_dev, tr = run_fedbuff(np.zeros(prob.d, np.float32), prob, cfg, Z=5)
+        assert np.all(np.isfinite(np.asarray(w_dev)))
+        assert tr.times.shape == (800,)
+        # law parity with the host-stream fedbuff: same noise-ball scale
+        w_host, _ = run_fedbuff(np.zeros(prob.d, np.float32), prob,
+                                replace(cfg, stream="host"), Z=5)
+        assert np.linalg.norm(np.asarray(w_dev) - np.asarray(w_host)) < 1.0
+
+    def test_vmap_over_scenarios_matches_single(self):
+        prob = Quadratic(self.N)
+        p = _nonuniform_p(self.N)
+        run = make_runner(prob.device_grad, C=self.C, stream="device",
+                          n=self.N, T=400)
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        mus = jnp.broadcast_to(jnp.ones(self.N), (3, self.N))
+        ps = jnp.broadcast_to(jnp.asarray(p), (3, self.N))
+        wb, _, exb = jax.jit(jax.vmap(run, in_axes=(None, 0, 0, 0, None)))(
+            jnp.zeros(prob.d), mus, ps, keys, 0.05
+        )
+        for b in range(3):
+            w1, _, ex1 = jax.jit(run)(jnp.zeros(prob.d), mus[b], ps[b], keys[b], 0.05)
+            np.testing.assert_allclose(np.asarray(wb[b]), np.asarray(w1), atol=1e-6)
+            np.testing.assert_allclose(np.asarray(exb["t"][b]), np.asarray(ex1["t"]),
+                                       rtol=1e-5)
+
+    def test_validation_errors(self):
+        prob = Quadratic(self.N)
+        with pytest.raises(ValueError):  # adaptive needs refresh cadence
+            make_runner(prob.device_grad, C=self.C, stream="device",
+                        n=self.N, T=100, adaptive=True)
+        with pytest.raises(ValueError):  # adaptive is an Alg.-1 feature
+            make_runner(prob.device_grad, C=self.C, stream="device",
+                        n=self.N, T=100, adaptive=True, refresh_every=10,
+                        fedbuff_Z=5)
+        with pytest.raises(TypeError):   # device stream needs n and T
+            make_runner(prob.device_grad, C=self.C, stream="device")
+        with pytest.raises(ValueError):  # det service is host-only
+            run_generalized_async_sgd(
+                np.zeros(2, np.float32), prob,
+                ServerConfig(n=self.N, C=2, T=10, eta=0.1, engine="scan",
+                             stream="device", service="det"),
+            )
+
+
+class TestAdaptiveControl:
+    def test_converges_to_static_optimum_two_cluster(self):
+        """Adaptive p (from measured rates) reaches the optimize_general
+        bound within 5% on a two-cluster network, starting from uniform."""
+        n, C, T = 16, 4, 6000
+        mu = np.array([8.0] * 8 + [1.0] * 8)
+        k = BoundConstants(C=C, T=T)
+        grad_fn = lambda j, w, kk: w * 0.0  # control loop only
+        run = make_runner(grad_fn, C=C, stream="device", n=n, T=T,
+                          adaptive=True, refresh_every=200, bound=k)
+        _, _, ex = jax.jit(run)(jnp.zeros(2), jnp.asarray(mu),
+                                jnp.full(n, 1.0 / n), jax.random.PRNGKey(1), 0.0)
+        p_fin = np.asarray(ex["p_final"], np.float64)
+        p_fin /= p_fin.sum()
+        opt = optimize_general(mu, k, iters=300)
+        b_ad = bound_for_p(mu, p_fin, k)[0]
+        assert b_ad <= 1.05 * opt.bound
+        # and it actually moved: beats uniform decisively
+        assert b_ad < 0.99 * opt.uniform_bound
+        # fast nodes under-sampled relative to slow, like the static optimum
+        assert p_fin[0] < p_fin[-1]
+        # trajectory monotone-ish: last refresh no worse than the first few
+        traj = np.asarray(ex["p_traj"], np.float64)
+        b0 = bound_for_p(mu, traj[0] / traj[0].sum(), k)[0]
+        assert b_ad <= b0 + 1e-12
+
+    def test_importance_scale_uses_dispatch_time_p(self):
+        """Under a changing p the weighted update must use each task's
+        dispatch-time probability: with eta != 0 and adaptive on, the run
+        stays finite and unbiased toward the quadratic fixed point."""
+        n, C, T = 8, 3, 4000
+        prob = Quadratic(n)
+        mu = np.ones(n)
+        run = make_runner(prob.device_grad, C=C, stream="device", n=n, T=T,
+                          adaptive=True, refresh_every=250,
+                          bound=BoundConstants(C=C, T=T))
+        w, _, ex = jax.jit(run)(jnp.zeros(prob.d), jnp.asarray(mu),
+                                jnp.full(n, 1.0 / n), jax.random.PRNGKey(0), 0.05)
+        target = prob.c.mean(0)
+        assert np.linalg.norm(np.asarray(w) - target) < 0.6
+
+
+class TestDeviceMatrix:
+    def test_run_matrix_device_zero_host_presimulation(self, monkeypatch):
+        """stream='device' must never touch the host simulator."""
+        import repro.fl.engine as fle
+        from repro.configs.base import FLConfig
+        from repro.data.pipeline import FederatedClassification
+
+        def _boom(*a, **kw):
+            raise AssertionError("host pre-simulation on the device path")
+
+        monkeypatch.setattr(fle, "export_stream", _boom)
+        flc = FLConfig(n_clients=8, concurrency=3, server_steps=90)
+        data = FederatedClassification(n_clients=8, seed=0)
+        m = fle.run_matrix(flc, seeds=(0, 1), policies=("uniform", "optimal"),
+                           speed_ratios=(1.0, 4.0), eval_every=45, data=data,
+                           stream="device")
+        assert m.final_acc.shape == (2, 2, 2)
+        assert m.eval_acc.shape == (2, 2, 2, 2)
+        assert np.all(np.diff(m.eval_times, axis=-1) >= 0)
+        assert m.extras["stream"] == "device"
+        # on-device queueing observables ride along per scenario
+        assert m.extras["mean_delays"].shape == (2, 2, 2, 8)
+        np.testing.assert_allclose(m.extras["p_final"].sum(-1), 1.0, atol=1e-5)
+
+    def test_run_matrix_adaptive_beats_uniform(self):
+        """Adaptive rows end with a better bound than their uniform start."""
+        from repro.configs.base import FLConfig
+        from repro.data.pipeline import FederatedClassification
+        from repro.fl import run_matrix
+
+        n, C, T = 12, 4, 2000
+        flc = FLConfig(n_clients=n, concurrency=C, server_steps=T,
+                       speed_ratio=8.0, stream="device", adaptive=True,
+                       refresh_every=200)
+        data = FederatedClassification(n_clients=n, seed=0)
+        m = run_matrix(flc, seeds=(0,), policies=("uniform",),
+                       speed_ratios=(8.0,), eval_every=T, data=data)
+        from repro.data.pipeline import make_client_speeds
+
+        mu = make_client_speeds(n, flc.frac_fast, 8.0, seed=flc.seed)
+        k = BoundConstants(C=C, T=T)
+        p_fin = m.extras["p_final"][0, 0, 0]
+        p_fin = np.maximum(p_fin, 1e-12) / p_fin.sum()
+        assert bound_for_p(mu, p_fin, k)[0] < bound_for_p(mu, np.full(n, 1 / n), k)[0]
+
+
+# ------------------------------------------------------------------ #
+# optional hypothesis sweep (kept off tier-1 via the importorskip pattern)
+# ------------------------------------------------------------------ #
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def stream_params(draw):
+        n = draw(st.integers(2, 8))
+        C = draw(st.integers(1, 12))
+        T = draw(st.integers(10, 200))
+        seed = draw(st.integers(0, 2**16))
+        init = draw(st.sampled_from(["distinct", "sampled"]))
+        mu = np.array([draw(st.floats(0.2, 8.0)) for _ in range(n)])
+        praw = np.array([draw(st.floats(0.05, 1.0)) for _ in range(n)])
+        return mu, praw / praw.sum(), C, T, seed, init
+
+    class TestDeviceStreamHypothesis:
+        @given(params=stream_params())
+        @settings(max_examples=15, deadline=None)
+        def test_invariants(self, params):
+            mu, p, C, T, seed, init = params
+            _check_stream(generate_stream(mu, p, C, T=T, seed=seed, init=init))

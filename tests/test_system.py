@@ -35,10 +35,12 @@ class TestPaperClaims:
         """App. F.2: optimal sampling divides delays ~10x fast / ~2x slow."""
         n, n_f, C = 10, 5, 1000
         mu = np.array([1.2] * n_f + [1.0] * (n - n_f))
-        uni = simulate(SimConfig(mu=mu, p=np.full(n, 1 / n), C=C, T=250_000, seed=0))
+        uni = simulate(SimConfig(mu=mu, p=np.full(n, 1 / n), C=C, T=250_000, seed=0,
+                                 record_delays=True))
         p_f = 7.5e-3
         p_opt = np.array([p_f] * n_f + [2 / n - p_f] * (n - n_f))
-        opt = simulate(SimConfig(mu=mu, p=p_opt, C=C, T=250_000, seed=0))
+        opt = simulate(SimConfig(mu=mu, p=p_opt, C=C, T=250_000, seed=0,
+                                 record_delays=True))
         d_uni = uni.mean_delay_per_node()
         d_opt = opt.mean_delay_per_node()
         fast_ratio = np.mean(d_uni[:n_f]) / np.mean(d_opt[:n_f])
@@ -78,7 +80,7 @@ class TestPaperClaims:
         n = 10
         mu = np.array([10.0] * 5 + [1.0] * 5)
         p = np.full(n, 1 / n)
-        res = simulate(SimConfig(mu=mu, p=p, C=n, T=20_000, seed=0))
+        res = simulate(SimConfig(mu=mu, p=p, C=n, T=20_000, seed=0, record_delays=True))
         d = np.asarray(res.delays[0], dtype=float)  # node 0 delays over time
         first, second = d[len(d) // 4 : len(d) // 2], d[len(d) // 2 :]
         assert abs(np.mean(first) - np.mean(second)) < 3 * np.std(d) / np.sqrt(len(d) / 4) + 1.0
