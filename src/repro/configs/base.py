@@ -134,6 +134,9 @@ class FLConfig:
     adaptive: bool = False         # device stream: adaptive sampling control
                                    # loop (re-optimize p from observed queues)
     refresh_every: int = 250       # control-loop cadence in CS steps
+    block_size: int = 1            # scan engine: events per micro-block
+                                   # (E > 1 = blocked replay; exact — see
+                                   # engine_scan / README)
 
     def replace(self, **kw) -> "FLConfig":
         return dataclasses.replace(self, **kw)

@@ -12,6 +12,8 @@ from .jackson import (
 )
 from .engine_scan import (
     DeviceGradientSource,
+    blocked_inputs,
+    blocked_inputs_batch,
     jit_fused_runner,
     jit_runner,
     make_fused_runner,
@@ -21,16 +23,20 @@ from .engine_scan import (
 )
 from .stream_device import (
     ctrl_refresh,
+    generate_blocks,
     generate_stream,
     make_bound_value_and_grad,
     mva_throughput_delays,
 )
 from .queue_sim import (
     ClosedNetworkSim,
+    EventBlocks,
     EventStream,
     SimConfig,
     SimResult,
+    export_blocks,
     export_stream,
+    segment_blocks,
     simulate,
     simulate_batch,
 )

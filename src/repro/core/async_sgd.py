@@ -32,6 +32,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Any, Callable, Protocol
 
 import numpy as np
@@ -94,6 +95,18 @@ class ServerConfig:
     refresh_every: int = 0      # control-loop cadence (CS steps)
     ctrl_lr: float = 0.3        # control-loop mirror-descent step size
     ctrl_iters: int = 4         # mirror-descent steps per refresh
+    block_size: int = 1         # scan engine: events per micro-block (1 =
+                                # per-event replay; E > 1 batches gathers /
+                                # gradients / scatters over conflict-free
+                                # blocks — exact, see engine_scan)
+    snapshot_dtype: str | None = None  # scan engine: ring-buffer storage dtype
+                                       # (e.g. "bfloat16"; None = param dtype)
+    pallas_interpret: bool = True  # update="pallas": run the kernels in
+                                   # interpret mode (True = CPU/debug; set
+                                   # False on real TPU/GPU backends)
+    collect_extras: bool = True  # scan engine: accumulate queue statistics /
+                                 # p-trajectory extras (False prunes them from
+                                 # the compiled program — benchmark runs)
 
 
 @dataclass
@@ -130,13 +143,22 @@ def _device_grad_fn(source) -> Callable:
     return fn
 
 
+@lru_cache(maxsize=4)
+def _pallas_update_fn(interpret: bool):
+    """Memoized per interpret flag: the jitted-runner memo keys on the
+    update_fn *object*, so the same flag must return the same callable."""
+    from functools import partial
+
+    from ..kernels.weighted_update import tree_weighted_update
+
+    return partial(tree_weighted_update, interpret=interpret)
+
+
 def _scan_update_fn(cfg: ServerConfig):
     if cfg.apply_update is not None:
         return cfg.apply_update
     if cfg.update == "pallas":
-        from ..kernels.weighted_update import tree_weighted_update
-
-        return tree_weighted_update
+        return _pallas_update_fn(cfg.pallas_interpret)
     if cfg.update != "jnp":
         raise ValueError(cfg.update)
     return None  # engine default: w - scale*g
@@ -163,12 +185,28 @@ def _run_scan(
     import jax
     import jax.numpy as jnp
 
-    from .engine_scan import jit_fused_runner, jit_runner, step_scales, stream_arrays
+    from .engine_scan import (
+        blocked_inputs,
+        jit_fused_runner,
+        jit_runner,
+        step_scales,
+        stream_arrays,
+    )
+    from .queue_sim import EventBlocks
 
     if cfg.track_virtual:
         raise NotImplementedError("track_virtual requires engine='python'")
     weighting = "plain" if fedbuff_Z else cfg.weighting
     w0_dev = _tree_map(jnp.asarray, w0)
+    eval_every = cfg.eval_every if eval_fn is not None else 0
+    # the event-stream arrays are freshly built per run, so hand their
+    # buffers to the compiled program; CPU cannot donate them (warns), so
+    # keep donation to accelerator backends
+    donate = jax.default_backend() != "cpu"
+    if cfg.block_size > 1 and cfg.apply_update is not None:
+        raise ValueError(
+            "block_size > 1 requires the default update w - scale*g"
+        )
 
     if cfg.stream == "device":
         if cfg.service != "exp":
@@ -184,31 +222,40 @@ def _run_scan(
             weighting=weighting,
             fedbuff_Z=fedbuff_Z,
             eval_fn=eval_fn,
-            eval_every=cfg.eval_every if eval_fn is not None else 0,
+            eval_every=eval_every,
             adaptive=cfg.adaptive,
             refresh_every=cfg.refresh_every,
             ctrl_lr=cfg.ctrl_lr,
             ctrl_iters=cfg.ctrl_iters,
             update_fn=_scan_update_fn(cfg),
+            block_size=cfg.block_size,
+            snapshot_dtype=cfg.snapshot_dtype,
+            collect_extras=cfg.collect_extras,
         )
         w, evals, extras = runner(
             w0_dev, jnp.asarray(mu), jnp.asarray(p),
             jax.random.PRNGKey(cfg.seed), cfg.eta,
         )
         w = jax.block_until_ready(w)
-        trace = TraceRecord(
-            steps=np.arange(cfg.T), times=np.asarray(extras["t"], np.float64)
+        times = (
+            np.asarray(extras["t"], np.float64)
+            if "t" in extras
+            # collect_extras=False prunes the per-step clock: make misuse
+            # loud (NaN propagates) instead of fabricating t=0 timestamps
+            else np.full(cfg.T, np.nan)
         )
-        trace.mean_queue_lengths = np.asarray(extras["occ_mean"], np.float64)
-        comp = np.asarray(extras["comp"], np.float64)
-        trace.extras = {
-            "p_final": np.asarray(extras["p_final"], np.float64),
-            "p_traj": np.asarray(extras["p_traj"], np.float64),
-            "mean_delays": np.asarray(extras["delay_sum"], np.float64)
-            / np.maximum(comp, 1.0),
-            "comp": comp,
-            "busy_time": np.asarray(extras["busy_time"], np.float64),
-        }
+        trace = TraceRecord(steps=np.arange(cfg.T), times=times)
+        trace.extras = {"p_final": np.asarray(extras["p_final"], np.float64)}
+        if "occ_mean" in extras:
+            trace.mean_queue_lengths = np.asarray(extras["occ_mean"], np.float64)
+            comp = np.asarray(extras["comp"], np.float64)
+            trace.extras.update(
+                p_traj=np.asarray(extras["p_traj"], np.float64),
+                mean_delays=np.asarray(extras["delay_sum"], np.float64)
+                / np.maximum(comp, 1.0),
+                comp=comp,
+                busy_time=np.asarray(extras["busy_time"], np.float64),
+            )
     else:
         if cfg.stream != "host":
             raise ValueError(cfg.stream)
@@ -216,19 +263,47 @@ def _run_scan(
             raise ValueError("adaptive sampling requires stream='device'")
         stream = export_stream(
             SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service,
-                      seed=cfg.seed, record_delays=True)
+                      seed=cfg.seed, record_delays=cfg.collect_extras)
         )
         scale = step_scales(stream, cfg.eta, p, weighting)
-        runner = jit_runner(
-            _device_grad_fn(source),
-            cfg.C,
-            fedbuff_Z=fedbuff_Z,
-            eval_fn=eval_fn,
-            eval_every=cfg.eval_every if eval_fn is not None else 0,
-            update_fn=_scan_update_fn(cfg),
-        )
-        J_dev, slot_dev = stream_arrays(stream)
-        w, evals = runner(w0_dev, J_dev, slot_dev, jnp.asarray(scale))
+        if cfg.update not in ("jnp", "pallas"):
+            raise ValueError(cfg.update)
+        kernel = cfg.update
+        if cfg.block_size > 1:
+            blocks = EventBlocks.from_stream(
+                stream, cfg.block_size, cut_every=eval_every
+            )
+            J, slot, sc, kb, mask, chunk_blocks, n_chunks = blocked_inputs(
+                blocks, scale, eval_every
+            )
+            runner = jit_runner(
+                _device_grad_fn(source),
+                cfg.C,
+                fedbuff_Z=fedbuff_Z,
+                eval_fn=eval_fn,
+                block_size=cfg.block_size,
+                kernel=kernel,
+                snapshot_dtype=cfg.snapshot_dtype,
+                donate=donate,
+                interpret=cfg.pallas_interpret,
+            )
+            w, evals = runner(
+                w0_dev, jnp.asarray(J), jnp.asarray(slot), jnp.asarray(sc),
+                jnp.asarray(kb), jnp.asarray(mask),
+                chunk_blocks=chunk_blocks, n_chunks=n_chunks,
+            )
+        else:
+            runner = jit_runner(
+                _device_grad_fn(source),
+                cfg.C,
+                fedbuff_Z=fedbuff_Z,
+                eval_fn=eval_fn,
+                eval_every=eval_every,
+                update_fn=_scan_update_fn(cfg),
+                donate=donate,
+            )
+            J_dev, slot_dev = stream_arrays(stream)
+            w, evals = runner(w0_dev, J_dev, slot_dev, jnp.asarray(scale))
         w = jax.block_until_ready(w)
         trace = TraceRecord(steps=np.arange(cfg.T), times=np.asarray(stream.t))
         trace.delays = stream.delays

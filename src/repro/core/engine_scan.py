@@ -7,21 +7,42 @@ the closed Jackson network is independent of the gradient values, so
 Algorithm 1 runs on device as a single XLA program:
 
   * the C in-flight dispatch snapshots live in a stacked ring buffer
-    (a (C, ...) leading axis on every parameter leaf);
+    (a (C, ...) leading axis on every parameter leaf; flat-packed into ONE
+    (C, P) array when dtypes allow, optionally stored in a narrower dtype —
+    ``snapshot_dtype="bfloat16"`` halves the ring buffer's footprint and
+    bandwidth at an O(2^-8) snapshot quantization);
   * `update_step` — the algorithm half — gathers the completing task's
     snapshot from its slot, computes the client gradient with a traceable
     `grad_fn(j, w, k)`, applies the importance-weighted update, and scatters
     the updated parameters back into the same slot (the freed slot hosts the
     new dispatch — exactly one task completes and one departs per step,
     Lemma 9);
+  * with ``block_size=E > 1`` the engine replays *event micro-blocks*
+    instead of single events: gradients read dispatch-time snapshots, not
+    the live server weight, so a block of events whose ring slots don't
+    collide is data-parallel — `block_step` batch-gathers the E snapshots,
+    computes all E gradients in one vmapped call, reconstructs the exact
+    sequential iterates via a prefix sum over the scaled updates
+    (w_i = w_0 - sum_{j<=i} eta_j g_j), and scatters the E intermediate
+    weights back in one pass (optionally through the fused Pallas kernel
+    `kernels.weighted_update.block_prefix_update`, which streams tiles once
+    and updates the ring buffer in place).  On the host path the blocks come
+    from `queue_sim.export_blocks` (greedy conflict-free cut, padded lanes
+    target a trash row C); on the device path `stream_step` advances E CS
+    steps per scan iteration and a sequential fixup pass recomputes the
+    (rare) gradients whose dispatch landed inside the same window, so both
+    paths stay law- and trajectory-equivalent to the per-event oracle;
   * the event half comes from one of two *streams* (`make_runner(stream=)`):
 
       "host"    replay a pre-simulated `queue_sim.EventStream` — the parity
-                oracle.  `run(w0, J, slot, scale[, eval_every])`.
+                oracle.  `run(w0, J, slot, scale[, eval_every])`, or the
+                blocked `run(w0, J, slot, scale, k, mask[, chunk_blocks,
+                n_chunks])` over `queue_sim.EventBlocks` arrays.
       "device"  fuse `stream_device.stream_step` with `update_step` behind a
                 single scan carry: the closed network advances one CS step
-                per iteration *inside* the compiled program — zero host
-                pre-simulation, and the sampling vector p becomes state.
+                (or one E-event micro-block) per iteration *inside* the
+                compiled program — zero host pre-simulation, and the
+                sampling vector p becomes state.
                 `run(w0, mu, p0, key, eta) -> (w, evals, extras)`.
 
   * on the fused path an optional control loop (``adaptive=True``)
@@ -32,14 +53,19 @@ Algorithm 1 runs on device as a single XLA program:
     unbiased under time-varying p because each in-flight slot remembers the
     scale computed from its *dispatch-time* p.
   * evaluation runs as an outer scan over chunks, so the whole run —
-    updates and metric curve — is one compiled call.
+    updates and metric curve — is one compiled call.  Eval points land on
+    micro-block boundaries by construction (`segment_blocks(cut_every=)`),
+    so the blocked curve samples the identical iterates.
 
 `make_runner` returns a pure function: jit it for a single run, `jax.vmap`
 it over stacked streams / (mu, p, key) triples for the scenario matrix
 (seeds x sampling policies x heterogeneity levels in one compiled call).
 
 FedBuff rides the same scan: gradients accumulate into a buffer pytree and
-the (masked, branch-free) server update fires every Z-th step.
+the (masked, branch-free) server update fires every Z-th step; the blocked
+replay reproduces it exactly through a closed-form per-event delta
+decomposition (each gradient is applied once, at the first buffer flush at
+or after its arrival).
 """
 from __future__ import annotations
 
@@ -48,11 +74,13 @@ from typing import Any, Callable, Protocol
 
 import numpy as np
 
-from .queue_sim import EventStream
+from .queue_sim import EventBlocks, EventStream
 from .theory import BoundConstants
 
 __all__ = [
     "DeviceGradientSource",
+    "blocked_inputs",
+    "blocked_inputs_batch",
     "jit_runner",
     "jit_fused_runner",
     "make_runner",
@@ -96,15 +124,140 @@ def stream_arrays(stream: EventStream):
 
 
 # ------------------------------------------------------------------ #
+# blocked input layout (host-side numpy prep)
+# ------------------------------------------------------------------ #
+def _blocked_layout(
+    blocks: EventBlocks,
+    scale: np.ndarray,
+    eval_every: int,
+    chunk_blocks: int | None = None,
+    tail_blocks: int | None = None,
+) -> tuple:
+    """(J, slot, scale, k, mask) rows + (chunk_blocks, n_chunks) layout.
+
+    With ``eval_every`` the blocks are grouped per eval interval and each
+    group is padded with all-masked rows to a common ``chunk_blocks`` width,
+    so the chunked outer scan evaluates after exactly `eval_every` events;
+    trailing blocks past the last eval point are appended flat.  Padded rows
+    are no-ops: mask False, trash slot C, zero scale.
+    """
+    E = blocks.block_size
+    sc_all = blocks.blocked_scales(scale).astype(np.float32)
+    if not eval_every:
+        n_tail = blocks.B if tail_blocks is None else tail_blocks
+        if n_tail < blocks.B:
+            raise ValueError("tail_blocks smaller than block count")
+        pad = n_tail - blocks.B
+        def padded(a, fill):
+            return np.concatenate(
+                [a, np.full((pad, E), fill, a.dtype)]) if pad else a
+        return (
+            padded(blocks.J, 0),
+            padded(blocks.slot, blocks.C),
+            padded(sc_all, 0.0),
+            padded(blocks.idx, 0),
+            padded(blocks.mask, False),
+            0,
+            0,
+        )
+    if blocks.cut_every != eval_every:
+        raise ValueError(
+            f"blocks were cut every {blocks.cut_every} events; eval_every="
+            f"{eval_every} requires segment_blocks(cut_every={eval_every})"
+        )
+    n_chunks = blocks.T // eval_every
+    group = np.minimum(blocks.idx[:, 0] // eval_every, n_chunks)
+    counts = np.bincount(group, minlength=n_chunks + 1)
+    G = int(counts[:n_chunks].max()) if n_chunks else 0
+    if chunk_blocks is not None:
+        if chunk_blocks < G:
+            raise ValueError("chunk_blocks smaller than densest eval interval")
+        G = chunk_blocks
+    n_tail = int(counts[n_chunks])
+    if tail_blocks is not None:
+        if tail_blocks < n_tail:
+            raise ValueError("tail_blocks smaller than tail block count")
+        n_tail = tail_blocks
+    rows = n_chunks * G + n_tail
+    J = np.zeros((rows, E), np.int32)
+    slot = np.full((rows, E), blocks.C, np.int32)
+    sc = np.zeros((rows, E), np.float32)
+    kb = np.zeros((rows, E), np.int32)
+    mask = np.zeros((rows, E), bool)
+    pos = 0
+    for g in range(n_chunks + 1):
+        cnt = int(counts[g])
+        r0 = g * G if g < n_chunks else n_chunks * G
+        src = slice(pos, pos + cnt)
+        dst = slice(r0, r0 + cnt)
+        J[dst], slot[dst], sc[dst] = blocks.J[src], blocks.slot[src], sc_all[src]
+        kb[dst], mask[dst] = blocks.idx[src], blocks.mask[src]
+        pos += cnt
+    return J, slot, sc, kb, mask, G, n_chunks
+
+
+def blocked_inputs(blocks: EventBlocks, scale: np.ndarray, eval_every: int = 0):
+    """Device-ready blocked scan inputs for one stream.
+
+    Returns ``(J, slot, scale, k, mask, chunk_blocks, n_chunks)`` — the
+    array arguments plus the two static layout ints of the blocked runner.
+    """
+    return _blocked_layout(blocks, scale, eval_every)
+
+
+def blocked_inputs_batch(
+    blocks_list: list[EventBlocks],
+    scales_list: list[np.ndarray],
+    eval_every: int = 0,
+):
+    """Stacked blocked inputs over scenarios, padded to one common layout.
+
+    The per-scenario greedy cuts produce different block counts; every
+    scenario is padded (all-masked no-op rows) to the batch-wide maximum, so
+    the result vmaps as one (S, B, E) program with shared static
+    ``(chunk_blocks, n_chunks)``.
+    """
+    layouts = [
+        _blocked_layout(b, s, eval_every)
+        for b, s in zip(blocks_list, scales_list)
+    ]
+    if eval_every:
+        G = max(l[5] for l in layouts)
+        n_chunks = layouts[0][6]
+        tails = [l[0].shape[0] - n_chunks * l[5] for l in layouts]
+        tail = max(tails)
+        layouts = [
+            _blocked_layout(b, s, eval_every, chunk_blocks=G, tail_blocks=tail)
+            for b, s in zip(blocks_list, scales_list)
+        ]
+    else:
+        B = max(l[0].shape[0] for l in layouts)
+        layouts = [
+            _blocked_layout(b, s, 0, tail_blocks=B)
+            for b, s in zip(blocks_list, scales_list)
+        ]
+    stacked = tuple(np.stack([l[i] for l in layouts]) for i in range(5))
+    return stacked + (layouts[0][5], layouts[0][6])
+
+
+# ------------------------------------------------------------------ #
 # shared pieces: snapshot codec + the algorithm step
 # ------------------------------------------------------------------ #
-def _snapshot_codec(w0):
+def _snapshot_codec(w0, snapshot_dtype=None, pad_to: int = 1):
     """Flat-packed snapshot storage when all leaves share a dtype.
 
     The ring buffer then is ONE (C, P) array — a single gather/scatter
     per step instead of two per leaf, which matters for small models
     where per-op overhead inside the scan dominates.  Mixed-dtype trees
     fall back to per-leaf (C, ...) buffers.
+
+    Returns ``(pack, unpack, enc)``: ``pack`` flattens a pytree to the
+    padded compute-dtype vector, ``unpack`` restores the pytree from a
+    stored row (casting back to the leaf dtype), and ``enc`` casts a
+    compute-dtype vector to the snapshot *storage* dtype — the optional
+    ``snapshot_dtype`` codec (e.g. ``"bfloat16"`` ring storage for fp32
+    params).  ``pad_to`` rounds the packed length up (once, at init) so the
+    fused block kernel's column tiling never re-pads inside the scan.
     """
     import jax
     import jax.numpy as jnp
@@ -112,26 +265,71 @@ def _snapshot_codec(w0):
     leaves, treedef = jax.tree_util.tree_flatten(w0)
     dtypes = {jnp.asarray(l).dtype for l in leaves}
     if len(dtypes) != 1:
-        return None, None  # per-leaf buffers
+        if snapshot_dtype is not None:
+            raise ValueError(
+                "snapshot_dtype requires uniform-dtype parameters "
+                "(flat-packed snapshot storage)"
+            )
+        return None, None, None  # per-leaf buffers
+    compute_dtype = dtypes.pop()
+    store_dtype = (
+        jnp.dtype(snapshot_dtype) if snapshot_dtype is not None else compute_dtype
+    )
     shapes = [jnp.shape(l) for l in leaves]
     sizes = [int(np.prod(s)) if s else 1 for s in shapes]
     offs = np.concatenate([[0], np.cumsum(sizes)]).tolist()
+    P = offs[-1]
+    P_pad = ((P + pad_to - 1) // pad_to) * pad_to
 
     def pack(w):
         ls = jax.tree_util.tree_leaves(w)
-        return jnp.concatenate([jnp.ravel(x) for x in ls])
+        flat = jnp.concatenate([jnp.ravel(x) for x in ls])
+        if P_pad != P:
+            flat = jnp.pad(flat, (0, P_pad - P))
+        return flat
 
     def unpack(flat):
         ls = [
-            flat[offs[i] : offs[i + 1]].reshape(shapes[i])
+            flat[offs[i] : offs[i + 1]].reshape(shapes[i]).astype(compute_dtype)
             for i in range(len(shapes))
         ]
         return jax.tree_util.tree_unflatten(treedef, ls)
 
-    return pack, unpack
+    if store_dtype == compute_dtype:
+        enc = lambda x: x
+    else:
+        enc = lambda x: x.astype(store_dtype)
+    return pack, unpack, enc
 
 
-def _make_update_step(grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode):
+def _make_apply_event(fedbuff_Z, enc):
+    """Flat-mode server update for one event, given its (packed) gradient.
+
+    ``apply_event((w, snaps, acc), g, s, scale, k)`` is Algorithm 1 lines
+    10-11 on the packed vector — one axpy, one scatter (plus the masked
+    FedBuff buffer flush every Z-th step).  Shared by the per-event
+    `update_step` and the device-blocked fixup pass so the update semantics
+    exist exactly once.
+    """
+    import jax.numpy as jnp
+
+    def apply_event(ucarry, g, s, scale, k):
+        w, snaps, acc = ucarry
+        if fedbuff_Z > 0:
+            acc = acc + g
+            fire = ((k + 1) % fedbuff_Z) == 0
+            eff = jnp.where(fire, scale / fedbuff_Z, 0.0)
+            w = (w - eff * acc).astype(w.dtype)
+            acc = acc * (~fire).astype(acc.dtype)
+        else:
+            w = (w - scale * g).astype(w.dtype)
+        snaps = snaps.at[s].set(enc(w))
+        return (w, snaps, acc)
+
+    return apply_event
+
+
+def _make_update_step(grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, enc):
     """The algorithm half of a CS step, independent of the event source.
 
     ``update_step(ucarry, j, s, scale, k) -> ucarry`` consumes one event
@@ -143,6 +341,7 @@ def _make_update_step(grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode):
     import jax.numpy as jnp
 
     tree_map = jax.tree_util.tree_map
+    apply_event = _make_apply_event(fedbuff_Z, enc) if flat_mode else None
 
     def update_step(ucarry, j, s, scale, k):
         w, snaps, acc = ucarry  # w (and acc) are flat vectors in flat_mode
@@ -153,18 +352,7 @@ def _make_update_step(grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode):
             w_disp = unpack(snaps[s])
         g = grad_fn(j, w_disp, k)
         if flat_mode:
-            # default update on the packed vector: one axpy, one scatter
-            g = pack(g)
-            if fedbuff_Z > 0:
-                acc = acc + g
-                fire = ((k + 1) % fedbuff_Z) == 0
-                eff = jnp.where(fire, scale / fedbuff_Z, 0.0)
-                w = (w - eff * acc).astype(w.dtype)
-                acc = acc * (~fire).astype(acc.dtype)
-            else:
-                w = (w - scale * g).astype(w.dtype)
-            snaps = snaps.at[s].set(w)
-            return (w, snaps, acc)
+            return apply_event(ucarry, pack(g), s, scale, k)
         if fedbuff_Z > 0:
             acc = tree_map(lambda a, y: a + y, acc, g)
             fire = ((k + 1) % fedbuff_Z) == 0
@@ -177,26 +365,110 @@ def _make_update_step(grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode):
         if unpack is None:
             snaps = tree_map(lambda b, x: b.at[s].set(x), snaps, w)
         else:
-            snaps = snaps.at[s].set(pack(w))
+            snaps = snaps.at[s].set(enc(pack(w)))
         return (w, snaps, acc)
 
     return update_step
 
 
-def _init_update_carry(w0, C, pack, unpack, flat_mode, fedbuff_Z):
-    """(w, snaps, acc) initial carry + the carry->pytree decoder."""
+def _make_batched_grads(grad_fn, pack, unpack):
+    """Batched gradient call over one micro-block: (E,) client ids, (E, P)
+    stored snapshot rows, (E,) server steps -> (E, P) packed gradients.
+    Shared by the host block step and the fused device window."""
+    import jax
+
+    return jax.vmap(
+        lambda j, wi, k: pack(grad_fn(j, unpack(wi), k))
+    )
+
+
+def _make_block_step(grad_fn, fedbuff_Z, pack, unpack, kernel, interpret):
+    """One event micro-block of the blocked engine (flat-packed mode only).
+
+    ``block_step(ucarry, j, s, scale, k, mask) -> ucarry`` consumes up to E
+    conflict-free events: one batched snapshot gather, one vmapped gradient
+    call, then the exact sequential iterates via a prefix sum over the
+    per-event update deltas D_i (w_i = w_0 - sum_{j<=i} D_j), scattered back
+    in one pass.  Padded lanes (mask False) carry zero scale and the trash
+    ring row, so they are arithmetic no-ops.
+
+    FedBuff decomposes into the same prefix form: gradient g_j is applied
+    exactly once — at the first buffer flush at or after its arrival — so
+    D_i = 1{flush at i} * (scale_i/Z) * (carried buffer + gradients since
+    the previous flush), computed in closed form from the in-block flush
+    positions.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if kernel == "pallas":
+        from ..kernels.weighted_update import block_prefix_update
+
+        apply_block = partial(block_prefix_update, interpret=interpret)
+    elif kernel == "jnp":
+        from ..kernels.ref import block_prefix_update_ref
+
+        apply_block = block_prefix_update_ref
+    else:
+        raise ValueError(kernel)
+
+    grads = _make_batched_grads(grad_fn, pack, unpack)
+
+    def block_step(ucarry, j, s, sc, k, m):
+        w, snaps, acc = ucarry
+        G = grads(j, snaps[s], k)  # (E, P) batched over the block
+        scm = jnp.where(m, sc, 0.0).astype(jnp.float32)
+        if fedbuff_Z > 0:
+            Gm = jnp.where(m[:, None], G, 0).astype(jnp.float32)
+            cum = jnp.cumsum(Gm, axis=0)
+            fire = m & (((k + 1) % fedbuff_Z) == 0)
+            E = m.shape[0]
+            fi = jnp.where(fire, jnp.arange(E, dtype=jnp.int32), -1)
+            last_incl = jax.lax.cummax(fi)  # last flush at or before i
+            prev = jnp.concatenate(
+                [jnp.full((1,), -1, jnp.int32), last_incl[:-1]]
+            )
+            prevcum = jnp.where(
+                (prev >= 0)[:, None], cum[jnp.maximum(prev, 0)], 0.0
+            )
+            first = jnp.where(prev < 0, 1.0, 0.0)[:, None]
+            acc_at = cum - prevcum + first * acc.astype(jnp.float32)
+            D = jnp.where(fire, scm / fedbuff_Z, 0.0)[:, None] * acc_at
+            lastf = last_incl[-1]
+            flushed = jnp.where(
+                lastf >= 0, cum[jnp.maximum(lastf, 0)], 0.0
+            )
+            acc = (
+                jnp.where(lastf >= 0, 0.0, 1.0) * acc.astype(jnp.float32)
+                + (cum[-1] - flushed)
+            ).astype(acc.dtype)
+        else:
+            D = scm[:, None] * G.astype(jnp.float32)
+        snaps, w = apply_block(snaps, w, D, s)
+        return (w, snaps, acc)
+
+    return block_step
+
+
+def _init_update_carry(w0, rows, pack, unpack, flat_mode, fedbuff_Z, enc):
+    """(w, snaps, acc) initial carry + the carry->pytree decoder.
+
+    ``rows`` is the snapshot ring height — C for the per-event engine, C+1
+    for the blocked engine (the extra trash row absorbs padded scatters).
+    """
     import jax
     import jax.numpy as jnp
 
     tree_map = jax.tree_util.tree_map
     if unpack is None:
         snaps0 = tree_map(
-            lambda x: jnp.broadcast_to(x[None], (C,) + jnp.shape(x)), w0
+            lambda x: jnp.broadcast_to(x[None], (rows,) + jnp.shape(x)), w0
         )
         w_init = w0
     else:
         flat0 = pack(w0)
-        snaps0 = jnp.broadcast_to(flat0[None], (C, flat0.shape[0]))
+        stored0 = enc(flat0)
+        snaps0 = jnp.broadcast_to(stored0[None], (rows, stored0.shape[0]))
         w_init = flat0 if flat_mode else w0
     acc0 = tree_map(jnp.zeros_like, w_init) if fedbuff_Z > 0 else ()
     to_tree = (lambda w: unpack(w)) if flat_mode else (lambda w: w)
@@ -230,6 +502,7 @@ def _make_host_runner(
     eval_every: int = 0,
     update_fn: Callable[[Pytree, Pytree, Any], Pytree] | None = None,
     unroll: int = 1,
+    snapshot_dtype=None,
 ):
     """Build the replay engine for a fixed algorithm shape.
 
@@ -251,10 +524,10 @@ def _make_host_runner(
     eval_every_default = eval_every
 
     def run(w0, J, slot, scale, eval_every=eval_every_default):
-        pack, unpack = _snapshot_codec(w0)
+        pack, unpack, enc = _snapshot_codec(w0, snapshot_dtype)
         flat_mode = default_update and unpack is not None
         update_step = _make_update_step(
-            grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode
+            grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, enc
         )
 
         def body(carry, xs):
@@ -265,7 +538,9 @@ def _make_host_runner(
             ks = k0 + jnp.arange(Jc.shape[0], dtype=Jc.dtype)
             return jax.lax.scan(body, carry, (Jc, slotc, scalec, ks), unroll=unroll)[0]
 
-        carry, to_tree = _init_update_carry(w0, C, pack, unpack, flat_mode, fedbuff_Z)
+        carry, to_tree = _init_update_carry(
+            w0, C, pack, unpack, flat_mode, fedbuff_Z, enc
+        )
         T = int(J.shape[0])
         if eval_fn is not None and eval_every and T >= eval_every:
             n_chunks = T // eval_every
@@ -293,6 +568,94 @@ def _make_host_runner(
     return run
 
 
+def _make_host_block_runner(
+    grad_fn: Callable[[Any, Pytree, Any], Pytree],
+    C: int,
+    block_size: int,
+    *,
+    fedbuff_Z: int = 0,
+    eval_fn: Callable[[Pytree], Any] | None = None,
+    update_fn: Callable[[Pytree, Pytree, Any], Pytree] | None = None,
+    unroll: int = 1,
+    kernel: str = "jnp",
+    snapshot_dtype=None,
+    interpret: bool = True,
+):
+    """Build the blocked replay engine over `queue_sim.EventBlocks` arrays.
+
+    Returns ``run(w0, J, slot, scale, k, mask, chunk_blocks=0, n_chunks=0)
+    -> (w_final, evals)`` consuming (B, E) blocked arrays (see
+    `blocked_inputs`).  ``chunk_blocks``/``n_chunks`` are the static eval
+    layout: the first ``n_chunks * chunk_blocks`` rows are eval-interval
+    groups (eval fires after each group — the greedy cut guarantees group
+    boundaries land on exact event multiples), trailing rows replay flat.
+
+    The blocked engine requires the flat-packed snapshot codec (uniform
+    parameter dtype) and the default linear update; ``kernel`` picks the
+    jnp fallback ("jnp", the CPU/parity path) or the fused Pallas kernel
+    ("pallas") for the prefix-scan + scatter.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if update_fn is not None:
+        raise ValueError(
+            "block_size > 1 requires the default update w - scale*g "
+            "(the blocked replay reconstructs iterates via a prefix sum)"
+        )
+    if block_size < 2:
+        raise ValueError("use _make_host_runner for block_size <= 1")
+    pad_to = 1
+    if kernel == "pallas":
+        from ..kernels.weighted_update import BLOCK_TILE
+
+        pad_to = BLOCK_TILE
+
+    def run(w0, J, slot, scale, k, mask, chunk_blocks=0, n_chunks=0):
+        pack, unpack, enc = _snapshot_codec(w0, snapshot_dtype, pad_to=pad_to)
+        if unpack is None:
+            raise ValueError(
+                "block_size > 1 requires uniform-dtype parameters "
+                "(flat-packed snapshot storage)"
+            )
+        block_step = _make_block_step(
+            grad_fn, fedbuff_Z, pack, unpack, kernel, interpret
+        )
+        carry, to_tree = _init_update_carry(
+            w0, C + 1, pack, unpack, True, fedbuff_Z, enc
+        )
+
+        def body(c, xs):
+            return block_step(c, *xs), ()
+
+        def scan(c, *arrs):
+            return jax.lax.scan(body, c, arrs, unroll=unroll)[0]
+
+        B = int(J.shape[0])
+        Bm = n_chunks * chunk_blocks
+        if eval_fn is not None and n_chunks and chunk_blocks:
+            resh = lambda a: a[:Bm].reshape(
+                (n_chunks, chunk_blocks) + a.shape[1:]
+            )
+
+            def chunk_body(c, xs):
+                c = scan(c, *xs)
+                return c, eval_fn(to_tree(c[0]))
+
+            carry, evals = jax.lax.scan(
+                chunk_body, carry, tuple(resh(a) for a in (J, slot, scale, k, mask))
+            )
+            if Bm < B:  # tail blocks past the last eval point
+                carry = scan(
+                    carry, J[Bm:], slot[Bm:], scale[Bm:], k[Bm:], mask[Bm:]
+                )
+            return to_tree(carry[0]), evals
+        carry = scan(carry, J, slot, scale, k, mask)
+        return to_tree(carry[0]), jnp.zeros((0,))
+
+    return run
+
+
 # ------------------------------------------------------------------ #
 # device stream: fused generator + control loop
 # ------------------------------------------------------------------ #
@@ -314,6 +677,9 @@ def make_fused_runner(
     update_fn: Callable[[Pytree, Pytree, Any], Pytree] | None = None,
     init: str = "distinct",
     unroll: int = 1,
+    block_size: int = 1,
+    collect_extras: bool = True,
+    snapshot_dtype=None,
 ):
     """Build the fused engine: `stream_device.stream_step` ∘ `update_step`.
 
@@ -328,7 +694,21 @@ def make_fused_runner(
     importance scale of its dispatch-time p, so the weighted update stays
     unbiased under the time-varying policy.  ``extras`` carries the
     per-step event times plus the final/trajectory sampling vectors and
-    the on-device occupancy, busy-time, delay and completion statistics.
+    the on-device occupancy, busy-time, delay and completion statistics;
+    ``collect_extras=False`` prunes all of that dead weight (benchmark /
+    fire-and-forget runs) — only ``p_final`` survives.
+
+    With ``block_size=E > 1`` the stream advances E CS steps per scan
+    iteration and the E gradients are computed in one vmapped call from the
+    window-entry snapshots; a sequential fixup pass re-derives the exact
+    iterates, recomputing (under `lax.cond`) only the gradients whose task
+    was dispatched inside the same window — the device-side analogue of the
+    host path's conflict-free cut, trajectory-identical to ``block_size=1``
+    with the same PRNG key.  Caveat: under `jax.vmap` (`vmap_scenarios` /
+    `run_matrix(stream="device")`) the conflict predicate is batched, so the
+    cond lowers to a both-branches select and every gradient is computed
+    twice — blocked fused runs are only a win un-vmapped; the vmapped
+    scenario matrix should prefer the host blocked path or ``block_size=1``.
     """
     import jax
     import jax.numpy as jnp
@@ -344,8 +724,14 @@ def make_fused_runner(
             raise ValueError("adaptive=True requires refresh_every > 0")
         if eval_fn is not None and eval_every and eval_every % refresh_every:
             raise ValueError("eval_every must be a multiple of refresh_every")
+    if block_size > 1 and update_fn is not None:
+        raise ValueError(
+            "block_size > 1 requires the default update w - scale*g"
+        )
     bound = bound if bound is not None else BoundConstants(C=C, T=T)
     importance = weighting == "importance"
+    E = max(int(block_size), 1)
+    need_stats = collect_extras or adaptive
 
     # chunk length: refresh and eval both happen at chunk boundaries
     if adaptive:
@@ -361,12 +747,20 @@ def make_fused_runner(
     update_fn, default_update = _default_update(update_fn)
 
     def run(w0, mu, p0, key, eta):
-        pack, unpack = _snapshot_codec(w0)
+        pack, unpack, enc = _snapshot_codec(w0, snapshot_dtype)
         flat_mode = default_update and unpack is not None
+        if E > 1 and not flat_mode:
+            raise ValueError(
+                "block_size > 1 requires uniform-dtype parameters "
+                "(flat-packed snapshot storage)"
+            )
         update_step = _make_update_step(
-            grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode
+            grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, enc
         )
-        ucarry, to_tree = _init_update_carry(w0, C, pack, unpack, flat_mode, fedbuff_Z)
+        rows = C + 1 if E > 1 else C
+        ucarry, to_tree = _init_update_carry(
+            w0, rows, pack, unpack, flat_mode, fedbuff_Z, enc
+        )
 
         mu = jnp.asarray(mu, jnp.float32)
         p0 = jnp.asarray(p0, jnp.float32)
@@ -383,26 +777,102 @@ def make_fused_runner(
         else:
             slot_scale0 = jnp.broadcast_to(eta, (C,))
 
-        def inner(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0):
-            """One chunk of fused CS steps (p constant within the chunk)."""
+        def event_body(c, x):
+            """One fused CS step (stream advance + algorithm update)."""
+            ucarry, sstate, stats, slot_scale, p = c
+            urk, uek, kn, k = x
+            occ_pre = sstate.occ
+            sstate, ev = sd.stream_step(sstate, mu, (urk, uek, kn))
+            scale = slot_scale[ev.slot] if importance else eta
+            ucarry = update_step(ucarry, ev.j, ev.slot, scale, k)
+            if need_stats:
+                stats = sd.stats_step(stats, ev, occ_pre, sstate.occ, k)
+            if importance:
+                slot_scale = slot_scale.at[ev.slot].set(eta / (n * p[ev.k]))
+            return (ucarry, sstate, stats, slot_scale, p), ev.t
 
-            def body(c, x):
-                ucarry, sstate, stats, slot_scale = c
-                urk, uek, kn, k = x
+        def window_body(c, x):
+            """One E-event micro-block of fused CS steps.
+
+            Phase 1 advances the closed network E steps (cheap integer /
+            scalar ops, one inner scan); phase 2 batch-gathers the E
+            window-entry snapshots and computes all gradients in one vmapped
+            call; phase 3 replays the exact sequential updates, recomputing
+            a gradient only when its task was dispatched *inside* this
+            window (``conf >= 0`` — its snapshot was written after the batch
+            gather).
+            """
+            ucarry, sstate, stats, slot_scale, p = c
+            urw, uew, knw, kw = x
+
+            def sbody(cc, xx):
+                sstate, stats, slot_scale, lastw, i = cc
+                urk, uek, kn, k = xx
                 occ_pre = sstate.occ
                 sstate, ev = sd.stream_step(sstate, mu, (urk, uek, kn))
-                scale = slot_scale[ev.slot] if importance else eta
-                ucarry = update_step(ucarry, ev.j, ev.slot, scale, k)
-                stats = sd.stats_step(stats, ev, occ_pre, sstate.occ, k)
+                sc = slot_scale[ev.slot] if importance else eta
+                conf = lastw[ev.slot]
+                lastw = lastw.at[ev.slot].set(i)
+                if need_stats:
+                    stats = sd.stats_step(stats, ev, occ_pre, sstate.occ, k)
                 if importance:
                     slot_scale = slot_scale.at[ev.slot].set(eta / (n * p[ev.k]))
-                return (ucarry, sstate, stats, slot_scale), ev.t
+                return (sstate, stats, slot_scale, lastw, i + 1), (
+                    ev.j, ev.slot, sc, conf, ev.t,
+                )
 
-            ks = k0 + jnp.arange(Kc.shape[0], dtype=jnp.int32)
-            (ucarry, sstate, stats, slot_scale), ts = jax.lax.scan(
-                body, (ucarry, sstate, stats, slot_scale), (ur, ue, Kc, ks),
-                unroll=unroll,
+            lastw0 = jnp.full((C,), -1, jnp.int32)
+            (sstate, stats, slot_scale, _, _), (jv, sv, scv, confv, tv) = (
+                jax.lax.scan(
+                    sbody,
+                    (sstate, stats, slot_scale, lastw0, jnp.int32(0)),
+                    (urw, uew, knw, kw),
+                )
             )
+            w, snaps, acc = ucarry
+            G0 = _make_batched_grads(grad_fn, pack, unpack)(jv, snaps[sv], kw)
+
+            apply_event = _make_apply_event(fedbuff_Z, enc)
+
+            def fbody(cc, xx):
+                j, s, sc, conf, g0, k = xx
+                row = cc[1][s]
+                g = jax.lax.cond(
+                    conf >= 0,
+                    lambda r: pack(grad_fn(j, unpack(r), k)),
+                    lambda r: g0,
+                    row,
+                )
+                return apply_event(cc, g, s, sc, k), ()
+
+            ucarry, _ = jax.lax.scan(
+                fbody, (w, snaps, acc), (jv, sv, scv, confv, G0, kw)
+            )
+            return (ucarry, sstate, stats, slot_scale, p), tv
+
+        def advance(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0):
+            """Fused CS steps over one chunk: E-event windows + remainder."""
+            c = (ucarry, sstate, stats, slot_scale, p)
+            Lc = Kc.shape[0]
+            ks = k0 + jnp.arange(Lc, dtype=jnp.int32)
+            nW = Lc // E if E > 1 else 0
+            Wc = nW * E
+            ts_parts = []
+            if nW:
+                resh = lambda a: a[:Wc].reshape(nW, E)
+                c, tsw = jax.lax.scan(
+                    window_body, c, (resh(ur), resh(ue), resh(Kc), resh(ks)),
+                    unroll=unroll,
+                )
+                ts_parts.append(tsw.reshape(Wc))
+            if Wc < Lc:
+                c, tse = jax.lax.scan(
+                    event_body, c, (ur[Wc:], ue[Wc:], Kc[Wc:], ks[Wc:]),
+                    unroll=unroll,
+                )
+                ts_parts.append(tse)
+            ucarry, sstate, stats, slot_scale, p = c
+            ts = ts_parts[0] if len(ts_parts) == 1 else jnp.concatenate(ts_parts)
             return ucarry, sstate, stats, slot_scale, ts
 
         def sample_dispatch(cdf, u):
@@ -414,7 +884,7 @@ def make_fused_runner(
             ucarry, sstate, stats, slot_scale, p, cdf = carry
             ur, ue, ud, k0 = xs
             Kc = sample_dispatch(cdf, ud)
-            ucarry, sstate, stats, slot_scale, ts = inner(
+            ucarry, sstate, stats, slot_scale, ts = advance(
                 ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0
             )
             if adaptive:
@@ -437,7 +907,8 @@ def make_fused_runner(
                     lambda u: jnp.float32(0.0),
                     ucarry[0],
                 )
-            return (ucarry, sstate, stats, slot_scale, p, cdf), (ts, ev_val, p)
+            ys = (ts, ev_val, p) if collect_extras else (ev_val,)
+            return (ucarry, sstate, stats, slot_scale, p, cdf), ys
 
         carry = (ucarry, sstate, stats, slot_scale0, p0, jnp.cumsum(p0))
         xs = (
@@ -446,20 +917,27 @@ def make_fused_runner(
             u_disp[:Tc].reshape(n_chunks, L),
             jnp.arange(n_chunks, dtype=jnp.int32) * L,
         )
-        carry, (ts, evals, p_traj) = jax.lax.scan(chunk_step, carry, xs)
+        carry, ys = jax.lax.scan(chunk_step, carry, xs)
+        if collect_extras:
+            ts, evals, p_traj = ys
+            ts = ts.reshape(Tc)
+        else:
+            (evals,) = ys
         ucarry, sstate, stats, slot_scale, p, cdf = carry
-        ts = ts.reshape(Tc)
         if Tc < T:  # tail events past the last chunk boundary
             Kc = sample_dispatch(cdf, u_disp[Tc:])
-            ucarry, sstate, stats, slot_scale, ts_tail = inner(
+            ucarry, sstate, stats, slot_scale, ts_tail = advance(
                 ucarry, sstate, stats, slot_scale, p,
                 u_race[Tc:], u_exp[Tc:], Kc, Tc,
             )
-            ts = jnp.concatenate([ts, ts_tail])
+            if collect_extras:
+                ts = jnp.concatenate([ts, ts_tail])
         if eval_on:
             evals = evals[eval_stride - 1 :: eval_stride]
         else:
             evals = jnp.zeros((0,))
+        if not collect_extras:
+            return to_tree(ucarry[0]), evals, {"p_final": p}
         extras = {
             "t": ts,
             "p_final": p,
@@ -485,25 +963,49 @@ def make_runner(
     eval_every: int = 0,
     update_fn: Callable[[Pytree, Pytree, Any], Pytree] | None = None,
     unroll: int = 1,
+    block_size: int = 1,
+    kernel: str = "jnp",
+    snapshot_dtype=None,
+    interpret: bool = True,
     **device_kw,
 ):
     """Build the scan engine; ``stream`` selects the event source.
 
     ``stream="host"`` (default) replays a pre-simulated `EventStream` — the
-    parity oracle: ``run(w0, J, slot, scale[, eval_every])``.
+    parity oracle: ``run(w0, J, slot, scale[, eval_every])``.  With
+    ``block_size=E > 1`` it replays `EventBlocks` micro-blocks instead:
+    ``run(w0, J, slot, scale, k, mask[, chunk_blocks, n_chunks])`` (see
+    `blocked_inputs`); ``kernel`` picks the jnp fallback or the fused
+    Pallas prefix-scan kernel, ``snapshot_dtype`` an optional narrower ring
+    storage dtype.
 
     ``stream="device"`` fuses the on-device closed-network generator with
     the update step (zero host pre-simulation): ``run(w0, mu, p0, key, eta)``.
     Requires ``n=`` and ``T=`` (and accepts `make_fused_runner`'s
     ``weighting / adaptive / refresh_every / bound / ctrl_lr / ctrl_iters /
-    init`` knobs).
+    init / collect_extras`` knobs); ``block_size`` advances E CS steps per
+    scan iteration.
     """
     if stream == "host":
         if device_kw:
             raise TypeError(f"host stream does not accept {sorted(device_kw)}")
+        if block_size > 1:
+            if eval_every:
+                raise ValueError(
+                    "block_size > 1: the eval cadence is encoded in the "
+                    "blocked layout — pass chunk_blocks/n_chunks from "
+                    "blocked_inputs(..., eval_every=...) at call time "
+                    "instead of eval_every"
+                )
+            return _make_host_block_runner(
+                grad_fn, C, block_size, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
+                update_fn=update_fn, unroll=unroll, kernel=kernel,
+                snapshot_dtype=snapshot_dtype, interpret=interpret,
+            )
         return _make_host_runner(
             grad_fn, C, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
             eval_every=eval_every, update_fn=update_fn, unroll=unroll,
+            snapshot_dtype=snapshot_dtype,
         )
     if stream == "device":
         try:
@@ -513,6 +1015,7 @@ def make_runner(
         return make_fused_runner(
             grad_fn, n, C, T, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
             eval_every=eval_every, update_fn=update_fn, unroll=unroll,
+            block_size=block_size, snapshot_dtype=snapshot_dtype,
             **device_kw,
         )
     raise ValueError(stream)
@@ -551,6 +1054,11 @@ def jit_runner(
     update_fn=None,
     unroll: int = 1,
     vmap_streams: bool = False,
+    block_size: int = 1,
+    kernel: str = "jnp",
+    snapshot_dtype=None,
+    donate: bool = False,
+    interpret: bool = True,
 ):
     """Jitted, memoized host-replay runner.
 
@@ -560,26 +1068,69 @@ def jit_runner(
     `jax.jit`'s compilation cache instead of rebuilding the closure (and
     with it the whole trace) per cadence.  ``vmap_streams=True`` returns the
     batched variant mapping over stacked (J, slot, scale).
+
+    ``block_size=E > 1`` returns the blocked runner (`blocked_inputs`
+    arrays; the eval layout ``chunk_blocks``/``n_chunks`` are its call-time
+    statics).  ``donate=True`` donates the per-run event-stream buffers to
+    the compiled program (callers passing freshly built arrays — the
+    `_run_scan` / `run_matrix` drivers — save one device-side copy of the
+    stream; don't enable it when re-calling with the same arrays).
     """
     import jax
 
     cache, func = _runner_cache(grad_fn)
-    key = ("host", func, C, fedbuff_Z, eval_fn, update_fn, unroll, vmap_streams)
-    if key not in cache:
-        run = _make_host_runner(
-            grad_fn, C, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn, eval_every=0,
-            update_fn=update_fn, unroll=unroll,
+    key = (
+        "host", func, C, fedbuff_Z, eval_fn, update_fn, unroll, vmap_streams,
+        block_size, kernel, snapshot_dtype, donate, interpret,
+    )
+    if block_size > 1 and eval_every:
+        raise ValueError(
+            "block_size > 1: the eval cadence is encoded in the blocked "
+            "layout — pass chunk_blocks/n_chunks from blocked_inputs(..., "
+            "eval_every=...) at call time instead of eval_every"
+        )
+    if key in cache:
+        jitted = cache[key]
+        return jitted if block_size > 1 else partial(jitted, eval_every=eval_every)
+    if block_size > 1:
+        base = _make_host_block_runner(
+            grad_fn, C, block_size, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
+            update_fn=update_fn, unroll=unroll, kernel=kernel,
+            snapshot_dtype=snapshot_dtype, interpret=interpret,
         )
         if vmap_streams:
-            def vrun(w0, J, slot, scale, eval_every=0):
+            def run(w0, J, slot, scale, k, mask, chunk_blocks=0, n_chunks=0):
                 return jax.vmap(
-                    lambda w, a, b, c: run(w, a, b, c, eval_every),
-                    in_axes=(None, 0, 0, 0),
-                )(w0, J, slot, scale)
-
-            cache[key] = jax.jit(vrun, static_argnames=("eval_every",))
+                    lambda w, a, b, c, d, e: base(
+                        w, a, b, c, d, e, chunk_blocks, n_chunks
+                    ),
+                    in_axes=(None, 0, 0, 0, 0, 0),
+                )(w0, J, slot, scale, k, mask)
         else:
-            cache[key] = jax.jit(run, static_argnames=("eval_every",))
+            run = base
+        cache[key] = jax.jit(
+            run,
+            static_argnames=("chunk_blocks", "n_chunks"),
+            donate_argnums=(1, 2, 3, 4, 5) if donate else (),
+        )
+        return cache[key]
+    base = _make_host_runner(
+        grad_fn, C, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn, eval_every=0,
+        update_fn=update_fn, unroll=unroll, snapshot_dtype=snapshot_dtype,
+    )
+    if vmap_streams:
+        def run(w0, J, slot, scale, eval_every=0):
+            return jax.vmap(
+                lambda w, a, b, c: base(w, a, b, c, eval_every),
+                in_axes=(None, 0, 0, 0),
+            )(w0, J, slot, scale)
+    else:
+        run = base
+    cache[key] = jax.jit(
+        run,
+        static_argnames=("eval_every",),
+        donate_argnums=(1, 2, 3) if donate else (),
+    )
     return partial(cache[key], eval_every=eval_every)
 
 
@@ -601,7 +1152,9 @@ def jit_fused_runner(
     `pmap`s the batched runner over that many devices (inputs carry an extra
     leading device axis) — the scenario matrix then runs data-parallel
     across the host platform's cores/accelerators, which the serial
-    host-export path cannot.
+    host-export path cannot.  Extra keywords (``block_size``,
+    ``collect_extras``, ``snapshot_dtype``, ...) forward to
+    `make_fused_runner` and participate in the memo key.
     """
     import jax
 

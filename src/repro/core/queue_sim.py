@@ -43,10 +43,13 @@ __all__ = [
     "SimConfig",
     "SimResult",
     "EventStream",
+    "EventBlocks",
     "ClosedNetworkSim",
     "simulate",
     "simulate_batch",
     "export_stream",
+    "export_blocks",
+    "segment_blocks",
 ]
 
 #: shared RNG pre-draw block size — every entry point uses the same default so
@@ -158,6 +161,117 @@ class EventStream:
         if self.delay_steps is None:
             return None
         return _split_delays(self.J, self.delay_steps, self.n)
+
+
+def segment_blocks(
+    slot: np.ndarray, block_size: int, cut_every: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Greedy conflict-free cut of an event stream into micro-blocks.
+
+    Walks the (T,) ``slot`` sequence and closes the current block whenever the
+    next event's ring-buffer slot already appears in it (its dispatch-time
+    snapshot was *written inside the block*, so its gradient depends on an
+    in-block update), or the block holds ``block_size`` events, or — when
+    ``cut_every > 0`` — the event index crosses a multiple of ``cut_every``
+    (so evaluation points land exactly on block boundaries).
+
+    Returns ``(idx, mask)`` with fixed shape ``(B, E)``: ``idx[b, i]`` is the
+    event index of the i-th event of block b (0 on padding), ``mask[b, i]``
+    marks real events.  Within a block all slots are distinct, so the blocked
+    replay — batch-gather, batched gradients, prefix-sum of the scaled
+    updates — reproduces the sequential Algorithm 1 exactly.
+    """
+    E = int(block_size)
+    if E < 1:
+        raise ValueError("block_size >= 1 required")
+    slot = np.asarray(slot)
+    T = slot.size
+    starts = [0]
+    seen: set[int] = set()
+    length = 0
+    for k in range(T):
+        s = int(slot[k])
+        cut = length >= E or s in seen or (cut_every and k and k % cut_every == 0)
+        if cut:
+            starts.append(k)
+            seen = set()
+            length = 0
+        seen.add(s)
+        length += 1
+    B = len(starts)
+    bounds = np.asarray(starts + [T])
+    idx = np.zeros((B, E), np.int32)
+    mask = np.zeros((B, E), bool)
+    for b in range(B):
+        lo, hi = bounds[b], bounds[b + 1]
+        idx[b, : hi - lo] = np.arange(lo, hi)
+        mask[b, : hi - lo] = True
+    return idx, mask
+
+
+@dataclass
+class EventBlocks:
+    """Conflict-free micro-blocks of an `EventStream`, in fixed-shape form.
+
+    ``idx``/``mask`` come from `segment_blocks`; ``J``/``slot``/``k`` are the
+    blocked event columns with padding already neutralized: padded lanes get
+    client 0, the trash ring-buffer row ``C`` (the blocked engine allocates
+    C+1 snapshot rows so padded scatters land in a scratch row) and event
+    index 0 — their update scale is forced to 0 by `blocked_scales`.
+    """
+
+    idx: np.ndarray          # (B, E) event index per block lane
+    mask: np.ndarray         # (B, E) True on real events, False on padding
+    J: np.ndarray            # (B, E) completing client (0 on padding)
+    slot: np.ndarray         # (B, E) ring slot; == C (trash row) on padding
+    n: int
+    C: int
+    T: int
+    block_size: int
+    cut_every: int = 0
+    stream: EventStream | None = None
+
+    @property
+    def B(self) -> int:
+        return int(self.idx.shape[0])
+
+    @classmethod
+    def from_stream(
+        cls, stream: EventStream, block_size: int, cut_every: int = 0
+    ) -> "EventBlocks":
+        idx, mask = segment_blocks(stream.slot, block_size, cut_every)
+        return cls(
+            idx=idx,
+            mask=mask,
+            J=np.where(mask, stream.J[idx], 0).astype(np.int32),
+            slot=np.where(mask, stream.slot[idx], stream.C).astype(np.int32),
+            n=stream.n,
+            C=stream.C,
+            T=stream.T,
+            block_size=int(block_size),
+            cut_every=int(cut_every),
+            stream=stream,
+        )
+
+    def blocked_scales(self, scale: np.ndarray) -> np.ndarray:
+        """Blocked view of a per-step (T,) scale array; 0 on padding."""
+        return np.where(self.mask, np.asarray(scale)[self.idx], 0.0)
+
+
+def export_blocks(
+    cfg: SimConfig,
+    block_size: int,
+    cut_every: int = 0,
+    block: int = DEFAULT_BLOCK,
+) -> EventBlocks:
+    """Simulate ``cfg`` and export conflict-free event micro-blocks.
+
+    `export_stream` followed by `segment_blocks` — the host-side feed of the
+    blocked scan engine (``engine_scan.make_runner(block_size=...)``).
+    """
+    return EventBlocks.from_stream(
+        export_stream(cfg, block=block), block_size, cut_every
+    )
 
 
 def _split_delays(node: np.ndarray, value: np.ndarray, n: int) -> list:

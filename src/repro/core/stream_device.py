@@ -44,7 +44,7 @@ from typing import Any, NamedTuple
 
 import numpy as np
 
-from .queue_sim import EventStream
+from .queue_sim import EventBlocks, EventStream
 from .theory import BoundConstants
 
 __all__ = [
@@ -57,6 +57,7 @@ __all__ = [
     "stats_step",
     "stats_stream_fn",
     "generate_stream",
+    "generate_blocks",
     "mva_throughput_delays",
     "optimal_eta_jnp",
     "generalized_bound_jnp",
@@ -306,6 +307,32 @@ def generate_stream(
         delay_steps=np.asarray(delays, np.int32),
         queue_len_sum=np.asarray(stats.occ_sum, np.float64),
         queue_len_tw=np.asarray(stats.occ_tw, np.float64),
+    )
+
+
+def generate_blocks(
+    mu,
+    p,
+    C: int,
+    T: int,
+    block_size: int,
+    seed: int | Any = 0,
+    init: str = "distinct",
+    cut_every: int = 0,
+) -> EventBlocks:
+    """Device-generated event stream, segmented into conflict-free blocks.
+
+    The blocked analogue of `generate_stream`: the closed network is
+    simulated on device (one compiled scan, cached per shape) and the
+    resulting stream is cut into fixed-shape ``(B, E)`` index+mask
+    micro-blocks by `queue_sim.segment_blocks` — the feed of the blocked
+    scan engine when the events should come from the device generator
+    rather than the host simulator.
+    """
+    return EventBlocks.from_stream(
+        generate_stream(mu, p, C, T, seed=seed, init=init),
+        block_size,
+        cut_every,
     )
 
 

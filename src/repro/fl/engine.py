@@ -267,6 +267,7 @@ def run_experiment(
         stream=flc.stream if use_scan else "host",
         adaptive=flc.adaptive if use_scan else False,
         refresh_every=flc.refresh_every,
+        block_size=flc.block_size if use_scan else 1,
     )
 
     if method == "gen_async":
@@ -342,6 +343,7 @@ def run_matrix(
     eval_every: int = 50,
     data: FederatedClassification | None = None,
     stream: str | None = None,
+    block_size: int | None = None,
 ) -> MatrixResult:
     """Run the whole scenario grid in ONE compiled call.
 
@@ -357,6 +359,12 @@ def run_matrix(
                 only; supports ``flc.adaptive`` sampling (the "uniform"
                 policy rows then double as adaptive-from-uniform runs).
 
+    ``block_size`` (default ``flc.block_size``) turns on the blocked engine:
+    with E > 1 the host path replays conflict-free event micro-blocks
+    (`queue_sim.export_blocks` + the batched `engine_scan` block step, with
+    eval points forced onto block boundaries) and the device path advances E
+    CS steps per scan iteration — both trajectory-equivalent to E=1.
+
     The model/dataset are shared across scenarios; only the queueing clock,
     sampling vector and event realization differ.  Pass a persistent
     ``data`` object to reuse the compiled program across calls (the jitted
@@ -367,6 +375,7 @@ def run_matrix(
     stream = flc.stream if stream is None else stream
     if stream not in ("host", "device"):
         raise ValueError(stream)
+    block_size = flc.block_size if block_size is None else int(block_size)
     speed_ratios = (flc.speed_ratio,) if speed_ratios is None else tuple(speed_ratios)
     seeds, policies = tuple(seeds), tuple(policies)
     data = data or FederatedClassification(n_clients=flc.n_clients, seed=flc.seed)
@@ -416,6 +425,7 @@ def run_matrix(
             eval_every=eval_every,
             adaptive=flc.adaptive,
             refresh_every=flc.refresh_every,
+            block_size=block_size,
         )
         args = (jnp.asarray(mu_b), jnp.asarray(p_b), jnp.stack(keys))
         if shard > 1:
@@ -438,9 +448,7 @@ def run_matrix(
             occ_mean=np.asarray(dev_extras["occ_mean"], np.float64).reshape(S, P, H, n),
         )
     else:
-        Js = np.empty((B, T), np.int32)
-        slots = np.empty((B, T), np.int32)
-        scales = np.empty((B, T), np.float64)
+        streams = []
         t_phys = np.empty((B, T))
         b = 0
         for seed in seeds:
@@ -451,17 +459,41 @@ def run_matrix(
                         SimConfig(mu=mus[hi], p=p, C=C, T=T,
                                   service=flc.service, seed=seed)
                     )
-                    Js[b], slots[b] = es.J, es.slot
-                    scales[b] = step_scales(es, eta, p, flc.weighting)
+                    streams.append((es, step_scales(es, eta, p, flc.weighting)))
                     t_phys[b] = es.t
                     b += 1
-        runner = jit_runner(
-            clients.device_grad, C, eval_fn=acc_fn, eval_every=eval_every,
-            vmap_streams=True,
-        )
-        w_final, evals = runner(
-            w0, jnp.asarray(Js), jnp.asarray(slots), jnp.asarray(scales)
-        )
+        if block_size > 1:
+            from repro.core import EventBlocks, blocked_inputs_batch
+
+            blocks = [
+                EventBlocks.from_stream(es, block_size, cut_every=eval_every)
+                for es, _ in streams
+            ]
+            Jb, slotb, scb, kb, maskb, chunk_blocks, n_chunks = (
+                blocked_inputs_batch(blocks, [sc for _, sc in streams],
+                                     eval_every)
+            )
+            runner = jit_runner(
+                clients.device_grad, C, eval_fn=acc_fn,
+                block_size=block_size, vmap_streams=True,
+                donate=jax.default_backend() != "cpu",
+            )
+            w_final, evals = runner(
+                w0, jnp.asarray(Jb), jnp.asarray(slotb), jnp.asarray(scb),
+                jnp.asarray(kb), jnp.asarray(maskb),
+                chunk_blocks=chunk_blocks, n_chunks=n_chunks,
+            )
+        else:
+            Js = np.stack([es.J for es, _ in streams])
+            slots = np.stack([es.slot for es, _ in streams])
+            scales = np.stack([sc for _, sc in streams])
+            runner = jit_runner(
+                clients.device_grad, C, eval_fn=acc_fn, eval_every=eval_every,
+                vmap_streams=True,
+            )
+            w_final, evals = runner(
+                w0, jnp.asarray(Js), jnp.asarray(slots), jnp.asarray(scales)
+            )
 
     final_acc = np.asarray(jax.jit(jax.vmap(acc_fn))(w_final))
     evals = np.asarray(evals)

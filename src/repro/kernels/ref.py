@@ -7,6 +7,7 @@ import numpy as np
 
 __all__ = [
     "weighted_update_ref",
+    "block_prefix_update_ref",
     "flash_attention_ref",
     "ssd_scan_ref",
     "moe_gmm_ref",
@@ -31,6 +32,25 @@ def weighted_update_ref(
         step = gf
     wf = w.astype(jnp.float32) - scale.astype(jnp.float32) * step
     return wf.astype(w.dtype), (None if mf is None else mf.astype(m.dtype))
+
+
+def block_prefix_update_ref(
+    snaps: jax.Array,    # (R, P) flat-packed snapshot ring buffer
+    w: jax.Array,        # (P,) current server weights
+    D: jax.Array,        # (E, P) per-event scaled update deltas (0 on padding)
+    slots: jax.Array,    # (E,) ring slot per event (trash row on padding)
+) -> tuple[jax.Array, jax.Array]:
+    """Blocked server update (the engine's jnp fallback / kernel oracle):
+
+        W_i = w - sum_{j<=i} D_j,   snaps[slot_i] = W_i,   w' = W_{E-1}
+
+    fp32 prefix accumulation, rows cast to the ring-buffer storage dtype.
+    Within a conflict-free block all real slots are distinct; duplicate
+    (padded) slots all target the trash row, so scatter order is moot.
+    """
+    W = w[None, :].astype(jnp.float32) - jnp.cumsum(D.astype(jnp.float32), axis=0)
+    snaps = snaps.at[slots].set(W.astype(snaps.dtype))
+    return snaps, W[-1].astype(w.dtype)
 
 
 def flash_attention_ref(

@@ -1,14 +1,32 @@
-"""Pallas kernel: fused Generalized-AsyncSGD server update (Alg. 1 line 10).
+"""Pallas kernels: fused Generalized-AsyncSGD server updates.
+
+Per-event kernel (`weighted_update`, Alg. 1 line 10):
 
     w' = w - scale * (momentum * m + g),     scale = eta / (n * p_j)
 
-This is the hot loop of the central server — executed once per CS step over
-every parameter.  Fusing the importance-weighted scale, momentum update and
-parameter write into one VMEM pass makes the server update bandwidth-bound
-at exactly one read+write per buffer (vs 3 reads/2 writes unfused).
+Fusing the importance-weighted scale, momentum update and parameter write
+into one VMEM pass makes the server update bandwidth-bound at exactly one
+read+write per buffer (vs 3 reads/2 writes unfused).
+
+Block kernel (`block_prefix_update`, the blocked engine's hot loop): one
+conflict-free micro-block of E events applies
+
+    W_i = w - sum_{j<=i} D_j          (D_j = per-event scaled update delta)
+    snaps[slot_i] = W_i,   w' = W_{E-1}
+
+in a single pass over column tiles: each tile loads the w tile once,
+accumulates the E deltas in registers, and scatters the E intermediate
+weight rows straight into the flat-packed (C+1, P) snapshot ring buffer —
+no per-event snapshot copies are ever materialized, and the ring buffer is
+updated in place (``input_output_aliases``, i.e. buffer donation).  Padded
+lanes carry the trash row index C, so their stores are harmless; duplicate
+slot stores resolve last-writer-wins (ascending event order), matching the
+sequential semantics.  The jnp oracle lives in `repro.kernels.ref.
+block_prefix_update_ref` — the CPU/parity fallback the engine uses by
+default.
 
 Tiling: params are processed as flattened (rows, 1024) tiles — (8, 128)
-VREG-aligned lanes; the scalar scale rides in SMEM.
+VREG-aligned lanes; scalars (scale / slot ids) ride in SMEM.
 """
 from __future__ import annotations
 
@@ -93,6 +111,63 @@ def weighted_update(
         interpret=interpret,
     )(scale_arr, w2, g2)
     return ow.reshape(-1)[:n].reshape(shape), None
+
+
+BLOCK_TILE = 1024  # column tile of the block kernel (fp32: 4 KiB per row)
+
+
+def _block_kernel(slots_ref, w_ref, d_ref, _snaps_ref, ow_ref, osnaps_ref, *, E):
+    """One column tile of the fused block update (see module docstring).
+
+    ``osnaps_ref`` aliases the input ring buffer: only the E event rows are
+    stored; every other snapshot row passes through untouched.
+    """
+    w = w_ref[...].astype(jnp.float32)   # (1, TILE)
+    acc = jnp.zeros_like(w)
+    for i in range(E):                   # static unroll over the micro-block
+        acc = acc + d_ref[i, :][None, :].astype(jnp.float32)
+        osnaps_ref[pl.ds(slots_ref[i], 1), :] = (w - acc).astype(osnaps_ref.dtype)
+    ow_ref[...] = (w - acc).astype(ow_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_prefix_update(
+    snaps: jax.Array,    # (R, P) flat-packed snapshot ring buffer (R = C + 1)
+    w: jax.Array,        # (P,) current server weights (compute dtype)
+    D: jax.Array,        # (E, P) per-event scaled update deltas, 0 on padding
+    slots: jax.Array,    # (E,) int32 ring slot per event (C = trash row)
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Apply one conflict-free event micro-block to (snaps, w).
+
+    Requires ``P % BLOCK_TILE == 0`` — the blocked engine pads the packed
+    parameter vector once at init (`engine_scan._snapshot_codec`), so the
+    scan-time hot path never re-pads.  Returns ``(snaps', w')``.
+    """
+    R, P = snaps.shape
+    E = D.shape[0]
+    if P % BLOCK_TILE:
+        raise ValueError(f"P={P} must be a multiple of BLOCK_TILE={BLOCK_TILE}")
+    grid = (P // BLOCK_TILE,)
+    tile = lambda rows: pl.BlockSpec((rows, BLOCK_TILE), lambda i: (0, i))
+    ow, osnaps = pl.pallas_call(
+        functools.partial(_block_kernel, E=E),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((E,), lambda i: (0,)),
+            tile(1),
+            tile(E),
+            tile(R),
+        ],
+        out_specs=[tile(1), tile(R)],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, P), w.dtype),
+            jax.ShapeDtypeStruct(snaps.shape, snaps.dtype),
+        ],
+        input_output_aliases={3: 1},  # ring buffer updated in place
+        interpret=interpret,
+    )(slots.astype(jnp.int32), w[None, :], D, snaps)
+    return osnaps, ow[0]
 
 
 def tree_weighted_update(

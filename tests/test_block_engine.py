@@ -1,0 +1,422 @@
+"""Blocked (event micro-batched) engine: segmentation invariants, blocked-vs-
+per-event parity on both stream paths, the fused Pallas block kernel, the
+bf16 snapshot codec and the extras-pruning / donation knobs.
+
+The per-event scan engine is itself parity-locked against the Python
+reference loop (tests/test_engine.py), so blocked == per-event == oracle.
+The hypothesis-based property test is optional (pip install .[dev]).
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    EventBlocks,
+    ServerConfig,
+    SimConfig,
+    blocked_inputs,
+    export_blocks,
+    export_stream,
+    jit_runner,
+    run_fedbuff,
+    run_generalized_async_sgd,
+    segment_blocks,
+    step_scales,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+class Quadratic:
+    """Clients hold quadratics f_i(w) = 0.5 ||w - c_i||^2 — the blocked /
+    per-event parity oracle (contractive dynamics: float-associativity
+    differences stay bounded instead of amplifying)."""
+
+    def __init__(self, n, d=4, seed=0):
+        rng = np.random.default_rng(seed)
+        self.c = rng.normal(size=(n, d)).astype(np.float32)
+        self.c_dev = jnp.asarray(self.c)
+        self.d = d
+
+    def grad(self, i, w, k):
+        return w - self.c[i]
+
+    def device_grad(self, j, w, k):
+        return w - self.c_dev[j]
+
+
+def _nonuniform_p(n, seed=1):
+    p = np.random.default_rng(seed).uniform(0.5, 1.5, n)
+    return p / p.sum()
+
+
+def _check_blocks(blocks: EventBlocks):
+    """Every event in exactly one block, in order; no intra-block slot
+    repeats; padding only at block tails; pad lanes neutralized."""
+    idx, mask = blocks.idx, blocks.mask
+    # masks are a prefix of each row (padding only at the tail)
+    assert np.all(mask[:, :1]), "every block holds at least one event"
+    assert np.all(mask[:, 1:] <= mask[:, :-1]), "padding must be a row suffix"
+    # events partition 0..T-1 in stream order
+    flat = idx[mask]
+    np.testing.assert_array_equal(flat, np.arange(blocks.T))
+    # no slot repeats within a block (padding rows sit on the trash row C)
+    for b in range(blocks.B):
+        real = blocks.slot[b][mask[b]]
+        assert len(set(real.tolist())) == real.size
+        assert np.all(real < blocks.C)
+        assert np.all(blocks.slot[b][~mask[b]] == blocks.C)
+    assert np.all(blocks.J[~mask] == 0)
+    # blocked columns match the stream on real lanes
+    st_ = blocks.stream
+    np.testing.assert_array_equal(blocks.J[mask], st_.J[flat])
+    np.testing.assert_array_equal(blocks.slot[mask], st_.slot[flat])
+
+
+class TestSegmentation:
+    @pytest.mark.parametrize("C", [1, 4, 12])
+    @pytest.mark.parametrize("E", [2, 4, 8])
+    def test_invariants(self, C, E):
+        n = 6
+        cfg = SimConfig(
+            mu=np.random.default_rng(C).uniform(0.3, 4.0, n),
+            p=_nonuniform_p(n, seed=C + E), C=C, T=400, seed=C + 3 * E,
+        )
+        _check_blocks(export_blocks(cfg, E))
+
+    def test_forced_cuts_land_on_eval_boundaries(self):
+        cfg = SimConfig(mu=np.ones(5), p=np.full(5, 0.2), C=3, T=330, seed=1)
+        blocks = export_blocks(cfg, 4, cut_every=50)
+        _check_blocks(blocks)
+        firsts = blocks.idx[:, 0][blocks.mask[:, 0]]
+        lasts = np.array([blocks.idx[b][blocks.mask[b]][-1]
+                          for b in range(blocks.B)])
+        # no block spans a multiple of 50
+        assert np.all(firsts // 50 == lasts // 50)
+
+    def test_block_size_one_is_identity(self):
+        idx, mask = segment_blocks(np.array([0, 1, 0, 2]), 1)
+        np.testing.assert_array_equal(idx[:, 0], np.arange(4))
+        assert mask.all() and idx.shape == (4, 1)
+
+    def test_device_generated_blocks(self):
+        from repro.core import generate_blocks
+
+        blocks = generate_blocks(np.ones(6), np.full(6, 1 / 6), C=4, T=300,
+                                 block_size=4, seed=0)
+        _check_blocks(blocks)
+
+    def test_blocked_scales_zero_on_padding(self):
+        cfg = SimConfig(mu=np.ones(4), p=np.full(4, 0.25), C=3, T=100, seed=0)
+        blocks = export_blocks(cfg, 4)
+        sc = blocks.blocked_scales(np.full(100, 0.5))
+        assert np.all(sc[~blocks.mask] == 0.0)
+        assert np.all(sc[blocks.mask] == 0.5)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def block_cases(draw):
+        n = draw(st.integers(2, 8))
+        C = draw(st.integers(1, 10))
+        T = draw(st.integers(10, 200))
+        E = draw(st.integers(2, 8))
+        seed = draw(st.integers(0, 2**16))
+        cut = draw(st.sampled_from([0, 25, 50]))
+        mu = np.array([draw(st.floats(0.2, 8.0)) for _ in range(n)])
+        praw = np.array([draw(st.floats(0.05, 1.0)) for _ in range(n)])
+        return SimConfig(mu=mu, p=praw / praw.sum(), C=C, T=T, seed=seed), E, cut
+
+    class TestSegmentationHypothesis:
+        @given(case=block_cases())
+        @settings(max_examples=25, deadline=None)
+        def test_invariants(self, case):
+            cfg, E, cut = case
+            _check_blocks(export_blocks(cfg, E, cut_every=cut))
+
+
+# ------------------------------------------------------------------ #
+# blocked replay vs the per-event scan engine (itself oracle-locked)
+# ------------------------------------------------------------------ #
+class TestBlockedParity:
+    N, T = 8, 1200
+
+    def _run(self, cfg, prob, method="gen_async", Z=5):
+        w0 = np.zeros(prob.d, np.float32)
+        if method == "fedbuff":
+            return run_fedbuff(w0, prob, cfg, Z=Z)
+        return run_generalized_async_sgd(w0, prob, cfg)
+
+    @pytest.mark.parametrize("C", [1, 4, 8])  # C == n at 8
+    @pytest.mark.parametrize("E", [4, 7])
+    def test_gen_async_blocked_matches_per_event(self, C, E):
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(
+            n=self.N, C=C, T=self.T, eta=0.02, p=_nonuniform_p(self.N),
+            seed=3, weighting="importance", engine="scan",
+        )
+        w1, _ = self._run(cfg, prob)
+        wb, _ = self._run(replace(cfg, block_size=E), prob)
+        np.testing.assert_allclose(np.asarray(wb), np.asarray(w1), atol=1e-5)
+
+    @pytest.mark.parametrize("Z", [1, 5])
+    def test_fedbuff_blocked_matches_per_event(self, Z):
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=4, T=self.T, eta=0.05, seed=0,
+                           weighting="plain", engine="scan")
+        w1, _ = self._run(cfg, prob, "fedbuff", Z)
+        wb, _ = self._run(replace(cfg, block_size=6), prob, "fedbuff", Z)
+        np.testing.assert_allclose(np.asarray(wb), np.asarray(w1), atol=1e-5)
+
+    def test_eval_curve_and_delays_match(self):
+        """Forced cuts put eval points on block boundaries: identical eval
+        steps, iterates and queueing metadata (same underlying stream)."""
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=4, T=570, eta=0.02, seed=7,
+                           eval_every=100, engine="scan")
+        ev = lambda w: jnp.sum(w**2)
+        w1, tr1 = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob, cfg, eval_fn=ev)
+        wb, trb = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob, replace(cfg, block_size=4),
+            eval_fn=ev)
+        assert trb.eval_steps == tr1.eval_steps
+        np.testing.assert_allclose(trb.eval_values, tr1.eval_values, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(wb), np.asarray(w1), atol=1e-5)
+        np.testing.assert_allclose(trb.times, tr1.times)
+        assert trb.delays == tr1.delays
+        np.testing.assert_allclose(
+            trb.mean_queue_lengths, tr1.mean_queue_lengths
+        )
+
+    @pytest.mark.parametrize("E", [2, 5])
+    def test_fused_device_blocked_matches_per_event(self, E):
+        """Device stream: E CS steps per scan iteration, sequential fixup
+        for in-window dispatches — same PRNG key => same trajectory.
+        Non-uniform p exercises the dispatch-time slot-scale bookkeeping
+        inside the window scan."""
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=4, T=800, eta=0.02, seed=5,
+                           p=_nonuniform_p(self.N), engine="scan",
+                           stream="device", mu=np.ones(self.N))
+        w1, tr1 = self._run(cfg, prob)
+        wb, trb = self._run(replace(cfg, block_size=E), prob)
+        np.testing.assert_allclose(np.asarray(wb), np.asarray(w1), atol=1e-5)
+        np.testing.assert_allclose(trb.times, tr1.times, atol=1e-4)
+
+    def test_fused_device_blocked_fedbuff(self):
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=4, T=600, eta=0.05, seed=2,
+                           weighting="plain", engine="scan", stream="device",
+                           mu=np.ones(self.N))
+        w1, _ = self._run(cfg, prob, "fedbuff")
+        wb, _ = self._run(replace(cfg, block_size=4), prob, "fedbuff")
+        np.testing.assert_allclose(np.asarray(wb), np.asarray(w1), atol=1e-5)
+
+    def test_fused_device_blocked_with_eval_and_nonaligned_chunk(self):
+        """Chunk length not a multiple of E: windows + per-event remainder."""
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=4, T=500, eta=0.02, seed=9,
+                           eval_every=110, engine="scan", stream="device",
+                           mu=np.ones(self.N))
+        ev = lambda w: jnp.sum(w**2)
+        _, tr1 = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob, cfg, eval_fn=ev)
+        _, trb = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob, replace(cfg, block_size=4),
+            eval_fn=ev)
+        assert trb.eval_steps == tr1.eval_steps
+        np.testing.assert_allclose(trb.eval_values, tr1.eval_values, atol=1e-5)
+
+    def test_pallas_kernel_path_matches_jnp(self):
+        prob = Quadratic(self.N, d=37)  # non-tile-aligned parameter count
+        cfg = ServerConfig(n=self.N, C=4, T=300, eta=0.02, seed=2,
+                           engine="scan", block_size=4)
+        wj, _ = self._run(cfg, prob)
+        wp, _ = self._run(replace(cfg, update="pallas"), prob)
+        np.testing.assert_allclose(np.asarray(wp), np.asarray(wj), atol=1e-6)
+
+    def test_vmapped_blocked_streams_match_single(self):
+        """One vmapped call over stacked blocked scenarios == per-scenario."""
+        n, C, T, eta, E = 6, 3, 300, 0.03, 4
+        prob = Quadratic(n)
+        p = _nonuniform_p(n)
+        streams = [
+            export_stream(SimConfig(mu=np.ones(n), p=p, C=C, T=T, seed=s))
+            for s in (0, 1, 2)
+        ]
+        from repro.core import blocked_inputs_batch
+
+        blocks = [EventBlocks.from_stream(s, E) for s in streams]
+        scales = [step_scales(s, eta, p, "importance") for s in streams]
+        Jb, sb, scb, kb, mb, G, nch = blocked_inputs_batch(blocks, scales)
+        runner = jit_runner(prob.device_grad, C, block_size=E,
+                            vmap_streams=True)
+        w0 = jnp.zeros(prob.d, jnp.float32)
+        wB, _ = runner(w0, *map(jnp.asarray, (Jb, sb, scb, kb, mb)),
+                       chunk_blocks=G, n_chunks=nch)
+        single = jit_runner(prob.device_grad, C, block_size=E)
+        for i in range(3):
+            args = blocked_inputs(blocks[i], scales[i])
+            w1, _ = single(w0, *map(jnp.asarray, args[:5]),
+                           chunk_blocks=args[5], n_chunks=args[6])
+            np.testing.assert_allclose(np.asarray(wB[i]), np.asarray(w1),
+                                       atol=1e-6)
+
+    def test_run_matrix_blocked_matches_per_event(self):
+        from repro.configs.base import FLConfig
+        from repro.data.pipeline import FederatedClassification
+        from repro.fl import run_matrix
+
+        flc = FLConfig(n_clients=10, concurrency=4, server_steps=120)
+        data = FederatedClassification(n_clients=10, seed=0)
+        kw = dict(seeds=(0, 1), policies=("uniform", "optimal"),
+                  speed_ratios=(1.0, 8.0), eval_every=60, data=data)
+        m1 = run_matrix(flc, **kw)
+        mb = run_matrix(flc, block_size=4, **kw)
+        assert mb.eval_acc.shape == m1.eval_acc.shape
+        np.testing.assert_allclose(mb.eval_acc, m1.eval_acc, atol=1e-5)
+        np.testing.assert_allclose(mb.final_acc, m1.final_acc, atol=1e-5)
+        np.testing.assert_allclose(mb.eval_times, m1.eval_times)
+
+    def test_run_matrix_device_blocked_matches_per_event(self):
+        """Device stream + blocked: same PRNG keys => same scenario grid."""
+        from repro.configs.base import FLConfig
+        from repro.data.pipeline import FederatedClassification
+        from repro.fl import run_matrix
+
+        flc = FLConfig(n_clients=10, concurrency=4, server_steps=120,
+                       stream="device")
+        data = FederatedClassification(n_clients=10, seed=0)
+        kw = dict(seeds=(0, 1), policies=("uniform",),
+                  speed_ratios=(1.0, 8.0), eval_every=60, data=data)
+        m1 = run_matrix(flc, **kw)
+        mb = run_matrix(flc, block_size=4, **kw)
+        np.testing.assert_allclose(mb.eval_acc, m1.eval_acc, atol=1e-5)
+        np.testing.assert_allclose(mb.final_acc, m1.final_acc, atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# codec / extras / guard rails
+# ------------------------------------------------------------------ #
+class TestBlockedKnobs:
+    N = 8
+
+    def test_bf16_snapshot_codec(self):
+        """bf16 ring storage runs on both engines and stays near fp32."""
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=4, T=400, eta=0.02, seed=1,
+                           engine="scan", block_size=4)
+        w32, _ = run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg)
+        wbf, _ = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob,
+            replace(cfg, snapshot_dtype="bfloat16"))
+        assert np.asarray(wbf).dtype == np.float32  # params stay fp32
+        np.testing.assert_allclose(np.asarray(wbf), np.asarray(w32),
+                                   atol=5e-2)  # bf16 snapshot quantization
+        wpe, _ = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob,
+            replace(cfg, block_size=1, snapshot_dtype="bfloat16"))
+        np.testing.assert_allclose(np.asarray(wpe), np.asarray(w32), atol=5e-2)
+
+    def test_collect_extras_off_prunes_stats(self):
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=4, T=400, eta=0.02, seed=5,
+                           engine="scan", stream="device", mu=np.ones(self.N))
+        w_full, tr_full = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob, cfg)
+        w_lite, tr_lite = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob,
+            replace(cfg, collect_extras=False))
+        # identical trajectory, pruned observables
+        np.testing.assert_allclose(np.asarray(w_lite), np.asarray(w_full),
+                                   atol=1e-6)
+        assert "mean_delays" in tr_full.extras and "p_traj" in tr_full.extras
+        assert set(tr_lite.extras) == {"p_final"}
+
+    def test_blocked_rejects_custom_update(self):
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(
+            n=self.N, C=4, T=50, eta=0.1, engine="scan", block_size=4,
+            apply_update=lambda w, g, s: w - s * g,
+        )
+        with pytest.raises(ValueError, match="block_size"):
+            run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg)
+
+    def test_blocked_rejects_unknown_update(self):
+        """The blocked branch validates cfg.update like the per-event one."""
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(n=self.N, C=2, T=20, eta=0.1, engine="scan",
+                           block_size=2, update="bogus")
+        with pytest.raises(ValueError, match="bogus"):
+            run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg)
+
+    def test_blocked_rejects_mixed_dtype_params(self):
+        class MixedQuad:
+            def device_grad(self, j, w, k):
+                return jax.tree_util.tree_map(lambda x: x, w)
+
+        w0 = {"a": jnp.zeros(3, jnp.float32), "b": jnp.zeros(3, jnp.bfloat16)}
+        cfg = ServerConfig(n=4, C=2, T=20, eta=0.1, engine="scan", block_size=2)
+        with pytest.raises(ValueError, match="uniform-dtype"):
+            run_generalized_async_sgd(w0, MixedQuad(), cfg)
+
+
+# ------------------------------------------------------------------ #
+# fused block kernel vs jnp oracle (interpret mode — the engine's path)
+# ------------------------------------------------------------------ #
+class TestBlockPrefixKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("E,R", [(4, 5), (8, 9), (1, 3)])
+    def test_kernel_vs_ref(self, dtype, E, R):
+        from repro.kernels.ref import block_prefix_update_ref
+        from repro.kernels.weighted_update import BLOCK_TILE, block_prefix_update
+
+        rng = np.random.default_rng(11)
+        P = 2 * BLOCK_TILE
+        snaps = jnp.asarray(rng.normal(size=(R, P)), dtype)
+        w = jnp.asarray(rng.normal(size=(P,)), jnp.float32)
+        D = jnp.asarray(rng.normal(size=(E, P)) * 0.1, jnp.float32)
+        slots = jnp.asarray(rng.choice(R - 1, size=E, replace=False), jnp.int32)
+        ks, kw = block_prefix_update(snaps, w, D, slots, interpret=True)
+        rs, rw = block_prefix_update_ref(snaps, w, D, slots)
+        tol = dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ks, np.float32),
+                                   np.asarray(rs, np.float32), **tol)
+        np.testing.assert_allclose(np.asarray(kw), np.asarray(rw), atol=1e-6)
+        assert ks.dtype == snaps.dtype and kw.dtype == w.dtype
+
+    def test_kernel_duplicate_trash_slots_last_wins(self):
+        """Padded lanes all target the trash row; kernel resolves them in
+        event order (last-writer-wins), and real rows are untouched."""
+        from repro.kernels.weighted_update import BLOCK_TILE, block_prefix_update
+
+        P, R, E = BLOCK_TILE, 4, 3
+        snaps = jnp.full((R, P), 7.0)
+        w = jnp.zeros((P,))
+        D = jnp.stack([jnp.full((P,), float(i + 1)) for i in range(E)])
+        slots = jnp.asarray([R - 1, 1, R - 1], jnp.int32)
+        ks, kw = block_prefix_update(snaps, w, D, slots, interpret=True)
+        np.testing.assert_allclose(np.asarray(ks[R - 1]), -6.0)  # 0-(1+2+3)
+        np.testing.assert_allclose(np.asarray(ks[1]), -3.0)
+        np.testing.assert_allclose(np.asarray(ks[0]), 7.0)
+        np.testing.assert_allclose(np.asarray(kw), -6.0)
+
+    def test_kernel_requires_tile_aligned_P(self):
+        from repro.kernels.weighted_update import block_prefix_update
+
+        with pytest.raises(ValueError, match="BLOCK_TILE"):
+            block_prefix_update(
+                jnp.zeros((3, 100)), jnp.zeros(100), jnp.zeros((2, 100)),
+                jnp.zeros(2, jnp.int32),
+            )
