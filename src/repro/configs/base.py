@@ -115,17 +115,28 @@ class MeshConfig:
 
 @dataclass(frozen=True)
 class FLConfig:
-    """Generalized AsyncSGD scheduling config (the paper's knobs)."""
+    """Generalized AsyncSGD scheduling config (the paper's knobs).
 
-    n_clients: int = 100
-    concurrency: int = 10
-    server_steps: int = 200
-    sampling: str = "optimal"      # uniform | optimal | physical_time
-    service: str = "exp"
-    frac_fast: float = 0.5
+    The queueing knobs (``n_clients`` .. ``speed_ratio``) parameterize the
+    closed Jackson network of §2 and the client-speed heterogeneity of the
+    §5 experiment; the engine knobs (``engine`` .. ``devices``) pick how the
+    server loop executes — see ``docs/architecture.md`` for the full
+    host/device/blocked runner decision matrix, and
+    `repro.core.async_sgd.ServerConfig` for the per-run equivalent these
+    fields translate into (`repro.fl.engine.run_experiment`).
+    """
+
+    n_clients: int = 100           # n — number of federated clients
+    concurrency: int = 10          # C — tasks in flight (closed-network pop.)
+    server_steps: int = 200        # T — CS steps (one completion+dispatch each)
+    sampling: str = "optimal"      # client-sampling policy for p:
+                                   # uniform | optimal (Theorem-1 bound
+                                   # minimizer) | physical_time
+    service: str = "exp"           # service law: "exp" | "det" (host-only)
+    frac_fast: float = 0.5         # fraction of fast clients (two clusters)
     speed_ratio: float = 10.0      # mu_fast / mu_slow
     weighting: str = "importance"  # importance (Alg. 1) | plain
-    fedbuff_Z: int = 10
+    fedbuff_Z: int = 10            # FedBuff buffer size (flush every Z-th)
     seed: int = 0
     engine: str = "python"         # python (reference loop) | scan (compiled)
     stream: str = "host"           # scan event source: host (pre-simulated
@@ -134,9 +145,17 @@ class FLConfig:
     adaptive: bool = False         # device stream: adaptive sampling control
                                    # loop (re-optimize p from observed queues)
     refresh_every: int = 250       # control-loop cadence in CS steps
-    block_size: int = 1            # scan engine: events per micro-block
+    block_size: int | str = 1      # scan engine: events per micro-block
                                    # (E > 1 = blocked replay; exact — see
-                                   # engine_scan / README)
+                                   # engine_scan / docs); "auto" picks E from
+                                   # measured conflict rates
+                                   # (queue_sim.select_block_size)
+    devices: int = 1               # blocked engine: lane-shard device count —
+                                   # each micro-block's E gradient lanes are
+                                   # split across this many devices (requires
+                                   # block_size a >1 multiple of it)
+    segmentation: str = "greedy"   # blocked cut placement: greedy | dp
+                                   # (queue_sim.segment_blocks)
 
     def replace(self, **kw) -> "FLConfig":
         return dataclasses.replace(self, **kw)

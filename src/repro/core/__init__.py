@@ -37,6 +37,7 @@ from .queue_sim import (
     export_blocks,
     export_stream,
     segment_blocks,
+    select_block_size,
     simulate,
     simulate_batch,
 )

@@ -71,6 +71,15 @@ def _axpy(w: Pytree, g: Pytree, a: float) -> Pytree:
 
 @dataclass
 class ServerConfig:
+    """One server-loop run of {Generalized AsyncSGD, AsyncSGD, FedBuff, ...}.
+
+    The queueing knobs (``n``, ``C``, ``T``, ``p``, ``mu``, ``service``)
+    define the closed Jackson network of §2; the engine knobs pick how
+    Algorithm 1 executes (reference Python loop vs one compiled scan, host
+    replay vs fused on-device stream, per-event vs micro-blocked, single- vs
+    multi-device).  See ``docs/architecture.md`` for the decision matrix.
+    """
+
     n: int                      # number of clients
     C: int                      # concurrency (in-flight tasks)
     T: int                      # CS steps
@@ -95,10 +104,19 @@ class ServerConfig:
     refresh_every: int = 0      # control-loop cadence (CS steps)
     ctrl_lr: float = 0.3        # control-loop mirror-descent step size
     ctrl_iters: int = 4         # mirror-descent steps per refresh
-    block_size: int = 1         # scan engine: events per micro-block (1 =
+    block_size: int | str = 1   # scan engine: events per micro-block (1 =
                                 # per-event replay; E > 1 batches gathers /
                                 # gradients / scatters over conflict-free
-                                # blocks — exact, see engine_scan)
+                                # blocks — exact, see engine_scan; "auto"
+                                # selects E from the measured conflict rates
+                                # via queue_sim.select_block_size)
+    devices: int = 1            # blocked scan engine: lane-shard device count
+                                # — each micro-block's E gradient lanes split
+                                # across this many devices (requires
+                                # block_size a >1 multiple of it; 1 = off)
+    segmentation: str = "greedy"  # blocked cut placement: "greedy" (maximal
+                                  # extension) | "dp" (exact minimum-padding
+                                  # DP) — queue_sim.segment_blocks
     snapshot_dtype: str | None = None  # scan engine: ring-buffer storage dtype
                                        # (e.g. "bfloat16"; None = param dtype)
     pallas_interpret: bool = True  # update="pallas": run the kernels in
@@ -154,6 +172,45 @@ def _pallas_update_fn(interpret: bool):
     return partial(tree_weighted_update, interpret=interpret)
 
 
+#: cap for block_size="auto" selection (multiples of `devices` are tried)
+DEFAULT_BLOCK_SIZE_MAX = 16
+#: probe length for "auto" when no event stream is materialized (device path)
+AUTO_PROBE_STEPS = 4000
+
+
+def _probe_stream_slots(mu, p, C: int, T: int, seed) -> np.ndarray:
+    """Short device-generated probe stream for block-size auto-selection.
+
+    The fused engine never materializes its event stream, so ``"auto"`` on
+    the device path measures conflict rates on a (law-identical) probe of at
+    most `AUTO_PROBE_STEPS` CS steps from `stream_device.generate_stream`.
+    Shared by `_run_scan` and `fl.run_matrix` so both resolve "auto"
+    identically.
+    """
+    from .stream_device import generate_stream
+
+    return generate_stream(mu, p, C, min(T, AUTO_PROBE_STEPS), seed=seed).slot
+
+
+def _auto_block_size(slots, devices: int = 1, cut_every: int = 0) -> int:
+    """Resolve ``block_size="auto"`` from measured conflict-free run lengths
+    (`queue_sim.select_block_size`), scaled to multiples of ``devices``.
+    ``slots`` is one measured (T,) slot array or a list of them."""
+    from .queue_sim import select_block_size
+
+    E, _ = select_block_size(
+        slots,
+        block_size_max=max(DEFAULT_BLOCK_SIZE_MAX, devices),
+        devices=max(devices, 1),
+        cut_every=cut_every,
+        # greedy and DP cuts have identical block counts (hereditary
+        # validity — locked by tests), so the cheaper single pass suffices
+        # for the utilization measurements
+        method="greedy",
+    )
+    return E
+
+
 def _scan_update_fn(cfg: ServerConfig):
     if cfg.apply_update is not None:
         return cfg.apply_update
@@ -203,7 +260,8 @@ def _run_scan(
     # buffers to the compiled program; CPU cannot donate them (warns), so
     # keep donation to accelerator backends
     donate = jax.default_backend() != "cpu"
-    if cfg.block_size > 1 and cfg.apply_update is not None:
+    block_size = cfg.block_size
+    if block_size != "auto" and int(block_size) > 1 and cfg.apply_update is not None:
         raise ValueError(
             "block_size > 1 requires the default update w - scale*g"
         )
@@ -213,6 +271,11 @@ def _run_scan(
             raise ValueError(
                 "stream='device' supports exponential service only "
                 "(the on-device race relies on memorylessness)"
+            )
+        if block_size == "auto":
+            block_size = _auto_block_size(
+                _probe_stream_slots(mu, p, cfg.C, cfg.T, cfg.seed),
+                cfg.devices,
             )
         runner = jit_fused_runner(
             _device_grad_fn(source),
@@ -228,9 +291,10 @@ def _run_scan(
             ctrl_lr=cfg.ctrl_lr,
             ctrl_iters=cfg.ctrl_iters,
             update_fn=_scan_update_fn(cfg),
-            block_size=cfg.block_size,
+            block_size=block_size,
             snapshot_dtype=cfg.snapshot_dtype,
             collect_extras=cfg.collect_extras,
+            lane_devices=cfg.devices,
         )
         w, evals, extras = runner(
             w0_dev, jnp.asarray(mu), jnp.asarray(p),
@@ -269,9 +333,20 @@ def _run_scan(
         if cfg.update not in ("jnp", "pallas"):
             raise ValueError(cfg.update)
         kernel = cfg.update
-        if cfg.block_size > 1:
+        if block_size == "auto":
+            block_size = _auto_block_size(
+                stream.slot, cfg.devices, cut_every=eval_every
+            )
+        if block_size > 1 and cfg.apply_update is not None:
+            # re-check after "auto" resolution: the blocked replay only
+            # reconstructs iterates for the default update w - scale*g
+            raise ValueError(
+                "block_size > 1 requires the default update w - scale*g"
+            )
+        if block_size > 1:
             blocks = EventBlocks.from_stream(
-                stream, cfg.block_size, cut_every=eval_every
+                stream, block_size, cut_every=eval_every,
+                method=cfg.segmentation,
             )
             J, slot, sc, kb, mask, chunk_blocks, n_chunks = blocked_inputs(
                 blocks, scale, eval_every
@@ -281,11 +356,12 @@ def _run_scan(
                 cfg.C,
                 fedbuff_Z=fedbuff_Z,
                 eval_fn=eval_fn,
-                block_size=cfg.block_size,
+                block_size=block_size,
                 kernel=kernel,
                 snapshot_dtype=cfg.snapshot_dtype,
                 donate=donate,
                 interpret=cfg.pallas_interpret,
+                lane_devices=cfg.devices,
             )
             w, evals = runner(
                 w0_dev, jnp.asarray(J), jnp.asarray(slot), jnp.asarray(sc),
@@ -293,6 +369,11 @@ def _run_scan(
                 chunk_blocks=chunk_blocks, n_chunks=n_chunks,
             )
         else:
+            if cfg.devices > 1:
+                raise ValueError(
+                    "devices > 1 lane-shards micro-blocks and requires the "
+                    "blocked engine (block_size > 1)"
+                )
             runner = jit_runner(
                 _device_grad_fn(source),
                 cfg.C,

@@ -382,7 +382,41 @@ def _make_batched_grads(grad_fn, pack, unpack):
     )
 
 
-def _make_block_step(grad_fn, fedbuff_Z, pack, unpack, kernel, interpret):
+def _fedbuff_block_deltas(Gm, scm, k, m, acc, Z):
+    """Closed-form FedBuff per-event deltas over one (full) micro-block.
+
+    Gradient g_j is applied exactly once — at the first buffer flush at or
+    after its arrival — so D_i = 1{flush at i} * (scale_i/Z) * (carried
+    buffer + gradients since the previous flush), computed from the in-block
+    flush positions.  Returns ``(D, acc')``: the (E, P) scaled update deltas
+    (prefix-summable like the gen_async path) and the buffer carried out of
+    the block.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    cum = jnp.cumsum(Gm, axis=0)
+    fire = m & (((k + 1) % Z) == 0)
+    E = m.shape[0]
+    fi = jnp.where(fire, jnp.arange(E, dtype=jnp.int32), -1)
+    last_incl = jax.lax.cummax(fi)  # last flush at or before i
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), last_incl[:-1]])
+    prevcum = jnp.where((prev >= 0)[:, None], cum[jnp.maximum(prev, 0)], 0.0)
+    first = jnp.where(prev < 0, 1.0, 0.0)[:, None]
+    acc_at = cum - prevcum + first * acc.astype(jnp.float32)
+    D = jnp.where(fire, scm / Z, 0.0)[:, None] * acc_at
+    lastf = last_incl[-1]
+    flushed = jnp.where(lastf >= 0, cum[jnp.maximum(lastf, 0)], 0.0)
+    acc = (
+        jnp.where(lastf >= 0, 0.0, 1.0) * acc.astype(jnp.float32)
+        + (cum[-1] - flushed)
+    ).astype(acc.dtype)
+    return D, acc
+
+
+def _make_block_step(
+    grad_fn, fedbuff_Z, pack, unpack, kernel, interpret, lane_axis=None
+):
     """One event micro-block of the blocked engine (flat-packed mode only).
 
     ``block_step(ucarry, j, s, scale, k, mask) -> ucarry`` consumes up to E
@@ -392,23 +426,39 @@ def _make_block_step(grad_fn, fedbuff_Z, pack, unpack, kernel, interpret):
     in one pass.  Padded lanes (mask False) carry zero scale and the trash
     ring row, so they are arithmetic no-ops.
 
-    FedBuff decomposes into the same prefix form: gradient g_j is applied
-    exactly once — at the first buffer flush at or after its arrival — so
-    D_i = 1{flush at i} * (scale_i/Z) * (carried buffer + gradients since
-    the previous flush), computed in closed form from the in-block flush
-    positions.
+    FedBuff decomposes into the same prefix form via
+    `_fedbuff_block_deltas`.
+
+    With ``lane_axis`` set, the step is the per-device body of a `shard_map`
+    whose E lanes are partitioned over that mesh axis: each device gathers
+    the snapshots of — and differentiates — only its E/D lanes, the local
+    per-lane prefix sums are combined with ONE cross-device ``all_gather``
+    (lane prefixes and slot ids ride in the same collective; the exclusive
+    per-device offsets fall out of the gathered lane totals), and the
+    scatter into the replicated ring buffer is applied identically on every
+    device (`kernels.ref.block_scatter_rows_ref` / the Pallas
+    `kernels.weighted_update.block_scatter_rows`).  FedBuff gathers the
+    masked lane *gradients* instead — its flush positions couple all lanes —
+    then applies the same closed-form decomposition; either way the
+    gradient FLOPs, the gather bandwidth and the pack/unpack work are all
+    divided by the lane-device count.
     """
     import jax
     import jax.numpy as jnp
 
     if kernel == "pallas":
-        from ..kernels.weighted_update import block_prefix_update
+        from ..kernels.weighted_update import (
+            block_prefix_update,
+            block_scatter_rows,
+        )
 
         apply_block = partial(block_prefix_update, interpret=interpret)
+        scatter_rows = partial(block_scatter_rows, interpret=interpret)
     elif kernel == "jnp":
-        from ..kernels.ref import block_prefix_update_ref
+        from ..kernels.ref import block_prefix_update_ref, block_scatter_rows_ref
 
         apply_block = block_prefix_update_ref
+        scatter_rows = block_scatter_rows_ref
     else:
         raise ValueError(kernel)
 
@@ -416,35 +466,41 @@ def _make_block_step(grad_fn, fedbuff_Z, pack, unpack, kernel, interpret):
 
     def block_step(ucarry, j, s, sc, k, m):
         w, snaps, acc = ucarry
-        G = grads(j, snaps[s], k)  # (E, P) batched over the block
+        G = grads(j, snaps[s], k)  # (E_local, P) batched over (local) lanes
         scm = jnp.where(m, sc, 0.0).astype(jnp.float32)
+        if lane_axis is None:
+            if fedbuff_Z > 0:
+                Gm = jnp.where(m[:, None], G, 0).astype(jnp.float32)
+                D, acc = _fedbuff_block_deltas(Gm, scm, k, m, acc, fedbuff_Z)
+            else:
+                D = scm[:, None] * G.astype(jnp.float32)
+            snaps, w = apply_block(snaps, w, D, s)
+            return (w, snaps, acc)
         if fedbuff_Z > 0:
+            # flush positions couple all lanes: gather the masked lane
+            # gradients (+ metadata) in one collective, then run the same
+            # closed form on the full block, replicated
             Gm = jnp.where(m[:, None], G, 0).astype(jnp.float32)
-            cum = jnp.cumsum(Gm, axis=0)
-            fire = m & (((k + 1) % fedbuff_Z) == 0)
-            E = m.shape[0]
-            fi = jnp.where(fire, jnp.arange(E, dtype=jnp.int32), -1)
-            last_incl = jax.lax.cummax(fi)  # last flush at or before i
-            prev = jnp.concatenate(
-                [jnp.full((1,), -1, jnp.int32), last_incl[:-1]]
+            Gm, s_all, scm_all, k_all, m_all = jax.lax.all_gather(
+                (Gm, s, scm, k, m), lane_axis, tiled=True
             )
-            prevcum = jnp.where(
-                (prev >= 0)[:, None], cum[jnp.maximum(prev, 0)], 0.0
+            D, acc = _fedbuff_block_deltas(
+                Gm, scm_all, k_all, m_all, acc, fedbuff_Z
             )
-            first = jnp.where(prev < 0, 1.0, 0.0)[:, None]
-            acc_at = cum - prevcum + first * acc.astype(jnp.float32)
-            D = jnp.where(fire, scm / fedbuff_Z, 0.0)[:, None] * acc_at
-            lastf = last_incl[-1]
-            flushed = jnp.where(
-                lastf >= 0, cum[jnp.maximum(lastf, 0)], 0.0
-            )
-            acc = (
-                jnp.where(lastf >= 0, 0.0, 1.0) * acc.astype(jnp.float32)
-                + (cum[-1] - flushed)
-            ).astype(acc.dtype)
-        else:
-            D = scm[:, None] * G.astype(jnp.float32)
-        snaps, w = apply_block(snaps, w, D, s)
+            snaps, w = apply_block(snaps, w, D, s_all)
+            return (w, snaps, acc)
+        # gen_async: local lane prefix + one collective, then the global
+        # iterates W_i = w - (S_all + exclusive device offset), replicated
+        Dl = scm[:, None] * G.astype(jnp.float32)
+        S = jnp.cumsum(Dl, axis=0)  # local inclusive lane prefix
+        S_all, s_all = jax.lax.all_gather((S, s), lane_axis)  # (D, El, P/[El])
+        totals = S_all[:, -1, :]
+        off = jnp.cumsum(totals, axis=0) - totals  # exclusive device offsets
+        E = s_all.size
+        W = w.astype(jnp.float32)[None] - (S_all + off[:, None, :]).reshape(
+            E, -1
+        )
+        snaps, w = scatter_rows(snaps, w, W, s_all.reshape(E))
         return (w, snaps, acc)
 
     return block_step
@@ -568,6 +624,41 @@ def _make_host_runner(
     return run
 
 
+def _check_lane_devices(lane_devices: int, block_size: int) -> None:
+    """Validate the lane-shard request against the block shape and platform."""
+    import jax
+
+    if lane_devices < 1:
+        raise ValueError("lane_devices >= 1 required")
+    if lane_devices == 1:
+        return
+    if block_size < 2:
+        raise ValueError(
+            "lane_devices > 1 shards the E-lane micro-block gradient batch "
+            "across devices and requires block_size > 1"
+        )
+    if block_size % lane_devices:
+        raise ValueError(
+            f"block_size={block_size} must be a multiple of "
+            f"lane_devices={lane_devices} (each device owns E/D lanes)"
+        )
+    avail = jax.device_count()
+    if lane_devices > avail:
+        raise ValueError(
+            f"lane_devices={lane_devices} but only {avail} device(s) are "
+            "visible (on CPU, set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=N)"
+        )
+
+
+def _lane_mesh(lane_devices: int):
+    """1-D ("lanes",) mesh over the first lane_devices visible devices."""
+    import jax
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(jax.devices()[:lane_devices]), ("lanes",))
+
+
 def _make_host_block_runner(
     grad_fn: Callable[[Any, Pytree, Any], Pytree],
     C: int,
@@ -580,6 +671,8 @@ def _make_host_block_runner(
     kernel: str = "jnp",
     snapshot_dtype=None,
     interpret: bool = True,
+    lane_devices: int = 1,
+    vmap_streams: bool = False,
 ):
     """Build the blocked replay engine over `queue_sim.EventBlocks` arrays.
 
@@ -587,13 +680,24 @@ def _make_host_block_runner(
     -> (w_final, evals)`` consuming (B, E) blocked arrays (see
     `blocked_inputs`).  ``chunk_blocks``/``n_chunks`` are the static eval
     layout: the first ``n_chunks * chunk_blocks`` rows are eval-interval
-    groups (eval fires after each group — the greedy cut guarantees group
-    boundaries land on exact event multiples), trailing rows replay flat.
+    groups (eval fires after each group — the conflict-free cut guarantees
+    group boundaries land on exact event multiples), trailing rows replay
+    flat.
 
     The blocked engine requires the flat-packed snapshot codec (uniform
     parameter dtype) and the default linear update; ``kernel`` picks the
     jnp fallback ("jnp", the CPU/parity path) or the fused Pallas kernel
     ("pallas") for the prefix-scan + scatter.
+
+    ``lane_devices=D > 1`` shards the E gradient lanes of every micro-block
+    across D devices via `shard_map`: the (B, E) event arrays are
+    partitioned over their lane axis, each device gathers/differentiates
+    its E/D lanes, and one all-gather per block recombines the lane
+    prefixes (see `_make_block_step`).  The scan structure, eval chunking
+    and results are identical to the unsharded runner (≤1e-5 in fp32 —
+    fp32 lane prefixes are re-associated per device).  ``vmap_streams``
+    additionally maps the per-device body over a leading scenario axis —
+    the scenario × lane 2-D layout `fl.run_matrix` uses.
     """
     import jax
     import jax.numpy as jnp
@@ -605,13 +709,15 @@ def _make_host_block_runner(
         )
     if block_size < 2:
         raise ValueError("use _make_host_runner for block_size <= 1")
+    _check_lane_devices(lane_devices, block_size)
+    lane_axis = "lanes" if lane_devices > 1 else None
     pad_to = 1
     if kernel == "pallas":
         from ..kernels.weighted_update import BLOCK_TILE
 
         pad_to = BLOCK_TILE
 
-    def run(w0, J, slot, scale, k, mask, chunk_blocks=0, n_chunks=0):
+    def run_local(w0, J, slot, scale, k, mask, chunk_blocks=0, n_chunks=0):
         pack, unpack, enc = _snapshot_codec(w0, snapshot_dtype, pad_to=pad_to)
         if unpack is None:
             raise ValueError(
@@ -619,7 +725,7 @@ def _make_host_block_runner(
                 "(flat-packed snapshot storage)"
             )
         block_step = _make_block_step(
-            grad_fn, fedbuff_Z, pack, unpack, kernel, interpret
+            grad_fn, fedbuff_Z, pack, unpack, kernel, interpret, lane_axis
         )
         carry, to_tree = _init_update_carry(
             w0, C + 1, pack, unpack, True, fedbuff_Z, enc
@@ -653,6 +759,52 @@ def _make_host_block_runner(
         carry = scan(carry, J, slot, scale, k, mask)
         return to_tree(carry[0]), jnp.zeros((0,))
 
+    if lane_devices == 1:
+        if not vmap_streams:
+            return run_local
+
+        def run_batched(w0, J, slot, scale, k, mask, chunk_blocks=0,
+                        n_chunks=0):
+            return jax.vmap(
+                lambda w, a, b, c, d, e: run_local(
+                    w, a, b, c, d, e, chunk_blocks, n_chunks
+                ),
+                in_axes=(None, 0, 0, 0, 0, 0),
+            )(w0, J, slot, scale, k, mask)
+
+        return run_batched
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = _lane_mesh(lane_devices)
+    # blocked arrays are (B, E) — or (S, B, E) under vmap_streams — and are
+    # partitioned over their trailing lane axis; w0 and outputs replicate
+    lane_spec = (
+        P(None, None, "lanes") if vmap_streams else P(None, "lanes")
+    )
+
+    def run(w0, J, slot, scale, k, mask, chunk_blocks=0, n_chunks=0):
+        if vmap_streams:
+            base = jax.vmap(
+                lambda w, a, b, c, d, e: run_local(
+                    w, a, b, c, d, e, chunk_blocks, n_chunks
+                ),
+                in_axes=(None, 0, 0, 0, 0, 0),
+            )
+        else:
+            base = lambda w, a, b, c, d, e: run_local(
+                w, a, b, c, d, e, chunk_blocks, n_chunks
+            )
+        f = shard_map(
+            base,
+            mesh=mesh,
+            in_specs=(P(),) + (lane_spec,) * 5,
+            out_specs=(P(), P()),
+            check_rep=False,
+        )
+        return f(w0, J, slot, scale, k, mask)
+
     return run
 
 
@@ -680,6 +832,8 @@ def make_fused_runner(
     block_size: int = 1,
     collect_extras: bool = True,
     snapshot_dtype=None,
+    lane_devices: int = 1,
+    lane_axis: str | None = None,
 ):
     """Build the fused engine: `stream_device.stream_step` ∘ `update_step`.
 
@@ -709,6 +863,15 @@ def make_fused_runner(
     cond lowers to a both-branches select and every gradient is computed
     twice — blocked fused runs are only a win un-vmapped; the vmapped
     scenario matrix should prefer the host blocked path or ``block_size=1``.
+
+    ``lane_devices=D > 1`` shards each window's E-lane batched gradient
+    call across D devices (`shard_map` over a "lanes" mesh axis; one
+    all-gather per window recombines the lane gradients).  The stream
+    advance and the sequential fixup replay replicated — they are cheap
+    integer/axpy work — so results match the unsharded fused runner.
+    ``lane_axis`` is for callers that already run inside a `shard_map`
+    (the scenario × lane 2-D mesh of `jit_fused_runner`): it names the
+    existing lane axis instead of self-wrapping.
     """
     import jax
     import jax.numpy as jnp
@@ -731,6 +894,19 @@ def make_fused_runner(
     bound = bound if bound is not None else BoundConstants(C=C, T=T)
     importance = weighting == "importance"
     E = max(int(block_size), 1)
+    if lane_axis is not None and lane_devices <= 1:
+        raise ValueError("lane_axis requires lane_devices > 1")
+    if lane_devices > 1 and lane_axis is None:
+        _check_lane_devices(lane_devices, E)  # incl. device availability
+    elif lane_devices > 1 and (E < 2 or E % lane_devices):
+        raise ValueError(
+            f"block_size={E} must be a >1 multiple of "
+            f"lane_devices={lane_devices}"
+        )
+    wrap_lanes = lane_devices > 1 and lane_axis is None
+    axis = lane_axis if lane_axis is not None else (
+        "lanes" if lane_devices > 1 else None
+    )
     need_stats = collect_extras or adaptive
 
     # chunk length: refresh and eval both happen at chunk boundaries
@@ -830,7 +1006,18 @@ def make_fused_runner(
                 )
             )
             w, snaps, acc = ucarry
-            G0 = _make_batched_grads(grad_fn, pack, unpack)(jv, snaps[sv], kw)
+            batched_grads = _make_batched_grads(grad_fn, pack, unpack)
+            if axis is None:
+                G0 = batched_grads(jv, snaps[sv], kw)
+            else:
+                # lane-sharded: this device differentiates E/D of the
+                # window's lanes; one all-gather recombines the batch
+                El = E // lane_devices
+                d = jax.lax.axis_index(axis)
+                sl = lambda a: jax.lax.dynamic_slice_in_dim(a, d * El, El, 0)
+                jl, svl, kl = sl(jv), sl(sv), sl(kw)
+                Gl = batched_grads(jl, snaps[svl], kl)
+                G0 = jax.lax.all_gather(Gl, axis, tiled=True)
 
             apply_event = _make_apply_event(fedbuff_Z, enc)
 
@@ -950,7 +1137,24 @@ def make_fused_runner(
         }
         return to_tree(ucarry[0]), evals, extras
 
-    return run
+    if not wrap_lanes:
+        return run
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = _lane_mesh(lane_devices)
+
+    def run_sharded(w0, mu, p0, key, eta):
+        # every operand replicates; only the window gradient batch (inside
+        # `run`, via the "lanes" axis) is partitioned across the mesh
+        f = shard_map(
+            run, mesh=mesh, in_specs=(P(),) * 5, out_specs=P(),
+            check_rep=False,
+        )
+        return f(w0, mu, p0, key, eta)
+
+    return run_sharded
 
 
 def make_runner(
@@ -967,6 +1171,7 @@ def make_runner(
     kernel: str = "jnp",
     snapshot_dtype=None,
     interpret: bool = True,
+    lane_devices: int = 1,
     **device_kw,
 ):
     """Build the scan engine; ``stream`` selects the event source.
@@ -985,6 +1190,11 @@ def make_runner(
     ``weighting / adaptive / refresh_every / bound / ctrl_lr / ctrl_iters /
     init / collect_extras`` knobs); ``block_size`` advances E CS steps per
     scan iteration.
+
+    ``lane_devices=D > 1`` (either stream; requires ``block_size`` a >1
+    multiple of D) shards each micro-block's E-lane gradient batch across D
+    devices — the block axis stays sequential, the lane axis becomes the
+    unit of distribution (see `_make_block_step` / `make_fused_runner`).
     """
     if stream == "host":
         if device_kw:
@@ -1001,7 +1211,9 @@ def make_runner(
                 grad_fn, C, block_size, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
                 update_fn=update_fn, unroll=unroll, kernel=kernel,
                 snapshot_dtype=snapshot_dtype, interpret=interpret,
+                lane_devices=lane_devices,
             )
+        _check_lane_devices(lane_devices, block_size)  # rejects D>1 at E=1
         return _make_host_runner(
             grad_fn, C, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
             eval_every=eval_every, update_fn=update_fn, unroll=unroll,
@@ -1016,6 +1228,7 @@ def make_runner(
             grad_fn, n, C, T, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
             eval_every=eval_every, update_fn=update_fn, unroll=unroll,
             block_size=block_size, snapshot_dtype=snapshot_dtype,
+            lane_devices=lane_devices,
             **device_kw,
         )
     raise ValueError(stream)
@@ -1059,6 +1272,7 @@ def jit_runner(
     snapshot_dtype=None,
     donate: bool = False,
     interpret: bool = True,
+    lane_devices: int = 1,
 ):
     """Jitted, memoized host-replay runner.
 
@@ -1071,17 +1285,20 @@ def jit_runner(
 
     ``block_size=E > 1`` returns the blocked runner (`blocked_inputs`
     arrays; the eval layout ``chunk_blocks``/``n_chunks`` are its call-time
-    statics).  ``donate=True`` donates the per-run event-stream buffers to
-    the compiled program (callers passing freshly built arrays — the
-    `_run_scan` / `run_matrix` drivers — save one device-side copy of the
-    stream; don't enable it when re-calling with the same arrays).
+    statics).  ``lane_devices=D > 1`` lane-shards the blocked runner's E
+    gradient lanes across D devices (requires E a multiple of D; composes
+    with ``vmap_streams`` into the scenario × lane layout).  ``donate=True``
+    donates the per-run event-stream buffers to the compiled program
+    (callers passing freshly built arrays — the `_run_scan` / `run_matrix`
+    drivers — save one device-side copy of the stream; don't enable it when
+    re-calling with the same arrays).
     """
     import jax
 
     cache, func = _runner_cache(grad_fn)
     key = (
         "host", func, C, fedbuff_Z, eval_fn, update_fn, unroll, vmap_streams,
-        block_size, kernel, snapshot_dtype, donate, interpret,
+        block_size, kernel, snapshot_dtype, donate, interpret, lane_devices,
     )
     if block_size > 1 and eval_every:
         raise ValueError(
@@ -1089,25 +1306,18 @@ def jit_runner(
             "layout — pass chunk_blocks/n_chunks from blocked_inputs(..., "
             "eval_every=...) at call time instead of eval_every"
         )
+    _check_lane_devices(lane_devices, block_size)
     if key in cache:
         jitted = cache[key]
         return jitted if block_size > 1 else partial(jitted, eval_every=eval_every)
     if block_size > 1:
-        base = _make_host_block_runner(
+        # the factory owns the scenario vmap and (if any) the lane shard_map
+        run = _make_host_block_runner(
             grad_fn, C, block_size, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
             update_fn=update_fn, unroll=unroll, kernel=kernel,
             snapshot_dtype=snapshot_dtype, interpret=interpret,
+            lane_devices=lane_devices, vmap_streams=vmap_streams,
         )
-        if vmap_streams:
-            def run(w0, J, slot, scale, k, mask, chunk_blocks=0, n_chunks=0):
-                return jax.vmap(
-                    lambda w, a, b, c, d, e: base(
-                        w, a, b, c, d, e, chunk_blocks, n_chunks
-                    ),
-                    in_axes=(None, 0, 0, 0, 0, 0),
-                )(w0, J, slot, scale, k, mask)
-        else:
-            run = base
         cache[key] = jax.jit(
             run,
             static_argnames=("chunk_blocks", "n_chunks"),
@@ -1142,6 +1352,7 @@ def jit_fused_runner(
     *,
     vmap_scenarios: bool = False,
     shard_devices: int = 1,
+    lane_devices: int = 1,
     **kw,
 ):
     """Jitted, memoized fused (device-stream) runner.
@@ -1152,9 +1363,18 @@ def jit_fused_runner(
     `pmap`s the batched runner over that many devices (inputs carry an extra
     leading device axis) — the scenario matrix then runs data-parallel
     across the host platform's cores/accelerators, which the serial
-    host-export path cannot.  Extra keywords (``block_size``,
-    ``collect_extras``, ``snapshot_dtype``, ...) forward to
-    `make_fused_runner` and participate in the memo key.
+    host-export path cannot.
+
+    ``lane_devices > 1`` lane-shards each micro-block's gradient batch
+    (requires ``block_size`` a >1 multiple of it).  Combined with
+    ``vmap_scenarios`` it builds one `shard_map` over a scenario × lane 2-D
+    mesh — ``shard_devices`` scenario shards on the first axis,
+    ``lane_devices`` lane shards on the second — and unlike the pmap path
+    the caller passes flat ``(B, ...)`` scenario batches (B divisible by
+    ``shard_devices``); no extra leading device axis.
+
+    Extra keywords (``block_size``, ``collect_extras``, ``snapshot_dtype``,
+    ...) forward to `make_fused_runner` and participate in the memo key.
     """
     import jax
 
@@ -1164,15 +1384,54 @@ def jit_fused_runner(
         (k, None if v is None else (v.A, v.L, v.B, v.C, v.T, v.rho))
         for k, v in sorted(kw.items())
     )
-    key = ("device", func, n, C, T, vmap_scenarios, shard_devices, kw_key)
+    key = (
+        "device", func, n, C, T, vmap_scenarios, shard_devices, lane_devices,
+        kw_key,
+    )
     if key not in cache:
-        run = make_fused_runner(grad_fn, n, C, T, **kw)
-        if vmap_scenarios:
+        if lane_devices > 1 and vmap_scenarios:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec as P
+
+            n_dev = shard_devices * lane_devices
+            avail = jax.device_count()
+            if n_dev > avail:
+                raise ValueError(
+                    f"scenario × lane mesh needs {n_dev} devices, "
+                    f"{avail} visible"
+                )
+            run = make_fused_runner(
+                grad_fn, n, C, T, lane_devices=lane_devices,
+                lane_axis="lanes", **kw,
+            )
             batched = jax.vmap(run, in_axes=(None, 0, 0, 0, None))
-            if shard_devices > 1:
-                cache[key] = jax.pmap(batched, in_axes=(None, 0, 0, 0, None))
-            else:
-                cache[key] = jax.jit(batched)
-        else:
+            mesh = Mesh(
+                np.array(jax.devices()[:n_dev]).reshape(
+                    shard_devices, lane_devices
+                ),
+                ("scen", "lanes"),
+            )
+            sharded = shard_map(
+                batched,
+                mesh=mesh,
+                in_specs=(P(), P("scen"), P("scen"), P("scen"), P()),
+                out_specs=P("scen"),
+                check_rep=False,
+            )
+            cache[key] = jax.jit(sharded)
+        elif lane_devices > 1:
+            run = make_fused_runner(
+                grad_fn, n, C, T, lane_devices=lane_devices, **kw
+            )
             cache[key] = jax.jit(run)
+        else:
+            run = make_fused_runner(grad_fn, n, C, T, **kw)
+            if vmap_scenarios:
+                batched = jax.vmap(run, in_axes=(None, 0, 0, 0, None))
+                if shard_devices > 1:
+                    cache[key] = jax.pmap(batched, in_axes=(None, 0, 0, 0, None))
+                else:
+                    cache[key] = jax.jit(batched)
+            else:
+                cache[key] = jax.jit(run)
     return cache[key]

@@ -30,6 +30,42 @@ A CS step is O(log n) amortized, independent of the number of clients:
 The event stream is deterministic given (seed, block size); it differs from
 the seed implementation's stream (which drew variates one at a time) but has
 identical law.
+
+Delay recording semantics
+-------------------------
+Delay recording is opt-in (``SimConfig.record_delays=True``) and **flat**:
+
+  * `ClosedNetworkSim.delay_steps` is a ``(k,)`` int32 array in *completion
+    order* — entry ``i`` is the CS-step delay of the i-th completion, i.e.
+    the number of CS steps strictly between that task's dispatch and its
+    completion (``M_{i,k}`` of §2).  The completing node of record ``i`` is
+    ``J[i]``, so the pair ``(J, delay_steps)`` fully determines every
+    per-node view and nothing per-node is ever materialized eagerly.
+  * `EventStream.delay_steps` aligns 1:1 with the ``(J, K, t)`` trace:
+    ``delay_steps[k]`` is the delay of the task completing at CS step ``k``
+    (at node ``J[k]``).  ``None`` unless the stream was exported with
+    ``record_delays=True`` (host) — device-generated streams
+    (`stream_device.generate_stream`) always carry it.
+  * The per-node list-of-lists views (``delays`` / ``time_delays``) are
+    lazy, derived via `_split_delays`, and preserve event order within each
+    node.  The flat invariant — regrouping the per-node view by ``J`` in
+    event order reproduces ``delay_steps`` exactly — is locked by
+    ``tests/test_queue_sim.py``.
+
+Block segmentation
+------------------
+`segment_blocks` cuts a ``(T,)`` slot sequence into conflict-free
+micro-blocks for the blocked scan engine.  Two cut policies are available
+(``method=``): ``"greedy"`` extends each block until the next event's slot
+repeats (or the length/eval caps hit) — provably minimal in block count for
+this hereditary validity structure; ``"dp"`` is an exact O(T) dynamic
+program over admissible cut points that certifies that minimum and
+tie-breaks toward longer trailing blocks (never more padded lanes than
+greedy — locked by tests).  `select_block_size` picks the lane count E from
+the *measured* conflict structure of a stream: the delay distribution
+governs conflict-free run lengths, so E is chosen as the largest candidate
+whose measured lane utilization ``T / (B(E) * E)`` stays above a floor
+(rounded to a multiple of the lane-shard device count).
 """
 from __future__ import annotations
 
@@ -50,6 +86,7 @@ __all__ = [
     "export_stream",
     "export_blocks",
     "segment_blocks",
+    "select_block_size",
 ]
 
 #: shared RNG pre-draw block size — every entry point uses the same default so
@@ -163,28 +200,8 @@ class EventStream:
         return _split_delays(self.J, self.delay_steps, self.n)
 
 
-def segment_blocks(
-    slot: np.ndarray, block_size: int, cut_every: int = 0
-) -> tuple[np.ndarray, np.ndarray]:
-    """Greedy conflict-free cut of an event stream into micro-blocks.
-
-    Walks the (T,) ``slot`` sequence and closes the current block whenever the
-    next event's ring-buffer slot already appears in it (its dispatch-time
-    snapshot was *written inside the block*, so its gradient depends on an
-    in-block update), or the block holds ``block_size`` events, or — when
-    ``cut_every > 0`` — the event index crosses a multiple of ``cut_every``
-    (so evaluation points land exactly on block boundaries).
-
-    Returns ``(idx, mask)`` with fixed shape ``(B, E)``: ``idx[b, i]`` is the
-    event index of the i-th event of block b (0 on padding), ``mask[b, i]``
-    marks real events.  Within a block all slots are distinct, so the blocked
-    replay — batch-gather, batched gradients, prefix-sum of the scaled
-    updates — reproduces the sequential Algorithm 1 exactly.
-    """
-    E = int(block_size)
-    if E < 1:
-        raise ValueError("block_size >= 1 required")
-    slot = np.asarray(slot)
+def _greedy_starts(slot: np.ndarray, E: int, cut_every: int) -> list[int]:
+    """Block start indices of the greedy maximal-extension cut."""
     T = slot.size
     starts = [0]
     seen: set[int] = set()
@@ -198,6 +215,115 @@ def segment_blocks(
             length = 0
         seen.add(s)
         length += 1
+    return starts
+
+
+def _window_starts(slot: np.ndarray, E: int, cut_every: int) -> np.ndarray:
+    """``s_lim[k]``: leftmost admissible start of a block ending at event k
+    (inclusive) — slots in ``[s_lim[k], k]`` are distinct, the span stays
+    inside one ``cut_every`` interval, and the length is capped at E.  All
+    three lower bounds are non-decreasing in k, so ``s_lim`` is monotone
+    (which the DP's sliding-window minimum relies on)."""
+    T = slot.size
+    s_lim = np.empty(T, np.int64)
+    last: dict[int, int] = {}
+    s = 0
+    for k in range(T):
+        v = int(slot[k])
+        p = last.get(v, -1)
+        if p >= s:
+            s = p + 1
+        if cut_every:
+            b = (k // cut_every) * cut_every
+            if b > s:
+                s = b
+        lo = k - E + 1
+        if lo > s:
+            s = lo
+        s_lim[k] = s
+        last[v] = k
+    return s_lim
+
+
+def _dp_starts(slot: np.ndarray, E: int, cut_every: int) -> list[int]:
+    """Exact minimum-block-count cut via an O(T) DP.
+
+    ``f[k]`` = fewest blocks covering events ``[0, k)``; the transition
+    minimizes over admissible last-block starts ``i in [s_lim[k-1], k)``
+    (conflict-free, length <= E, no ``cut_every`` boundary inside).  The
+    admissible window's left edge is monotone, so the minimum is maintained
+    with a monotonic deque — one push/pop per event.  Ties prefer the
+    smallest start (the longest trailing block), making the reconstruction
+    deterministic.  Block validity is hereditary (any subinterval of a
+    conflict-free block is conflict-free), so this matches the greedy
+    count exactly — the DP is the optimality certificate the tests hold
+    the greedy cut to, and the base `select_block_size` measures on.
+    """
+    T = slot.size
+    if T == 0:
+        return [0]
+    s_lim = _window_starts(slot, E, cut_every)
+    f = np.empty(T + 1, np.int64)
+    f[0] = 0
+    back = np.empty(T + 1, np.int64)
+    dq: deque[tuple[int, int]] = deque()  # (f[i], i), f increasing
+    pushed = 0
+    for k in range(1, T + 1):
+        while pushed < k:  # starts up to k-1 become available
+            while dq and dq[-1][0] > f[pushed]:
+                dq.pop()
+            dq.append((int(f[pushed]), pushed))
+            pushed += 1
+        lo = s_lim[k - 1]
+        while dq and dq[0][1] < lo:
+            dq.popleft()
+        fb, i = dq[0]
+        f[k] = fb + 1
+        back[k] = i
+    starts = []
+    k = T
+    while k > 0:
+        k = int(back[k])
+        starts.append(k)
+    starts.reverse()
+    return starts
+
+
+def segment_blocks(
+    slot: np.ndarray, block_size: int, cut_every: int = 0, method: str = "greedy"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Conflict-free cut of an event stream into micro-blocks.
+
+    Walks the (T,) ``slot`` sequence and closes a block whenever the next
+    event's ring-buffer slot already appears in it (its dispatch-time
+    snapshot was *written inside the block*, so its gradient depends on an
+    in-block update), the block holds ``block_size`` events, or — when
+    ``cut_every > 0`` — the event index crosses a multiple of ``cut_every``
+    (so evaluation points land exactly on block boundaries).
+
+    ``method`` picks the cut placement: ``"greedy"`` extends each block
+    maximally (provably minimal in block count — validity is hereditary);
+    ``"dp"`` computes the same minimum by exact dynamic programming over all
+    admissible cut points (`_dp_starts`), guaranteeing no more padded lanes
+    than greedy and a deterministic longest-trailing-block tie-break.
+
+    Returns ``(idx, mask)`` with fixed shape ``(B, E)``: ``idx[b, i]`` is the
+    event index of the i-th event of block b (0 on padding), ``mask[b, i]``
+    marks real events.  Within a block all slots are distinct, so the blocked
+    replay — batch-gather, batched gradients, prefix-sum of the scaled
+    updates — reproduces the sequential Algorithm 1 exactly.
+    """
+    E = int(block_size)
+    if E < 1:
+        raise ValueError("block_size >= 1 required")
+    slot = np.asarray(slot)
+    T = slot.size
+    if method == "greedy":
+        starts = _greedy_starts(slot, E, cut_every)
+    elif method == "dp":
+        starts = _dp_starts(slot, E, cut_every)
+    else:
+        raise ValueError(f"unknown segmentation method {method!r}")
     B = len(starts)
     bounds = np.asarray(starts + [T])
     idx = np.zeros((B, E), np.int32)
@@ -207,6 +333,47 @@ def segment_blocks(
         idx[b, : hi - lo] = np.arange(lo, hi)
         mask[b, : hi - lo] = True
     return idx, mask
+
+
+def select_block_size(
+    slots: np.ndarray | list[np.ndarray],
+    block_size_max: int = 16,
+    devices: int = 1,
+    cut_every: int = 0,
+    min_utilization: float = 0.5,
+    method: str = "dp",
+) -> tuple[int, dict[int, float]]:
+    """Pick the lane count E from the *measured* conflict structure.
+
+    Cut placement is governed by the delay distribution: an intra-block
+    conflict means a task completed with a delay shorter than its in-block
+    offset, so the measured conflict-free run lengths of a stream bound how
+    full E lanes can get.  For each candidate E (multiples of ``devices``,
+    so every block splits evenly across lane-shard devices) this segments
+    the measured ``slots`` (one ``(T,)`` array or a list of them, aggregated)
+    and computes the mean lane utilization ``sum(T) / sum(B(E) * E)``.
+
+    Returns ``(E, utilizations)`` where E is the **largest** candidate whose
+    utilization stays at or above ``min_utilization`` — the biggest batch
+    whose lanes actually fill — falling back to the highest-utilization
+    candidate when none clears the floor.
+    """
+    if isinstance(slots, np.ndarray):
+        slots = [slots]
+    step = max(int(devices), 1)
+    if block_size_max < step:
+        raise ValueError("block_size_max must be >= devices")
+    utils: dict[int, float] = {}
+    for E in range(step, block_size_max + 1, step):
+        total_T = total_lanes = 0
+        for s in slots:
+            _, mask = segment_blocks(np.asarray(s), E, cut_every, method=method)
+            total_T += int(np.asarray(s).size)
+            total_lanes += int(mask.size)
+        utils[E] = total_T / max(total_lanes, 1)
+    above = [E for E, u in utils.items() if u >= min_utilization]
+    best = max(above) if above else max(utils, key=lambda E: (utils[E], E))
+    return best, utils
 
 
 @dataclass
@@ -229,17 +396,32 @@ class EventBlocks:
     T: int
     block_size: int
     cut_every: int = 0
+    method: str = "greedy"   # cut placement: "greedy" | "dp" (segment_blocks)
     stream: EventStream | None = None
 
     @property
     def B(self) -> int:
         return int(self.idx.shape[0])
 
+    @property
+    def utilization(self) -> float:
+        """Mean lane utilization T / (B * E) — 1.0 means no padded lanes."""
+        return self.T / max(self.mask.size, 1)
+
+    @property
+    def padded_lanes(self) -> int:
+        """Number of no-op lanes (mask False) across all blocks."""
+        return int(self.mask.size - self.T)
+
     @classmethod
     def from_stream(
-        cls, stream: EventStream, block_size: int, cut_every: int = 0
+        cls,
+        stream: EventStream,
+        block_size: int,
+        cut_every: int = 0,
+        method: str = "greedy",
     ) -> "EventBlocks":
-        idx, mask = segment_blocks(stream.slot, block_size, cut_every)
+        idx, mask = segment_blocks(stream.slot, block_size, cut_every, method)
         return cls(
             idx=idx,
             mask=mask,
@@ -250,6 +432,7 @@ class EventBlocks:
             T=stream.T,
             block_size=int(block_size),
             cut_every=int(cut_every),
+            method=method,
             stream=stream,
         )
 
@@ -263,14 +446,16 @@ def export_blocks(
     block_size: int,
     cut_every: int = 0,
     block: int = DEFAULT_BLOCK,
+    method: str = "greedy",
 ) -> EventBlocks:
     """Simulate ``cfg`` and export conflict-free event micro-blocks.
 
     `export_stream` followed by `segment_blocks` — the host-side feed of the
     blocked scan engine (``engine_scan.make_runner(block_size=...)``).
+    ``method`` picks the cut placement ("greedy" | "dp").
     """
     return EventBlocks.from_stream(
-        export_stream(cfg, block=block), block_size, cut_every
+        export_stream(cfg, block=block), block_size, cut_every, method
     )
 
 

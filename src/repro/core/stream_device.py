@@ -319,6 +319,7 @@ def generate_blocks(
     seed: int | Any = 0,
     init: str = "distinct",
     cut_every: int = 0,
+    method: str = "greedy",
 ) -> EventBlocks:
     """Device-generated event stream, segmented into conflict-free blocks.
 
@@ -327,12 +328,14 @@ def generate_blocks(
     resulting stream is cut into fixed-shape ``(B, E)`` index+mask
     micro-blocks by `queue_sim.segment_blocks` — the feed of the blocked
     scan engine when the events should come from the device generator
-    rather than the host simulator.
+    rather than the host simulator.  ``method`` picks the cut placement
+    ("greedy" | "dp" — see `queue_sim.segment_blocks`).
     """
     return EventBlocks.from_stream(
         generate_stream(mu, p, C, T, seed=seed, init=init),
         block_size,
         cut_every,
+        method,
     )
 
 

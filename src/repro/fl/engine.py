@@ -226,8 +226,12 @@ def run_experiment(
     the compiled device-resident engine (one XLA program for the whole run).
     ``flc.stream`` picks the scan engine's event source ("host" replay vs
     fused "device" generation — the latter implies the scan engine and is
-    required for ``flc.adaptive`` sampling).  The synchronous baselines
-    (fedavg, favano) always use the Python loop.
+    required for ``flc.adaptive`` sampling).  ``flc.block_size`` turns on
+    the micro-blocked replay (an int E, or "auto" to select E from the
+    measured conflict rates), ``flc.segmentation`` its cut placement, and
+    ``flc.devices`` lane-shards each block's E gradient lanes across that
+    many devices — see ``docs/architecture.md`` for the decision matrix.
+    The synchronous baselines (fedavg, favano) always use the Python loop.
     """
     if flc.stream == "device":
         if engine == "python":
@@ -268,6 +272,8 @@ def run_experiment(
         adaptive=flc.adaptive if use_scan else False,
         refresh_every=flc.refresh_every,
         block_size=flc.block_size if use_scan else 1,
+        devices=flc.devices if use_scan else 1,
+        segmentation=flc.segmentation,
     )
 
     if method == "gen_async":
@@ -343,7 +349,9 @@ def run_matrix(
     eval_every: int = 50,
     data: FederatedClassification | None = None,
     stream: str | None = None,
-    block_size: int | None = None,
+    block_size: int | str | None = None,
+    devices: int | None = None,
+    segmentation: str | None = None,
 ) -> MatrixResult:
     """Run the whole scenario grid in ONE compiled call.
 
@@ -364,6 +372,16 @@ def run_matrix(
     (`queue_sim.export_blocks` + the batched `engine_scan` block step, with
     eval points forced onto block boundaries) and the device path advances E
     CS steps per scan iteration — both trajectory-equivalent to E=1.
+    ``"auto"`` selects E from the conflict rates measured on the actual
+    per-scenario streams (`queue_sim.select_block_size`) — host path — or
+    on a short device-generated probe (device path).
+
+    ``segmentation`` (default ``flc.segmentation``) picks the cut placement
+    ("greedy" | "dp"); ``devices`` (default ``flc.devices``) lane-shards
+    each micro-block's E gradient lanes across that many devices — the
+    scenario batch then shares a scenario × lane 2-D mesh with whatever
+    device budget remains (device stream), or a 1-D lane mesh with the
+    scenario axis vmapped per device (host stream).
 
     The model/dataset are shared across scenarios; only the queueing clock,
     sampling vector and event realization differ.  Pass a persistent
@@ -375,7 +393,11 @@ def run_matrix(
     stream = flc.stream if stream is None else stream
     if stream not in ("host", "device"):
         raise ValueError(stream)
-    block_size = flc.block_size if block_size is None else int(block_size)
+    block_size = flc.block_size if block_size is None else block_size
+    if block_size != "auto":
+        block_size = int(block_size)
+    lane = max(int(flc.devices if devices is None else devices), 1)
+    segmentation = flc.segmentation if segmentation is None else segmentation
     speed_ratios = (flc.speed_ratio,) if speed_ratios is None else tuple(speed_ratios)
     seeds, policies = tuple(seeds), tuple(policies)
     data = data or FederatedClassification(n_clients=flc.n_clients, seed=flc.seed)
@@ -415,11 +437,26 @@ def run_matrix(
         # with --xla_force_host_platform_device_count, or a TPU/GPU pod) —
         # the host-export path is serial Python and cannot
         D = jax.device_count()
-        shard = D if (D > 1 and B % D == 0) else 1
+        if block_size == "auto":
+            # same resolution policy as the single-run driver (_run_scan)
+            from repro.core.async_sgd import _auto_block_size, _probe_stream_slots
+
+            block_size = _auto_block_size(
+                _probe_stream_slots(mu_b[0], p_b[0], C, T, int(seeds[0])),
+                lane,
+            )
+        if lane > 1:
+            # scenario × lane 2-D mesh: lanes split each micro-block's
+            # gradient batch, leftover devices shard the scenario batch
+            rem = D // lane
+            shard = rem if (rem > 1 and B % rem == 0) else 1
+        else:
+            shard = D if (D > 1 and B % D == 0) else 1
         runner = jit_fused_runner(
             clients.device_grad, n, C, T,
             vmap_scenarios=True,
             shard_devices=shard,
+            lane_devices=lane,
             weighting=flc.weighting,
             eval_fn=acc_fn,
             eval_every=eval_every,
@@ -427,6 +464,8 @@ def run_matrix(
             refresh_every=flc.refresh_every,
             block_size=block_size,
         )
+        if lane > 1:
+            shard = 1  # shard_map consumes flat (B, ...) batches — no reshape
         args = (jnp.asarray(mu_b), jnp.asarray(p_b), jnp.stack(keys))
         if shard > 1:
             args = tuple(a.reshape((shard, B // shard) + a.shape[1:]) for a in args)
@@ -462,11 +501,20 @@ def run_matrix(
                     streams.append((es, step_scales(es, eta, p, flc.weighting)))
                     t_phys[b] = es.t
                     b += 1
+        if block_size == "auto":
+            # same resolution policy as the single-run driver (_run_scan),
+            # measured jointly over the actual per-scenario streams
+            from repro.core.async_sgd import _auto_block_size
+
+            block_size = _auto_block_size(
+                [es.slot for es, _ in streams], lane, cut_every=eval_every
+            )
         if block_size > 1:
             from repro.core import EventBlocks, blocked_inputs_batch
 
             blocks = [
-                EventBlocks.from_stream(es, block_size, cut_every=eval_every)
+                EventBlocks.from_stream(es, block_size, cut_every=eval_every,
+                                        method=segmentation)
                 for es, _ in streams
             ]
             Jb, slotb, scb, kb, maskb, chunk_blocks, n_chunks = (
@@ -477,6 +525,7 @@ def run_matrix(
                 clients.device_grad, C, eval_fn=acc_fn,
                 block_size=block_size, vmap_streams=True,
                 donate=jax.default_backend() != "cpu",
+                lane_devices=lane,
             )
             w_final, evals = runner(
                 w0, jnp.asarray(Jb), jnp.asarray(slotb), jnp.asarray(scb),
@@ -484,6 +533,11 @@ def run_matrix(
                 chunk_blocks=chunk_blocks, n_chunks=n_chunks,
             )
         else:
+            if lane > 1:
+                raise ValueError(
+                    "devices > 1 lane-shards micro-blocks and requires "
+                    "block_size > 1"
+                )
             Js = np.stack([es.J for es, _ in streams])
             slots = np.stack([es.slot for es, _ in streams])
             scales = np.stack([sc for _, sc in streams])

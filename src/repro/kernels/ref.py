@@ -8,6 +8,7 @@ import numpy as np
 __all__ = [
     "weighted_update_ref",
     "block_prefix_update_ref",
+    "block_scatter_rows_ref",
     "flash_attention_ref",
     "ssd_scan_ref",
     "moe_gmm_ref",
@@ -49,6 +50,27 @@ def block_prefix_update_ref(
     (padded) slots all target the trash row, so scatter order is moot.
     """
     W = w[None, :].astype(jnp.float32) - jnp.cumsum(D.astype(jnp.float32), axis=0)
+    snaps = snaps.at[slots].set(W.astype(snaps.dtype))
+    return snaps, W[-1].astype(w.dtype)
+
+
+def block_scatter_rows_ref(
+    snaps: jax.Array,    # (R, P) flat-packed snapshot ring buffer
+    w: jax.Array,        # (P,) current server weights (dtype reference only)
+    W: jax.Array,        # (E, P) precomputed intermediate weight rows
+    slots: jax.Array,    # (E,) ring slot per event (trash row on padding)
+) -> tuple[jax.Array, jax.Array]:
+    """Scatter-only half of the blocked update (the lane-partitioned path):
+
+        snaps[slot_i] = W_i,   w' = W_{E-1}
+
+    The intermediate iterates W arrive precomputed — in the lane-sharded
+    blocked engine each device builds them from its local lane prefix plus
+    the all-gathered cross-device offsets — so only the row stores (and the
+    final-weights handoff) remain.  Same duplicate-slot semantics as
+    `block_prefix_update_ref`: last writer wins, which only padded trash
+    rows exercise.
+    """
     snaps = snaps.at[slots].set(W.astype(snaps.dtype))
     return snaps, W[-1].astype(w.dtype)
 

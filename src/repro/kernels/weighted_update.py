@@ -25,6 +25,13 @@ sequential semantics.  The jnp oracle lives in `repro.kernels.ref.
 block_prefix_update_ref` — the CPU/parity fallback the engine uses by
 default.
 
+Lane-partitioned variant (`block_scatter_rows`): when the micro-block's E
+lanes are sharded across devices, each device computes its lanes' prefix
+contributions locally and the global iterates W_i fall out of one
+cross-device all-gather — the kernel then only has to stream the
+precomputed rows into the aliased ring buffer (same tiling, same trash-row
+semantics) and hand back W_{E-1} as the new server weights.
+
 Tiling: params are processed as flattened (rows, 1024) tiles — (8, 128)
 VREG-aligned lanes; scalars (scale / slot ids) ride in SMEM.
 """
@@ -167,6 +174,64 @@ def block_prefix_update(
         input_output_aliases={3: 1},  # ring buffer updated in place
         interpret=interpret,
     )(slots.astype(jnp.int32), w[None, :], D, snaps)
+    return osnaps, ow[0]
+
+
+def _scatter_kernel(slots_ref, W_ref, _snaps_ref, ow_ref, osnaps_ref, *, E):
+    """One column tile of the lane-partitioned scatter (see module docstring).
+
+    The E intermediate weight rows arrive precomputed (the lane-sharded
+    engine builds them from local prefixes + all-gathered device offsets);
+    this kernel only streams them into the aliased ring buffer and emits the
+    final row as the new server weights.
+    """
+    for i in range(E):                   # static unroll over the micro-block
+        osnaps_ref[pl.ds(slots_ref[i], 1), :] = (
+            W_ref[i, :][None, :].astype(osnaps_ref.dtype)
+        )
+    ow_ref[...] = W_ref[E - 1, :][None, :].astype(ow_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_scatter_rows(
+    snaps: jax.Array,    # (R, P) flat-packed snapshot ring buffer (R = C + 1)
+    w: jax.Array,        # (P,) current server weights (dtype reference only)
+    W: jax.Array,        # (E, P) precomputed intermediate weight rows (fp32)
+    slots: jax.Array,    # (E,) int32 ring slot per event (C = trash row)
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Scatter one micro-block's precomputed iterates into (snaps, w).
+
+    The lane-partitioned counterpart of `block_prefix_update`: when the E
+    lanes are sharded across devices, the prefix accumulation happens per
+    device (plus one cross-device all-gather), and only the row scatter
+    remains — one pass over column tiles, ring buffer updated in place
+    (``input_output_aliases``).  Requires ``P % BLOCK_TILE == 0`` like the
+    fused kernel; jnp oracle in `repro.kernels.ref.block_scatter_rows_ref`.
+    Returns ``(snaps', w')`` with ``w' = W[-1]`` cast to ``w.dtype``.
+    """
+    R, P = snaps.shape
+    E = W.shape[0]
+    if P % BLOCK_TILE:
+        raise ValueError(f"P={P} must be a multiple of BLOCK_TILE={BLOCK_TILE}")
+    grid = (P // BLOCK_TILE,)
+    tile = lambda rows: pl.BlockSpec((rows, BLOCK_TILE), lambda i: (0, i))
+    ow, osnaps = pl.pallas_call(
+        functools.partial(_scatter_kernel, E=E),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((E,), lambda i: (0,)),
+            tile(E),
+            tile(R),
+        ],
+        out_specs=[tile(1), tile(R)],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, P), w.dtype),
+            jax.ShapeDtypeStruct(snaps.shape, snaps.dtype),
+        ],
+        input_output_aliases={2: 1},  # ring buffer updated in place
+        interpret=interpret,
+    )(slots.astype(jnp.int32), W, snaps)
     return osnaps, ow[0]
 
 

@@ -123,6 +123,111 @@ class TestSegmentation:
         assert np.all(sc[blocks.mask] == 0.5)
 
 
+class TestDPSegmentation:
+    """DP cut placement: same invariants, never more padded lanes than
+    greedy (the DP is the exact optimum; greedy matches it because block
+    validity is hereditary — the test locks both directions)."""
+
+    def _cfg(self, C, E, T=400):
+        n = 6
+        return SimConfig(
+            mu=np.random.default_rng(C).uniform(0.3, 4.0, n),
+            p=_nonuniform_p(n, seed=C + E), C=C, T=T, seed=C + 3 * E,
+        )
+
+    @pytest.mark.parametrize("C", [1, 4, 12])
+    @pytest.mark.parametrize("E", [2, 4, 8])
+    def test_invariants(self, C, E):
+        _check_blocks(export_blocks(self._cfg(C, E), E, method="dp"))
+
+    @pytest.mark.parametrize("C,E,cut", [(1, 4, 0), (4, 4, 50), (8, 6, 25)])
+    def test_no_more_padded_lanes_than_greedy(self, C, E, cut):
+        cfg = self._cfg(C, E)
+        greedy = export_blocks(cfg, E, cut_every=cut)
+        dp = export_blocks(cfg, E, cut_every=cut, method="dp")
+        assert dp.padded_lanes <= greedy.padded_lanes
+        assert dp.utilization >= greedy.utilization
+        # hereditary validity makes greedy count-optimal too: exact tie
+        assert dp.B == greedy.B
+
+    def test_forced_cuts_respected(self):
+        cfg = SimConfig(mu=np.ones(5), p=np.full(5, 0.2), C=3, T=330, seed=1)
+        blocks = export_blocks(cfg, 4, cut_every=50, method="dp")
+        _check_blocks(blocks)
+        firsts = blocks.idx[:, 0][blocks.mask[:, 0]]
+        lasts = np.array([blocks.idx[b][blocks.mask[b]][-1]
+                          for b in range(blocks.B)])
+        assert np.all(firsts // 50 == lasts // 50)
+
+    def test_identical_replay(self):
+        """Greedy and DP cuts of the same stream replay to the same final
+        iterate (different block boundaries, same sequential semantics)."""
+        n, C, T, E = 8, 4, 600, 4
+        prob = Quadratic(n)
+        cfg = ServerConfig(n=n, C=C, T=T, eta=0.02, p=_nonuniform_p(n),
+                           seed=3, engine="scan", block_size=E)
+        w_g, _ = run_generalized_async_sgd(np.zeros(prob.d, np.float32),
+                                           prob, cfg)
+        w_d, _ = run_generalized_async_sgd(
+            np.zeros(prob.d, np.float32), prob,
+            replace(cfg, segmentation="dp"))
+        np.testing.assert_allclose(np.asarray(w_d), np.asarray(w_g),
+                                   atol=1e-5)
+
+    def test_unknown_method_rejected(self):
+        with pytest.raises(ValueError, match="bogus"):
+            segment_blocks(np.zeros(10, np.int32), 4, method="bogus")
+
+
+class TestSelectBlockSize:
+    def test_candidates_are_device_multiples(self):
+        from repro.core import select_block_size
+
+        cfg = SimConfig(mu=np.ones(8), p=np.full(8, 1 / 8), C=4, T=500,
+                        seed=0)
+        st = export_stream(cfg)
+        E, utils = select_block_size(st.slot, block_size_max=12, devices=3)
+        assert E % 3 == 0
+        assert set(utils) == {3, 6, 9, 12}
+
+    def test_largest_E_above_floor(self):
+        from repro.core import select_block_size
+
+        cfg = SimConfig(mu=np.ones(8), p=np.full(8, 1 / 8), C=4, T=800,
+                        seed=1)
+        st = export_stream(cfg)
+        E, utils = select_block_size(st.slot, block_size_max=16,
+                                     min_utilization=0.5)
+        above = [e for e, u in utils.items() if u >= 0.5]
+        assert E == max(above) if above else utils[E] == max(utils.values())
+
+    def test_aggregates_multiple_streams(self):
+        from repro.core import select_block_size
+
+        streams = [
+            export_stream(SimConfig(mu=np.ones(6), p=np.full(6, 1 / 6), C=3,
+                                    T=300, seed=s))
+            for s in (0, 1)
+        ]
+        E, utils = select_block_size([s.slot for s in streams])
+        assert E in utils and 0.0 < utils[E] <= 1.0
+
+    def test_run_matrix_auto_matches_explicit(self):
+        from repro.configs.base import FLConfig
+        from repro.core import select_block_size
+        from repro.data.pipeline import FederatedClassification
+        from repro.fl import run_matrix
+
+        flc = FLConfig(n_clients=10, concurrency=4, server_steps=120)
+        data = FederatedClassification(n_clients=10, seed=0)
+        kw = dict(seeds=(0,), policies=("uniform",), speed_ratios=(1.0,),
+                  eval_every=60, data=data)
+        m_auto = run_matrix(flc, block_size="auto", **kw)
+        m_ref = run_matrix(flc, **kw)  # per-event reference
+        np.testing.assert_allclose(m_auto.final_acc, m_ref.final_acc,
+                                   atol=1e-5)
+
+
 if HAVE_HYPOTHESIS:
 
     @st.composite
@@ -353,6 +458,17 @@ class TestBlockedKnobs:
         with pytest.raises(ValueError, match="block_size"):
             run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg)
 
+    def test_auto_blocked_rejects_custom_update(self):
+        """block_size="auto" must re-check the custom-update guard after
+        resolving E — a silently dropped apply_update is a wrong result."""
+        prob = Quadratic(self.N)
+        cfg = ServerConfig(
+            n=self.N, C=4, T=400, eta=0.1, engine="scan", block_size="auto",
+            apply_update=lambda w, g, s: w - 2 * s * g,
+        )
+        with pytest.raises(ValueError, match="default update"):
+            run_generalized_async_sgd(np.zeros(prob.d, np.float32), prob, cfg)
+
     def test_blocked_rejects_unknown_update(self):
         """The blocked branch validates cfg.update like the per-event one."""
         prob = Quadratic(self.N)
@@ -420,3 +536,27 @@ class TestBlockPrefixKernel:
                 jnp.zeros((3, 100)), jnp.zeros(100), jnp.zeros((2, 100)),
                 jnp.zeros(2, jnp.int32),
             )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_scatter_kernel_vs_ref(self, dtype):
+        """Lane-partitioned variant: precomputed rows, scatter-only pass."""
+        from repro.kernels.ref import block_scatter_rows_ref
+        from repro.kernels.weighted_update import BLOCK_TILE, block_scatter_rows
+
+        rng = np.random.default_rng(13)
+        P, R, E = 2 * BLOCK_TILE, 5, 4
+        snaps = jnp.asarray(rng.normal(size=(R, P)), dtype)
+        w = jnp.asarray(rng.normal(size=(P,)), jnp.float32)
+        W = jnp.asarray(rng.normal(size=(E, P)), jnp.float32)
+        slots = jnp.asarray([R - 1, 1, R - 1, 2], jnp.int32)  # dup trash rows
+        ks, kw = block_scatter_rows(snaps, w, W, slots, interpret=True)
+        rs, rw = block_scatter_rows_ref(snaps, w, W, slots)
+        tol = (dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16
+               else dict(atol=1e-6))
+        np.testing.assert_allclose(np.asarray(ks, np.float32),
+                                   np.asarray(rs, np.float32), **tol)
+        np.testing.assert_allclose(np.asarray(kw), np.asarray(rw), atol=1e-6)
+        # last-writer-wins on the duplicated trash row, real rows untouched
+        np.testing.assert_allclose(np.asarray(rs[R - 1], np.float32),
+                                   np.asarray(W[2], np.float32), **tol)
+        assert ks.dtype == snaps.dtype and kw.dtype == w.dtype

@@ -1,54 +1,103 @@
-"""Event-driven simulator invariants (hypothesis property tests)."""
+"""Event-driven simulator invariants: flat delay-recording semantics
+(dependency-free) + hypothesis property tests (optional dev dependency)."""
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="optional dev dependency (pip install .[dev])")
-from hypothesis import given, settings, strategies as st
+from repro.core import ClosedNetworkSim, SimConfig, export_stream, simulate
 
-from repro.core import ClosedNetworkSim, SimConfig, simulate
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency
+    HAVE_HYPOTHESIS = False
 
 
-@st.composite
-def sim_configs(draw):
-    n = draw(st.integers(2, 8))
-    C = draw(st.integers(1, 12))
-    T = draw(st.integers(10, 300))
-    seed = draw(st.integers(0, 2**16))
-    service = draw(st.sampled_from(["exp", "det"]))
-    mu = np.array([draw(st.floats(0.2, 8.0)) for _ in range(n)])
-    praw = np.array([draw(st.floats(0.05, 1.0)) for _ in range(n)])
-    return SimConfig(mu=mu, p=praw / praw.sum(), C=C, T=T, service=service, seed=seed,
-                     record_delays=True)
+class TestDelayRecordingSemantics:
+    """The flat-array invariant documented in the queue_sim module docstring:
+    delay records are stored flat in completion order — record k belongs to
+    node J[k] — and every per-node view is a lazy regrouping of that pair."""
+
+    def _cfg(self, **kw):
+        mu = np.array([2.0, 1.0, 0.5, 1.5])
+        return SimConfig(mu=mu, p=np.full(4, 0.25), C=3, T=400, seed=7,
+                         record_delays=True, **kw)
+
+    def test_flat_array_invariant(self):
+        cfg = self._cfg()
+        stream = export_stream(cfg)
+        # flat form: one int32 record per CS step, aligned with (J, K, t)
+        assert stream.delay_steps is not None
+        assert stream.delay_steps.shape == (cfg.T,)
+        assert stream.delay_steps.dtype == np.int32
+        assert np.all(stream.delay_steps >= 0)
+        # record k is the delay of the task completing at step k (node J[k]):
+        # regrouping the flat pair by J in event order IS the per-node view
+        regrouped = [
+            stream.delay_steps[stream.J == i].tolist()
+            for i in range(stream.n)
+        ]
+        assert regrouped == stream.delays
+        # the simulator's own flat property agrees with the exported stream
+        sim = ClosedNetworkSim(cfg)
+        sim.run(cfg.T)
+        np.testing.assert_array_equal(sim.delay_steps, stream.delay_steps)
+        assert sim.delays == stream.delays
+
+    def test_off_by_default(self):
+        cfg = SimConfig(mu=np.ones(3), p=np.full(3, 1 / 3), C=2, T=50, seed=0)
+        stream = export_stream(cfg)
+        assert stream.delay_steps is None and stream.delays is None
+        res = simulate(cfg)
+        assert res.delays is None
+        with pytest.raises(ValueError, match="record_delays"):
+            res.mean_delay_per_node()
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def sim_configs(draw):
+        n = draw(st.integers(2, 8))
+        C = draw(st.integers(1, 12))
+        T = draw(st.integers(10, 300))
+        seed = draw(st.integers(0, 2**16))
+        service = draw(st.sampled_from(["exp", "det"]))
+        mu = np.array([draw(st.floats(0.2, 8.0)) for _ in range(n)])
+        praw = np.array([draw(st.floats(0.05, 1.0)) for _ in range(n)])
+        return SimConfig(mu=mu, p=praw / praw.sum(), C=C, T=T, service=service, seed=seed,
+                         record_delays=True)
+
+    class TestInvariantsHypothesis:
+        @given(cfg=sim_configs())
+        @settings(max_examples=40, deadline=None)
+        def test_task_conservation(self, cfg):
+            """Closed network: total in-flight tasks constant == C at every step."""
+            sim = ClosedNetworkSim(cfg)
+            assert sim.total_tasks() == cfg.C
+            for _ in range(min(cfg.T, 100)):
+                sim.step()
+                assert sim.total_tasks() == cfg.C
+
+        @given(cfg=sim_configs())
+        @settings(max_examples=20, deadline=None)
+        def test_time_monotone_and_delays_nonnegative(self, cfg):
+            res = simulate(cfg)
+            assert np.all(np.diff(res.t) >= 0)
+            for d in res.delays:
+                assert all(x >= 0 for x in d)
+
+        @given(cfg=sim_configs())
+        @settings(max_examples=20, deadline=None)
+        def test_completions_at_busy_nodes_only(self, cfg):
+            sim = ClosedNetworkSim(cfg)
+            for _ in range(min(cfg.T, 80)):
+                before = sim.queue_lengths()
+                j, k = sim.step()
+                assert before[j] >= 1  # complete only where a task was queued
 
 
 class TestInvariants:
-    @given(cfg=sim_configs())
-    @settings(max_examples=40, deadline=None)
-    def test_task_conservation(self, cfg):
-        """Closed network: total in-flight tasks constant == C at every step."""
-        sim = ClosedNetworkSim(cfg)
-        assert sim.total_tasks() == cfg.C
-        for _ in range(min(cfg.T, 100)):
-            sim.step()
-            assert sim.total_tasks() == cfg.C
-
-    @given(cfg=sim_configs())
-    @settings(max_examples=20, deadline=None)
-    def test_time_monotone_and_delays_nonnegative(self, cfg):
-        res = simulate(cfg)
-        assert np.all(np.diff(res.t) >= 0)
-        for d in res.delays:
-            assert all(x >= 0 for x in d)
-
-    @given(cfg=sim_configs())
-    @settings(max_examples=20, deadline=None)
-    def test_completions_at_busy_nodes_only(self, cfg):
-        sim = ClosedNetworkSim(cfg)
-        for _ in range(min(cfg.T, 80)):
-            before = sim.queue_lengths()
-            j, k = sim.step()
-            assert before[j] >= 1  # can only complete where a task was queued
-
     def test_deterministic_given_seed(self):
         cfg = SimConfig(mu=np.array([1.0, 2.0]), p=np.array([0.5, 0.5]), C=3, T=500, seed=42)
         r1, r2 = simulate(cfg), simulate(cfg)

@@ -1,0 +1,164 @@
+"""Lane-sharded blocked engine: sharded == unsharded on 2 simulated devices.
+
+The lane shard (`engine_scan._make_block_step(lane_axis=...)`) partitions
+each micro-block's E gradient lanes across devices and recombines them with
+one all-gather per block; these tests lock that the sharded runner is
+numerically the unsharded runner (≤1e-5 in fp32 — the only difference is
+per-device re-association of the fp32 lane prefix).
+
+Device-count-dependent cases run in ONE subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` (the main pytest
+process keeps its single CPU device); guard-rail cases run in-process.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+_SUBPROC_SNIPPET = textwrap.dedent(
+    """
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core import (EventBlocks, SimConfig, blocked_inputs,
+                            export_stream, jit_fused_runner, jit_runner,
+                            step_scales)
+
+    class Quadratic:
+        def __init__(self, n, d=4, seed=0):
+            rng = np.random.default_rng(seed)
+            self.c_dev = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+            self.d = d
+        def device_grad(self, j, w, k):
+            return w - self.c_dev[j]
+
+    out = {}
+    n, T, E = 8, 500, 4
+    p = np.random.default_rng(1).uniform(0.5, 1.5, n); p /= p.sum()
+    w0 = jnp.zeros(4, jnp.float32)
+
+    def maxdiff(a, b):
+        return float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+
+    # gen_async, host blocked, C in {1, 4}
+    for C in (1, 4):
+        prob = Quadratic(n)
+        st = export_stream(SimConfig(mu=np.ones(n), p=p, C=C, T=T, seed=3))
+        blocks = EventBlocks.from_stream(st, E)
+        args = blocked_inputs(blocks, step_scales(st, 0.02, p, "importance"))
+        arrs = tuple(map(jnp.asarray, args[:5]))
+        w1, _ = jit_runner(prob.device_grad, C, block_size=E)(
+            w0, *arrs, chunk_blocks=args[5], n_chunks=args[6])
+        w2, _ = jit_runner(prob.device_grad, C, block_size=E, lane_devices=2)(
+            w0, *arrs, chunk_blocks=args[5], n_chunks=args[6])
+        out[f"gen_async_C{C}"] = maxdiff(w1, w2)
+
+    # FedBuff, host blocked
+    prob = Quadratic(n)
+    C = 4
+    st = export_stream(SimConfig(mu=np.ones(n), p=np.full(n, 1/n), C=C, T=T,
+                                 seed=0))
+    blocks = EventBlocks.from_stream(st, E)
+    args = blocked_inputs(blocks, step_scales(st, 0.05, np.full(n, 1/n),
+                                              "plain"))
+    arrs = tuple(map(jnp.asarray, args[:5]))
+    w1, _ = jit_runner(prob.device_grad, C, fedbuff_Z=5, block_size=E)(
+        w0, *arrs, chunk_blocks=args[5], n_chunks=args[6])
+    w2, _ = jit_runner(prob.device_grad, C, fedbuff_Z=5, block_size=E,
+                       lane_devices=2)(
+        w0, *arrs, chunk_blocks=args[5], n_chunks=args[6])
+    out["fedbuff_Z5"] = maxdiff(w1, w2)
+
+    # fused device stream, blocked window sharded
+    prob = Quadratic(n)
+    key = jax.random.PRNGKey(5)
+    mu = jnp.ones(n); p0 = jnp.asarray(p, jnp.float32)
+    f1 = jit_fused_runner(prob.device_grad, n, C, T, block_size=E)
+    f2 = jit_fused_runner(prob.device_grad, n, C, T, block_size=E,
+                          lane_devices=2)
+    out["fused"] = maxdiff(f1(w0, mu, p0, key, 0.02)[0],
+                           f2(w0, mu, p0, key, 0.02)[0])
+
+    # scenario x lane 2-D mesh (1 x 2), vmapped fused
+    mus = jnp.stack([mu, mu * 2.0])
+    ps = jnp.stack([p0, jnp.full(n, 1/n)])
+    keys = jax.random.split(key, 2)
+    b1 = jit_fused_runner(prob.device_grad, n, C, T, block_size=E,
+                          vmap_scenarios=True)
+    b2 = jit_fused_runner(prob.device_grad, n, C, T, block_size=E,
+                          vmap_scenarios=True, lane_devices=2)
+    out["fused_vmap_mesh"] = maxdiff(b1(w0, mus, ps, keys, 0.02)[0],
+                                     b2(w0, mus, ps, keys, 0.02)[0])
+    print(json.dumps(out))
+    """
+)
+
+
+class TestShardedParity:
+    @pytest.mark.slow  # subprocess compiling ~10 sharded programs on 2 devices
+    def test_sharded_matches_unsharded_on_two_devices(self):
+        repo_root = str(pathlib.Path(__file__).resolve().parent.parent)
+        res = subprocess.run(
+            [sys.executable, "-c", _SUBPROC_SNIPPET],
+            capture_output=True, text=True, timeout=600,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                 "HOME": os.environ.get("HOME", "/root")},
+            cwd=repo_root,
+        )
+        assert res.returncode == 0, res.stderr[-3000:]
+        out = json.loads(res.stdout.strip().splitlines()[-1])
+        for name, diff in out.items():
+            assert diff <= 1e-5, f"{name}: sharded-vs-unsharded diff {diff}"
+
+
+class TestShardedGuardRails:
+    """Validation paths that don't need extra devices."""
+
+    def _quad(self):
+        import jax.numpy as jnp
+
+        class Quadratic:
+            c_dev = jnp.asarray(np.zeros((8, 4), np.float32))
+
+            def device_grad(self, j, w, k):
+                return w - self.c_dev[j]
+
+        return Quadratic()
+
+    def test_per_event_rejects_lane_devices(self):
+        from repro.core import jit_runner
+
+        with pytest.raises(ValueError, match="block_size > 1"):
+            jit_runner(self._quad().device_grad, 4, lane_devices=2)
+
+    def test_block_size_must_divide(self):
+        from repro.core import jit_runner
+
+        with pytest.raises(ValueError, match="multiple of"):
+            jit_runner(self._quad().device_grad, 4, block_size=3,
+                       lane_devices=2)
+
+    def test_more_lanes_than_devices_rejected(self):
+        import jax
+
+        from repro.core import jit_runner
+
+        too_many = jax.device_count() + 1
+        with pytest.raises(ValueError, match="visible"):
+            jit_runner(self._quad().device_grad, 4,
+                       block_size=2 * too_many, lane_devices=too_many)
+
+    def test_server_config_devices_requires_blocked(self):
+        from repro.core import ServerConfig, run_generalized_async_sgd
+
+        cfg = ServerConfig(n=8, C=4, T=50, eta=0.1, engine="scan", devices=2)
+        with pytest.raises(ValueError, match="block"):
+            run_generalized_async_sgd(
+                np.zeros(4, np.float32), self._quad(), cfg
+            )

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Docs reference checker: every `path/to/file.py:symbol` reference and
+relative markdown link in docs/ and README.md must resolve.
+
+Conventions checked
+-------------------
+* ```path/file.py:symbol```  (backticked, repo-relative) — the file must
+  exist and define ``symbol``: for dotted symbols (``Class.method``) the
+  first component must appear as a ``def``/``class`` or a module-level
+  assignment, and each later component must appear as a ``def`` or an
+  attribute assignment somewhere in the file.
+* ``[text](relative/path)`` — the target must exist (http(s)/mailto links
+  are not fetched).
+* code fences must be balanced (the cheapest markdown-lint signal that a
+  doc was truncated or mis-pasted).
+
+Run from anywhere:  ``python tools/check_docs.py``  (exit 1 on any error;
+also exercised by tests/test_docs.py so tier-1 catches dead references).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+SYMREF = re.compile(r"`([A-Za-z0-9_\-./]+\.py):([A-Za-z_][A-Za-z0-9_.]*)`")
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files(root: Path = ROOT) -> list[Path]:
+    return sorted((root / "docs").glob("*.md")) + [root / "README.md"]
+
+
+def _component_defined(text: str, name: str, first: bool) -> bool:
+    esc = re.escape(name)
+    pats = [rf"^\s*(?:async\s+)?def\s+{esc}\b", rf"^\s*class\s+{esc}\b"]
+    if first:
+        pats.append(rf"^{esc}\s*[:=]")          # module-level constant
+    else:
+        pats.append(rf"^\s*(?:self\.)?{esc}\s*[:=]")  # field / attribute
+    return any(re.search(p, text, re.M) for p in pats)
+
+
+def symbol_defined(path: Path, symbol: str) -> bool:
+    text = path.read_text()
+    parts = symbol.split(".")
+    return all(
+        _component_defined(text, part, first=(i == 0))
+        for i, part in enumerate(parts)
+    )
+
+
+def check_file(md: Path, root: Path = ROOT) -> list[str]:
+    errors: list[str] = []
+    text = md.read_text()
+    if text.count("```") % 2:
+        errors.append(f"{md.name}: unbalanced code fences")
+    for m in SYMREF.finditer(text):
+        rel, sym = m.groups()
+        target = root / rel
+        if not target.exists():
+            errors.append(f"{md.name}: missing file {rel}")
+        elif not symbol_defined(target, sym):
+            errors.append(f"{md.name}: {rel} does not define `{sym}`")
+    for m in LINK.finditer(text):
+        href = m.group(1)
+        if href.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        href = href.split("#", 1)[0]
+        if not href:
+            continue
+        target = (md.parent / href).resolve()
+        if not target.exists():
+            errors.append(f"{md.name}: dead link {m.group(1)}")
+    return errors
+
+
+def main() -> int:
+    errors: list[str] = []
+    files = doc_files()
+    for md in files:
+        if not md.exists():
+            errors.append(f"missing doc file: {md}")
+            continue
+        errors.extend(check_file(md))
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} error(s) across {len(files)} file(s)")
+        return 1
+    n_refs = sum(len(SYMREF.findall(md.read_text())) for md in files)
+    print(f"docs OK: {len(files)} files, {n_refs} symbol references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
