@@ -17,7 +17,7 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "available_steps"]
+__all__ = ["save", "restore", "latest_step", "available_steps", "load_metadata"]
 
 _SEP = "|"
 
@@ -28,6 +28,26 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         flat[key] = np.asarray(leaf)
     return flat
+
+
+def _encode(flat: dict[str, np.ndarray]):
+    """Make every leaf `np.load`-able.
+
+    ml_dtypes leaves (bfloat16 & friends) have ``dtype.kind == 'V'``:
+    `np.savez` writes them but `np.load` cannot read the structured void
+    dtype back.  Store such leaves as a same-width unsigned-int bit view and
+    record the true dtype name in meta.json (``encoded_dtypes``); `restore`
+    views the bits back, so the round trip is exact.
+    """
+    out: dict[str, np.ndarray] = {}
+    encoded: dict[str, str] = {}
+    for key, arr in flat.items():
+        if arr.dtype.kind == "V":
+            encoded[key] = arr.dtype.name
+            out[key] = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        else:
+            out[key] = arr
+    return out, encoded
 
 
 def save(
@@ -42,12 +62,14 @@ def save(
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
     try:
         flat = _flatten(tree)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        stored, encoded = _encode(flat)
+        np.savez(os.path.join(tmp, "arrays.npz"), **stored)
         treedef = jax.tree_util.tree_structure(tree)
         meta = {
             "step": step,
             "treedef": str(treedef),
             "keys": sorted(flat),
+            "encoded_dtypes": encoded,
             "metadata": metadata or {},
         }
         with open(os.path.join(tmp, "meta.json"), "w") as f:
@@ -83,11 +105,23 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def load_metadata(directory: str, step: int) -> dict:
+    """The user ``metadata`` dict a checkpoint was saved with."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f).get("metadata", {})
+
+
 def restore(directory: str, step: int, like: Any) -> Any:
     """Restore into the structure of `like` (shapes validated)."""
     path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        encoded = json.load(f).get("encoded_dtypes", {})
     with np.load(os.path.join(path, "arrays.npz")) as z:
-        flat = {k: z[k] for k in z.files}
+        flat = {
+            k: z[k].view(np.dtype(encoded[k])) if k in encoded else z[k]
+            for k in z.files
+        }
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     flat_like = _flatten(like)
     if sorted(flat_like) != sorted(flat):

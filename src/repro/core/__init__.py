@@ -12,6 +12,7 @@ from .jackson import (
 )
 from .engine_scan import (
     DeviceGradientSource,
+    GuardConfig,
     blocked_inputs,
     blocked_inputs_batch,
     jit_fused_runner,
@@ -21,17 +22,28 @@ from .engine_scan import (
     step_scales,
     stream_arrays,
 )
+from .engine_ckpt import (
+    run_checkpointed,
+    run_checkpointed_host,
+    run_checkpointed_host_blocked,
+)
 from .stream_device import (
     ctrl_refresh,
+    estimate_mu,
     generate_blocks,
     generate_stream,
     make_bound_value_and_grad,
     mva_throughput_delays,
 )
 from .queue_sim import (
+    KIND_COMPLETE,
+    KIND_CRASH,
+    KIND_FLIP,
+    KIND_TIMEOUT,
     ClosedNetworkSim,
     EventBlocks,
     EventStream,
+    FaultConfig,
     SimConfig,
     SimResult,
     export_blocks,

@@ -37,7 +37,14 @@ from typing import Any, Callable, Protocol
 
 import numpy as np
 
-from .queue_sim import ClosedNetworkSim, SimConfig, export_stream
+from .queue_sim import (
+    KIND_COMPLETE,
+    KIND_FLIP,
+    ClosedNetworkSim,
+    FaultConfig,
+    SimConfig,
+    export_stream,
+)
 
 __all__ = [
     "GradientSource",
@@ -125,6 +132,21 @@ class ServerConfig:
     collect_extras: bool = True  # scan engine: accumulate queue statistics /
                                  # p-trajectory extras (False prunes them from
                                  # the compiled program — benchmark runs)
+    faults: "FaultConfig | None" = None  # client churn / crash / straggler
+                                 # injection (queue_sim.FaultConfig); both
+                                 # engines and both streams honor it — non-
+                                 # completion events apply no update and
+                                 # re-dispatch with the current weights
+    guard: Any | None = None     # engine_scan.GuardConfig: reject non-finite /
+                                 # norm-exploding gradients and (optionally)
+                                 # updates staler than stale_cutoff CS steps
+    ckpt_dir: str | None = None  # scan engine: checkpoint directory — routes
+                                 # the run through repro.core.engine_ckpt,
+                                 # snapshotting the full engine carry every
+                                 # ckpt_every CS steps (kill-and-resume safe)
+    ckpt_every: int = 0          # checkpoint cadence in CS steps
+    resume: bool = False         # resume from the latest checkpoint in
+                                 # ckpt_dir (config-fingerprint validated)
 
 
 @dataclass
@@ -254,6 +276,17 @@ def _run_scan(
     if cfg.track_virtual:
         raise NotImplementedError("track_virtual requires engine='python'")
     weighting = "plain" if fedbuff_Z else cfg.weighting
+    faults = cfg.faults if (cfg.faults is not None and cfg.faults.enabled) else None
+    guard = cfg.guard
+    guard_stale = guard is not None and int(guard.stale_cutoff) > 0
+    ckpt_on = cfg.ckpt_dir is not None
+    if ckpt_on and cfg.ckpt_every <= 0:
+        raise ValueError("ckpt_dir requires ckpt_every > 0")
+    if fedbuff_Z and (faults is not None or guard_stale):
+        raise ValueError(
+            "fault injection / staleness cutoff compose with Algorithm 1, "
+            "not FedBuff (the buffer flush has no per-event masking)"
+        )
     w0_dev = _tree_map(jnp.asarray, w0)
     eval_every = cfg.eval_every if eval_fn is not None else 0
     # the event-stream arrays are freshly built per run, so hand their
@@ -277,6 +310,44 @@ def _run_scan(
                 _probe_stream_slots(mu, p, cfg.C, cfg.T, cfg.seed),
                 cfg.devices,
             )
+        if ckpt_on:
+            from .engine_ckpt import run_checkpointed
+
+            if cfg.devices > 1:
+                raise ValueError(
+                    "checkpointing does not compose with lane sharding — "
+                    "checkpoint the unsharded run"
+                )
+            if fedbuff_Z or _scan_update_fn(cfg) is not None:
+                raise ValueError(
+                    "the checkpointed fused engine supports the default "
+                    "update w - scale*g with fedbuff_Z=0"
+                )
+            w, evals, ck_extras = run_checkpointed(
+                _device_grad_fn(source), cfg.n, cfg.C, cfg.T,
+                w0=w0_dev, mu=mu, p0=p, key=jax.random.PRNGKey(cfg.seed),
+                eta=cfg.eta, ckpt_dir=cfg.ckpt_dir, ckpt_every=cfg.ckpt_every,
+                weighting=weighting, eval_fn=eval_fn, eval_every=eval_every,
+                adaptive=cfg.adaptive, refresh_every=cfg.refresh_every,
+                ctrl_lr=cfg.ctrl_lr, ctrl_iters=cfg.ctrl_iters,
+                block_size=int(block_size), snapshot_dtype=cfg.snapshot_dtype,
+                fault=faults, guard=guard, resume=cfg.resume,
+            )
+            w = jax.block_until_ready(w)
+            # the chunked driver keeps no per-step clock (only the final t)
+            trace = TraceRecord(
+                steps=np.arange(cfg.T), times=np.full(cfg.T, np.nan)
+            )
+            trace.extras = {
+                k: np.asarray(v) for k, v in ck_extras.items()
+            }
+            if eval_fn is not None and cfg.eval_every:
+                n_evals = np.asarray(evals).shape[0]
+                trace.eval_steps = [
+                    (i + 1) * cfg.eval_every for i in range(n_evals)
+                ]
+                trace.eval_values = [float(v) for v in np.asarray(evals)]
+            return w, trace
         runner = jit_fused_runner(
             _device_grad_fn(source),
             cfg.n,
@@ -295,6 +366,8 @@ def _run_scan(
             snapshot_dtype=cfg.snapshot_dtype,
             collect_extras=cfg.collect_extras,
             lane_devices=cfg.devices,
+            fault=faults,
+            guard=guard,
         )
         w, evals, extras = runner(
             w0_dev, jnp.asarray(mu), jnp.asarray(p),
@@ -310,6 +383,9 @@ def _run_scan(
         )
         trace = TraceRecord(steps=np.arange(cfg.T), times=times)
         trace.extras = {"p_final": np.asarray(extras["p_final"], np.float64)}
+        for name in ("guard_rejects", "stale_drops", "kind_count", "avail_time"):
+            if name in extras:
+                trace.extras[name] = np.asarray(extras[name])
         if "occ_mean" in extras:
             trace.mean_queue_lengths = np.asarray(extras["occ_mean"], np.float64)
             comp = np.asarray(extras["comp"], np.float64)
@@ -327,9 +403,19 @@ def _run_scan(
             raise ValueError("adaptive sampling requires stream='device'")
         stream = export_stream(
             SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service,
-                      seed=cfg.seed, record_delays=cfg.collect_extras)
+                      seed=cfg.seed,
+                      record_delays=cfg.collect_extras or guard_stale,
+                      fault=faults)
         )
         scale = step_scales(stream, cfg.eta, p, weighting)
+        host_stale_drops = 0
+        if guard_stale:
+            # the host replay enforces the staleness cutoff here, where the
+            # exported per-event delays live — the in-scan counter (gcnt[1])
+            # stays 0 on host paths and the drop count rides trace.extras
+            stale = (stream.delay_steps > int(guard.stale_cutoff)) & (scale != 0)
+            host_stale_drops = int(stale.sum())
+            scale = np.where(stale, 0.0, scale).astype(scale.dtype)
         if cfg.update not in ("jnp", "pallas"):
             raise ValueError(cfg.update)
         kernel = cfg.update
@@ -343,52 +429,108 @@ def _run_scan(
             raise ValueError(
                 "block_size > 1 requires the default update w - scale*g"
             )
+        gcnt = None
         if block_size > 1:
+            group_events = eval_every
+            if ckpt_on:
+                # checkpoint cursors need exact event counts per row group,
+                # which only the grouped (cut_every) layout provides
+                group_events = eval_every if eval_every else min(
+                    cfg.ckpt_every, cfg.T
+                )
             blocks = EventBlocks.from_stream(
-                stream, block_size, cut_every=eval_every,
+                stream, block_size, cut_every=group_events,
                 method=cfg.segmentation,
             )
             J, slot, sc, kb, mask, chunk_blocks, n_chunks = blocked_inputs(
-                blocks, scale, eval_every
+                blocks, scale, group_events
             )
-            runner = jit_runner(
-                _device_grad_fn(source),
-                cfg.C,
-                fedbuff_Z=fedbuff_Z,
-                eval_fn=eval_fn,
-                block_size=block_size,
-                kernel=kernel,
-                snapshot_dtype=cfg.snapshot_dtype,
-                donate=donate,
-                interpret=cfg.pallas_interpret,
-                lane_devices=cfg.devices,
-            )
-            w, evals = runner(
-                w0_dev, jnp.asarray(J), jnp.asarray(slot), jnp.asarray(sc),
-                jnp.asarray(kb), jnp.asarray(mask),
-                chunk_blocks=chunk_blocks, n_chunks=n_chunks,
-            )
+            if ckpt_on:
+                from .engine_ckpt import run_checkpointed_host_blocked
+
+                if cfg.devices > 1:
+                    raise ValueError(
+                        "checkpointing does not compose with lane sharding"
+                    )
+                out = run_checkpointed_host_blocked(
+                    _device_grad_fn(source), cfg.C, int(block_size),
+                    w0_dev, J, slot, sc, kb, mask,
+                    group_events=group_events, chunk_blocks=chunk_blocks,
+                    n_chunks=n_chunks, ckpt_dir=cfg.ckpt_dir,
+                    ckpt_every=cfg.ckpt_every, eval_fn=eval_fn,
+                    kernel=kernel, interpret=cfg.pallas_interpret,
+                    snapshot_dtype=cfg.snapshot_dtype, fedbuff_Z=fedbuff_Z,
+                    guard=guard, resume=cfg.resume,
+                )
+            else:
+                runner = jit_runner(
+                    _device_grad_fn(source),
+                    cfg.C,
+                    fedbuff_Z=fedbuff_Z,
+                    eval_fn=eval_fn,
+                    block_size=block_size,
+                    kernel=kernel,
+                    snapshot_dtype=cfg.snapshot_dtype,
+                    donate=donate,
+                    interpret=cfg.pallas_interpret,
+                    lane_devices=cfg.devices,
+                    guard=guard,
+                )
+                out = runner(
+                    w0_dev, jnp.asarray(J), jnp.asarray(slot), jnp.asarray(sc),
+                    jnp.asarray(kb), jnp.asarray(mask),
+                    chunk_blocks=chunk_blocks, n_chunks=n_chunks,
+                )
         else:
             if cfg.devices > 1:
                 raise ValueError(
                     "devices > 1 lane-shards micro-blocks and requires the "
                     "blocked engine (block_size > 1)"
                 )
-            runner = jit_runner(
-                _device_grad_fn(source),
-                cfg.C,
-                fedbuff_Z=fedbuff_Z,
-                eval_fn=eval_fn,
-                eval_every=eval_every,
-                update_fn=_scan_update_fn(cfg),
-                donate=donate,
-            )
-            J_dev, slot_dev = stream_arrays(stream)
-            w, evals = runner(w0_dev, J_dev, slot_dev, jnp.asarray(scale))
+            if ckpt_on:
+                from .engine_ckpt import run_checkpointed_host
+
+                out = run_checkpointed_host(
+                    _device_grad_fn(source), cfg.C, w0_dev,
+                    stream.J, stream.slot, scale,
+                    ckpt_dir=cfg.ckpt_dir, ckpt_every=cfg.ckpt_every,
+                    eval_fn=eval_fn, eval_every=eval_every,
+                    fedbuff_Z=fedbuff_Z, update_fn=_scan_update_fn(cfg),
+                    snapshot_dtype=cfg.snapshot_dtype, guard=guard,
+                    resume=cfg.resume,
+                )
+            else:
+                runner = jit_runner(
+                    _device_grad_fn(source),
+                    cfg.C,
+                    fedbuff_Z=fedbuff_Z,
+                    eval_fn=eval_fn,
+                    eval_every=eval_every,
+                    update_fn=_scan_update_fn(cfg),
+                    donate=donate,
+                    guard=guard,
+                )
+                J_dev, slot_dev = stream_arrays(stream)
+                out = runner(w0_dev, J_dev, slot_dev, jnp.asarray(scale))
+        if guard is not None:
+            w, evals, gcnt = out
+        else:
+            w, evals = out
         w = jax.block_until_ready(w)
         trace = TraceRecord(steps=np.arange(cfg.T), times=np.asarray(stream.t))
         trace.delays = stream.delays
-        trace.mean_queue_lengths = stream.queue_len_sum / cfg.T
+        trace.mean_queue_lengths = (
+            stream.queue_len_sum / cfg.T
+            if stream.queue_len_sum is not None else None
+        )
+        if guard is not None:
+            gcnt = np.asarray(gcnt)
+            trace.extras["guard_rejects"] = int(gcnt[0])
+            trace.extras["stale_drops"] = int(gcnt[1]) + host_stale_drops
+        if faults is not None and stream.kind is not None:
+            trace.extras["kind_count"] = np.bincount(
+                stream.kind, minlength=4
+            )
 
     if eval_fn is not None and cfg.eval_every:
         n_evals = np.asarray(evals).shape[0]
@@ -417,11 +559,21 @@ def run_generalized_async_sgd(
         raise ValueError(cfg.engine)
     if cfg.stream == "device" or cfg.adaptive:
         raise ValueError("stream='device' / adaptive require engine='scan'")
+    if cfg.ckpt_dir is not None:
+        raise ValueError("checkpointing requires engine='scan'")
     sim = ClosedNetworkSim(
         SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service,
-                  seed=cfg.seed, record_delays=True)
+                  seed=cfg.seed, record_delays=True, fault=cfg.faults)
     )
     apply_update = cfg.apply_update or (lambda w, g, s: _axpy(w, g, -s))
+    faults_on = cfg.faults is not None and cfg.faults.enabled
+    if faults_on or cfg.guard is not None:
+        if cfg.track_virtual:
+            raise NotImplementedError(
+                "track_virtual does not compose with faults/guards"
+            )
+        return _python_fault_loop(w0, source, cfg, eval_fn, p, sim,
+                                  apply_update)
 
     w = w0
     mu_virtual = w0 if cfg.track_virtual else None
@@ -466,6 +618,84 @@ def run_generalized_async_sgd(
     return w, trace
 
 
+def _python_fault_loop(
+    w0: Pytree,
+    source: GradientSource,
+    cfg: ServerConfig,
+    eval_fn,
+    p: np.ndarray,
+    sim: ClosedNetworkSim,
+    apply_update,
+) -> tuple[Pytree, TraceRecord]:
+    """Fault/guard-aware reference loop — the parity oracle of the scan
+    engines' fault semantics.
+
+    One iteration consumes one *merged* CTMC event (`ClosedNetworkSim.
+    step_event`): completions compute the gradient at the dispatch-time
+    snapshot and (guards permitting) apply it; crashes and straggler
+    timeouts discard the in-flight work and re-dispatch the freed slot with
+    the *current* server weights; availability flips touch no task.  The
+    guard ordering (staleness before divergence, rejects counted once)
+    matches `engine_scan._make_flat_guard` exactly, with the staleness clock
+    being merged-event steps — the same counter the device stream scans
+    over.
+    """
+    import jax
+
+    guard = cfg.guard
+    max_sq = float(guard.max_grad_norm) ** 2 if guard is not None else 0.0
+    cutoff = int(guard.stale_cutoff) if guard is not None else 0
+    gcnt = [0, 0]  # [guard_rejects, stale_drops]
+    w = w0
+    # per-node FIFO of (dispatch-time snapshot, dispatch step + 1)
+    snaps: list[deque] = [deque((w0, 0) for _ in q) for q in sim.queues]
+    times = np.zeros(cfg.T)
+    trace = TraceRecord(steps=np.arange(cfg.T), times=times)
+    for k in range(cfg.T):
+        kind, j, k_new = sim.step_event()
+        times[k] = sim.now
+        if kind == KIND_FLIP:
+            continue
+        w_disp, disp_k = snaps[j].popleft()
+        if kind == KIND_COMPLETE:
+            live = True
+            if cutoff and (k - disp_k) > cutoff:
+                gcnt[1] += 1
+                live = False
+            if live:
+                g = source.grad(j, w_disp, k)
+                if guard is not None:
+                    sq = sum(
+                        float(np.sum(np.square(np.asarray(x, np.float32))))
+                        for x in jax.tree_util.tree_leaves(g)
+                    )
+                    if not np.isfinite(sq) or (max_sq > 0.0 and sq > max_sq):
+                        gcnt[0] += 1
+                        live = False
+            if live:
+                if cfg.weighting == "importance":
+                    scale = cfg.eta / (cfg.n * p[j])
+                elif cfg.weighting == "plain":
+                    scale = cfg.eta
+                else:
+                    raise ValueError(cfg.weighting)
+                w = apply_update(w, g, scale)
+        # crash/timeout: work discarded; slot re-dispatched at current w
+        snaps[k_new].append((w, k + 1))
+        if eval_fn is not None and cfg.eval_every and (k + 1) % cfg.eval_every == 0:
+            trace.eval_steps.append(k + 1)
+            trace.eval_values.append(float(eval_fn(w)))
+    trace.delays = sim.delays
+    trace.mean_queue_lengths = sim.queue_len_sum / cfg.T
+    trace.extras = {
+        "guard_rejects": gcnt[0],
+        "stale_drops": gcnt[1],
+        "kind_count": np.asarray(sim.kind_counts)
+        if getattr(sim, "_fault", False) else None,
+    }
+    return w, trace
+
+
 def run_fedbuff(
     w0: Pytree,
     source: GradientSource,
@@ -485,6 +715,13 @@ def run_fedbuff(
         raise ValueError(cfg.engine)
     if cfg.stream == "device" or cfg.adaptive:
         raise ValueError("stream='device' / adaptive require engine='scan'")
+    if (cfg.faults is not None and cfg.faults.enabled) or cfg.guard is not None:
+        raise ValueError(
+            "faults/guards compose with Algorithm 1 "
+            "(run_generalized_async_sgd), not the FedBuff reference loop"
+        )
+    if cfg.ckpt_dir is not None:
+        raise ValueError("checkpointing requires engine='scan'")
     sim = ClosedNetworkSim(
         SimConfig(mu=mu, p=pu, C=cfg.C, T=cfg.T, service=cfg.service,
                   seed=cfg.seed, record_delays=True)

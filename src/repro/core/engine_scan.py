@@ -69,16 +69,18 @@ or after its arrival).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, Protocol
 
 import numpy as np
 
-from .queue_sim import EventBlocks, EventStream
+from .queue_sim import KIND_COMPLETE, EventBlocks, EventStream, FaultConfig
 from .theory import BoundConstants
 
 __all__ = [
     "DeviceGradientSource",
+    "GuardConfig",
     "blocked_inputs",
     "blocked_inputs_batch",
     "jit_runner",
@@ -108,12 +110,23 @@ class DeviceGradientSource(Protocol):
 def step_scales(
     stream: EventStream, eta: float, p: np.ndarray, weighting: str
 ) -> np.ndarray:
-    """Per-step update scale as a (T,) array: eta/(n p_{J_k}) or plain eta."""
+    """Per-step update scale as a (T,) array: eta/(n p_{J_k}) or plain eta.
+
+    On fault-injected streams (``stream.kind`` set) non-completion events —
+    crashes, timeouts, availability flips — carry scale 0: the replay engine
+    then applies them exactly as the paper's update does nothing, while the
+    re-dispatch side effect (the freed slot re-hosting the task with the
+    current server weights) still happens through the normal scatter.
+    """
     if weighting == "importance":
-        return (eta / (stream.n * np.asarray(p, float)))[stream.J]
-    if weighting == "plain":
-        return np.full(stream.T, eta)
-    raise ValueError(weighting)
+        sc = (eta / (stream.n * np.asarray(p, float)))[stream.J]
+    elif weighting == "plain":
+        sc = np.full(stream.T, eta)
+    else:
+        raise ValueError(weighting)
+    if stream.kind is not None:
+        sc = np.where(stream.kind == KIND_COMPLETE, sc, 0.0)
+    return sc
 
 
 def stream_arrays(stream: EventStream):
@@ -302,49 +315,136 @@ def _snapshot_codec(w0, snapshot_dtype=None, pad_to: int = 1):
     return pack, unpack, enc
 
 
-def _make_apply_event(fedbuff_Z, enc):
-    """Flat-mode server update for one event, given its (packed) gradient.
+@dataclass(frozen=True)
+class GuardConfig:
+    """Divergence guard on the server update (graceful degradation).
 
-    ``apply_event((w, snaps, acc), g, s, scale, k)`` is Algorithm 1 lines
-    10-11 on the packed vector — one axpy, one scatter (plus the masked
-    FedBuff buffer flush every Z-th step).  Shared by the per-event
-    `update_step` and the device-blocked fixup pass so the update semantics
-    exist exactly once.
+    Guard order per event, applied after fault-kind masking (a crash /
+    timeout / flip already carries scale 0 and is never counted):
+
+      1. staleness cutoff — an update whose task has been in flight for more
+         than ``stale_cutoff`` server steps is dropped (scale -> 0) and
+         counted in ``stale_drops``;
+      2. divergence — a gradient that is non-finite, or whose l2 norm
+         exceeds ``max_grad_norm`` (0 disables the norm cap; non-finite
+         rejection is always on), is zeroed and counted in
+         ``guard_rejects``; the re-dispatch scatter still happens, so the
+         event stream's queue dynamics are untouched.
+
+    Guarded runners return the (2,) int32 counter ``[guard_rejects,
+    stale_drops]`` alongside the final iterate.  Requires the flat-packed
+    snapshot codec (uniform parameter dtype, default linear update).
+    """
+
+    max_grad_norm: float = 0.0
+    stale_cutoff: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return True  # non-finite rejection is unconditional
+
+    def cache_key(self):
+        return (float(self.max_grad_norm), int(self.stale_cutoff))
+
+
+def _make_flat_guard(guard: GuardConfig):
+    """``check(g, scale, gcnt, stale) -> (bad, scale, gcnt)`` on one packed
+    gradient — the single place the guard semantics (ordering, counting)
+    live; every engine path composes it around its update axpy.
+
+    The divergence verdict ``bad`` is returned instead of a pre-zeroed
+    gradient so the caller can compute the candidate update concurrently
+    with the norm reduction and suppress it afterwards
+    (``where(bad, w, w_new)``): zeroing ``g`` or ``scale`` up front would
+    serialize the axpy behind the full reduction over ``g``, an extra
+    sweep of stall per event.
     """
     import jax.numpy as jnp
 
-    def apply_event(ucarry, g, s, scale, k):
-        w, snaps, acc = ucarry
+    max_sq = float(guard.max_grad_norm) ** 2
+    cutoff = int(guard.stale_cutoff)
+
+    def check(g, scale, gcnt, stale=None):
+        live = scale != 0
+        if cutoff > 0 and stale is not None:
+            st = live & (stale > cutoff)
+            gcnt = gcnt.at[1].add(st.astype(jnp.int32))
+            scale = jnp.where(st, 0.0, scale)
+            live = live & ~st
+        sq = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        bad = ~jnp.isfinite(sq)
+        if max_sq > 0.0:
+            bad = bad | (sq > max_sq)
+        gcnt = gcnt.at[0].add((bad & live).astype(jnp.int32))
+        return bad, scale, gcnt
+
+    return check
+
+
+def _make_apply_event(fedbuff_Z, enc, guard=None):
+    """Flat-mode server update for one event, given its (packed) gradient.
+
+    ``apply_event((w, snaps, acc, gcnt), g, s, scale, k[, stale])`` is
+    Algorithm 1 lines 10-11 on the packed vector — one axpy, one scatter
+    (plus the masked FedBuff buffer flush every Z-th step).  Shared by the
+    per-event `update_step` and the device-blocked fixup pass so the update
+    semantics exist exactly once.  With ``guard`` the gradient passes the
+    divergence/staleness check first and the carry's (2,) reject counter
+    accumulates.
+    """
+    import jax.numpy as jnp
+
+    check = _make_flat_guard(guard) if guard is not None else None
+
+    def apply_event(ucarry, g, s, scale, k, stale=None):
+        w, snaps, acc, gcnt = ucarry
+        bad = None
+        if check is not None:
+            bad, scale, gcnt = check(g, scale, gcnt, stale)
         if fedbuff_Z > 0:
+            if bad is not None:  # the accumulator consumes g beyond the axpy
+                g = jnp.where(bad, jnp.zeros_like(g), g)
             acc = acc + g
             fire = ((k + 1) % fedbuff_Z) == 0
             eff = jnp.where(fire, scale / fedbuff_Z, 0.0)
             w = (w - eff * acc).astype(w.dtype)
             acc = acc * (~fire).astype(acc.dtype)
         else:
-            w = (w - scale * g).astype(w.dtype)
+            w_new = (w - scale * g).astype(w.dtype)
+            # candidate axpy and norm reduction run concurrently; rejection
+            # is a select on the result, not a stall before it
+            w = jnp.where(bad, w, w_new) if bad is not None else w_new
         snaps = snaps.at[s].set(enc(w))
-        return (w, snaps, acc)
+        return (w, snaps, acc, gcnt)
 
     return apply_event
 
 
-def _make_update_step(grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, enc):
+def _make_update_step(
+    grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, enc, guard=None
+):
     """The algorithm half of a CS step, independent of the event source.
 
-    ``update_step(ucarry, j, s, scale, k) -> ucarry`` consumes one event
-    (completing client j, ring slot s, update scale, server step k) exactly
-    as Algorithm 1 lines 9-11 — both the host-replay scan body and the fused
-    device-stream body compose it with their event producer.
+    ``update_step(ucarry, j, s, scale, k[, stale]) -> ucarry`` consumes one
+    event (completing client j, ring slot s, update scale, server step k)
+    exactly as Algorithm 1 lines 9-11 — both the host-replay scan body and
+    the fused device-stream body compose it with their event producer.
+    ``stale`` (server steps the task spent in flight) feeds the optional
+    staleness cutoff of ``guard``.
     """
     import jax
     import jax.numpy as jnp
 
+    if guard is not None and not flat_mode:
+        raise ValueError(
+            "the divergence guard requires the flat-packed snapshot codec "
+            "(uniform-dtype parameters, default linear update)"
+        )
     tree_map = jax.tree_util.tree_map
-    apply_event = _make_apply_event(fedbuff_Z, enc) if flat_mode else None
+    apply_event = _make_apply_event(fedbuff_Z, enc, guard) if flat_mode else None
 
-    def update_step(ucarry, j, s, scale, k):
-        w, snaps, acc = ucarry  # w (and acc) are flat vectors in flat_mode
+    def update_step(ucarry, j, s, scale, k, stale=None):
+        w, snaps, acc, gcnt = ucarry  # w (and acc) are flat in flat_mode
         # gather the completing task's dispatch-time snapshot (Alg. 1 line 9)
         if unpack is None:
             w_disp = tree_map(lambda b: b[s], snaps)
@@ -352,7 +452,7 @@ def _make_update_step(grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, en
             w_disp = unpack(snaps[s])
         g = grad_fn(j, w_disp, k)
         if flat_mode:
-            return apply_event(ucarry, pack(g), s, scale, k)
+            return apply_event(ucarry, pack(g), s, scale, k, stale)
         if fedbuff_Z > 0:
             acc = tree_map(lambda a, y: a + y, acc, g)
             fire = ((k + 1) % fedbuff_Z) == 0
@@ -366,7 +466,7 @@ def _make_update_step(grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, en
             snaps = tree_map(lambda b, x: b.at[s].set(x), snaps, w)
         else:
             snaps = snaps.at[s].set(enc(pack(w)))
-        return (w, snaps, acc)
+        return (w, snaps, acc, gcnt)
 
     return update_step
 
@@ -415,7 +515,8 @@ def _fedbuff_block_deltas(Gm, scm, k, m, acc, Z):
 
 
 def _make_block_step(
-    grad_fn, fedbuff_Z, pack, unpack, kernel, interpret, lane_axis=None
+    grad_fn, fedbuff_Z, pack, unpack, kernel, interpret, lane_axis=None,
+    guard=None,
 ):
     """One event micro-block of the blocked engine (flat-packed mode only).
 
@@ -463,11 +564,29 @@ def _make_block_step(
         raise ValueError(kernel)
 
     grads = _make_batched_grads(grad_fn, pack, unpack)
+    max_sq = float(guard.max_grad_norm) ** 2 if guard is not None else 0.0
+
+    def guard_rows(G, scm, gcnt):
+        # row-wise divergence check over the (local) lane batch; the zeroed
+        # rows flow through the prefix sum as exact no-ops.  Staleness is a
+        # host-side concern on the blocked replay path (the event arrays are
+        # pre-simulated, so stale scales arrive already zeroed).
+        sq = jnp.sum(jnp.square(G.astype(jnp.float32)), axis=1)
+        bad = ~jnp.isfinite(sq)
+        if max_sq > 0.0:
+            bad = bad | (sq > max_sq)
+        cnt = jnp.sum((bad & (scm != 0)).astype(jnp.int32))
+        if lane_axis is not None:
+            cnt = jax.lax.psum(cnt, lane_axis)
+        gcnt = gcnt.at[0].add(cnt)
+        return jnp.where(bad[:, None], jnp.zeros_like(G), G), gcnt
 
     def block_step(ucarry, j, s, sc, k, m):
-        w, snaps, acc = ucarry
+        w, snaps, acc, gcnt = ucarry
         G = grads(j, snaps[s], k)  # (E_local, P) batched over (local) lanes
         scm = jnp.where(m, sc, 0.0).astype(jnp.float32)
+        if guard is not None:
+            G, gcnt = guard_rows(G, scm, gcnt)
         if lane_axis is None:
             if fedbuff_Z > 0:
                 Gm = jnp.where(m[:, None], G, 0).astype(jnp.float32)
@@ -475,7 +594,7 @@ def _make_block_step(
             else:
                 D = scm[:, None] * G.astype(jnp.float32)
             snaps, w = apply_block(snaps, w, D, s)
-            return (w, snaps, acc)
+            return (w, snaps, acc, gcnt)
         if fedbuff_Z > 0:
             # flush positions couple all lanes: gather the masked lane
             # gradients (+ metadata) in one collective, then run the same
@@ -488,7 +607,7 @@ def _make_block_step(
                 Gm, scm_all, k_all, m_all, acc, fedbuff_Z
             )
             snaps, w = apply_block(snaps, w, D, s_all)
-            return (w, snaps, acc)
+            return (w, snaps, acc, gcnt)
         # gen_async: local lane prefix + one collective, then the global
         # iterates W_i = w - (S_all + exclusive device offset), replicated
         Dl = scm[:, None] * G.astype(jnp.float32)
@@ -501,16 +620,19 @@ def _make_block_step(
             E, -1
         )
         snaps, w = scatter_rows(snaps, w, W, s_all.reshape(E))
-        return (w, snaps, acc)
+        return (w, snaps, acc, gcnt)
 
     return block_step
 
 
 def _init_update_carry(w0, rows, pack, unpack, flat_mode, fedbuff_Z, enc):
-    """(w, snaps, acc) initial carry + the carry->pytree decoder.
+    """(w, snaps, acc, gcnt) initial carry + the carry->pytree decoder.
 
     ``rows`` is the snapshot ring height — C for the per-event engine, C+1
     for the blocked engine (the extra trash row absorbs padded scatters).
+    ``gcnt`` is the (2,) int32 ``[guard_rejects, stale_drops]`` counter —
+    carried unconditionally (two scalars) so the carry structure does not
+    depend on whether a guard is active.
     """
     import jax
     import jax.numpy as jnp
@@ -528,7 +650,7 @@ def _init_update_carry(w0, rows, pack, unpack, flat_mode, fedbuff_Z, enc):
         w_init = flat0 if flat_mode else w0
     acc0 = tree_map(jnp.zeros_like, w_init) if fedbuff_Z > 0 else ()
     to_tree = (lambda w: unpack(w)) if flat_mode else (lambda w: w)
-    return (w_init, snaps0, acc0), to_tree
+    return (w_init, snaps0, acc0, jnp.zeros((2,), jnp.int32)), to_tree
 
 
 def _default_update(update_fn):
@@ -559,11 +681,16 @@ def _make_host_runner(
     update_fn: Callable[[Pytree, Pytree, Any], Pytree] | None = None,
     unroll: int = 1,
     snapshot_dtype=None,
+    guard: GuardConfig | None = None,
 ):
     """Build the replay engine for a fixed algorithm shape.
 
     Returns ``run(w0, J, slot, scale, eval_every=...) -> (w_final, evals)``
-    — a pure function: `jax.jit` it directly (``eval_every`` is a Python
+    — with ``guard`` set, ``(w_final, evals, gcnt)`` where ``gcnt`` is the
+    (2,) ``[guard_rejects, stale_drops]`` counter (staleness on the replay
+    path is enforced host-side by zeroing scales before the call, so only
+    the divergence slot accumulates here) —
+    a pure function: `jax.jit` it directly (``eval_every`` is a Python
     int, pass it via ``static_argnames``), or `jax.vmap(run, in_axes=(None,
     0, 0, 0))` to execute a whole scenario matrix in one compiled call.
     ``evals`` is the eval_fn curve sampled every `eval_every` steps (empty
@@ -583,7 +710,7 @@ def _make_host_runner(
         pack, unpack, enc = _snapshot_codec(w0, snapshot_dtype)
         flat_mode = default_update and unpack is not None
         update_step = _make_update_step(
-            grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, enc
+            grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, enc, guard
         )
 
         def body(carry, xs):
@@ -617,8 +744,12 @@ def _make_host_runner(
             carry, evals = jax.lax.scan(chunk_body, carry, xs)
             if Tc < T:  # tail events past the last eval point
                 carry = scan(carry, J[Tc:], slot[Tc:], scale[Tc:], k0=Tc)
+            if guard is not None:
+                return to_tree(carry[0]), evals, carry[3]
             return to_tree(carry[0]), evals
         carry = scan(carry, J, slot, scale, k0=0)
+        if guard is not None:
+            return to_tree(carry[0]), jnp.zeros((0,)), carry[3]
         return to_tree(carry[0]), jnp.zeros((0,))
 
     return run
@@ -673,6 +804,7 @@ def _make_host_block_runner(
     interpret: bool = True,
     lane_devices: int = 1,
     vmap_streams: bool = False,
+    guard: GuardConfig | None = None,
 ):
     """Build the blocked replay engine over `queue_sim.EventBlocks` arrays.
 
@@ -725,7 +857,8 @@ def _make_host_block_runner(
                 "(flat-packed snapshot storage)"
             )
         block_step = _make_block_step(
-            grad_fn, fedbuff_Z, pack, unpack, kernel, interpret, lane_axis
+            grad_fn, fedbuff_Z, pack, unpack, kernel, interpret, lane_axis,
+            guard,
         )
         carry, to_tree = _init_update_carry(
             w0, C + 1, pack, unpack, True, fedbuff_Z, enc
@@ -755,8 +888,12 @@ def _make_host_block_runner(
                 carry = scan(
                     carry, J[Bm:], slot[Bm:], scale[Bm:], k[Bm:], mask[Bm:]
                 )
+            if guard is not None:
+                return to_tree(carry[0]), evals, carry[3]
             return to_tree(carry[0]), evals
         carry = scan(carry, J, slot, scale, k, mask)
+        if guard is not None:
+            return to_tree(carry[0]), jnp.zeros((0,)), carry[3]
         return to_tree(carry[0]), jnp.zeros((0,))
 
     if lane_devices == 1:
@@ -800,7 +937,7 @@ def _make_host_block_runner(
             base,
             mesh=mesh,
             in_specs=(P(),) + (lane_spec,) * 5,
-            out_specs=(P(), P()),
+            out_specs=(P(), P(), P()) if guard is not None else (P(), P()),
             check_rep=False,
         )
         return f(w0, J, slot, scale, k, mask)
@@ -811,6 +948,176 @@ def _make_host_block_runner(
 # ------------------------------------------------------------------ #
 # device stream: fused generator + control loop
 # ------------------------------------------------------------------ #
+def _make_fused_advance(
+    grad_fn, n, C, E, update_step, pack, unpack, enc, fedbuff_Z, guard, *,
+    importance, faulty, guard_stale, need_stats, axis, lane_devices, unroll,
+):
+    """The chunk-advance core of the fused engine, shared with `engine_ckpt`.
+
+    ``build(mu, eta, fr)`` closes over the traced scalars and returns
+    ``advance(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0) ->
+    (ucarry, sstate, stats, slot_scale, ts)`` — fused CS steps over one
+    chunk of pre-drawn uniforms: E-event windows plus a per-event remainder.
+    Factoring it out of `make_fused_runner` keeps exactly one copy of the
+    event semantics for the monolithic runner and the checkpointed
+    chunk-at-a-time driver (`core.engine_ckpt`).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from . import stream_device as sd
+
+    def build(mu, eta, fr):
+        def event_body(c, x):
+            """One fused CS step (stream advance + algorithm update)."""
+            ucarry, sstate, stats, slot_scale, p = c
+            urk, uek, kn, k = x
+            occ_pre = sstate.occ
+            if faulty:
+                avail_pre = sstate.avail
+                sstate, ev = sd.fault_stream_step(sstate, mu, fr, (urk, uek, kn))
+            else:
+                sstate, ev = sd.stream_step(sstate, mu, (urk, uek, kn))
+            # flips carry slot C: the (C,) gather clamps but the scale is
+            # masked to 0, and every scatter below drops out of bounds
+            scale = slot_scale[ev.slot] if importance else eta
+            if faulty:
+                scale = jnp.where(ev.kind == KIND_COMPLETE, scale, 0.0)
+            stale = (k - stats.slot_step[ev.slot]) if guard_stale else None
+            ucarry = update_step(ucarry, ev.j, ev.slot, scale, k, stale)
+            if need_stats:
+                if faulty:
+                    stats = sd.fault_stats_step(
+                        stats, ev, occ_pre, avail_pre, sstate.occ, k
+                    )
+                else:
+                    stats = sd.stats_step(stats, ev, occ_pre, sstate.occ, k)
+            if importance:
+                slot_scale = slot_scale.at[ev.slot].set(eta / (n * p[ev.k]))
+            return (ucarry, sstate, stats, slot_scale, p), ev.t
+
+        def window_body(c, x):
+            """One E-event micro-block of fused CS steps.
+
+            Phase 1 advances the closed network E steps (cheap integer /
+            scalar ops, one inner scan); phase 2 batch-gathers the E
+            window-entry snapshots and computes all gradients in one vmapped
+            call; phase 3 replays the exact sequential updates, recomputing
+            a gradient only when its task was dispatched *inside* this
+            window (``conf >= 0`` — its snapshot was written after the batch
+            gather).
+            """
+            ucarry, sstate, stats, slot_scale, p = c
+            urw, uew, knw, kw = x
+
+            def sbody(cc, xx):
+                sstate, stats, slot_scale, lastw, i = cc
+                urk, uek, kn, k = xx
+                occ_pre = sstate.occ
+                if faulty:
+                    avail_pre = sstate.avail
+                    sstate, ev = sd.fault_stream_step(
+                        sstate, mu, fr, (urk, uek, kn)
+                    )
+                else:
+                    sstate, ev = sd.stream_step(sstate, mu, (urk, uek, kn))
+                sc = slot_scale[ev.slot] if importance else eta
+                if faulty:
+                    sc = jnp.where(ev.kind == KIND_COMPLETE, sc, 0.0)
+                conf = lastw[ev.slot]
+                lastw = lastw.at[ev.slot].set(i)
+                dl = (k - stats.slot_step[ev.slot]) if guard_stale else None
+                if need_stats:
+                    if faulty:
+                        stats = sd.fault_stats_step(
+                            stats, ev, occ_pre, avail_pre, sstate.occ, k
+                        )
+                    else:
+                        stats = sd.stats_step(stats, ev, occ_pre, sstate.occ, k)
+                if importance:
+                    slot_scale = slot_scale.at[ev.slot].set(eta / (n * p[ev.k]))
+                ys = (ev.j, ev.slot, sc, conf, ev.t)
+                if guard_stale:
+                    ys = ys + (dl,)
+                return (sstate, stats, slot_scale, lastw, i + 1), ys
+
+            lastw0 = jnp.full((C,), -1, jnp.int32)
+            (sstate, stats, slot_scale, _, _), sys_ = jax.lax.scan(
+                sbody,
+                (sstate, stats, slot_scale, lastw0, jnp.int32(0)),
+                (urw, uew, knw, kw),
+            )
+            if guard_stale:
+                jv, sv, scv, confv, tv, dlv = sys_
+            else:
+                jv, sv, scv, confv, tv = sys_
+            snaps = ucarry[1]
+            batched_grads = _make_batched_grads(grad_fn, pack, unpack)
+            if axis is None:
+                G0 = batched_grads(jv, snaps[sv], kw)
+            else:
+                # lane-sharded: this device differentiates E/D of the
+                # window's lanes; one all-gather recombines the batch
+                El = E // lane_devices
+                d = jax.lax.axis_index(axis)
+                sl = lambda a: jax.lax.dynamic_slice_in_dim(a, d * El, El, 0)
+                jl, svl, kl = sl(jv), sl(sv), sl(kw)
+                Gl = batched_grads(jl, snaps[svl], kl)
+                G0 = jax.lax.all_gather(Gl, axis, tiled=True)
+
+            apply_event = _make_apply_event(fedbuff_Z, enc, guard)
+
+            def fbody(cc, xx):
+                if guard_stale:
+                    j, s, sc, conf, g0, k, dl = xx
+                else:
+                    j, s, sc, conf, g0, k = xx
+                    dl = None
+                row = cc[1][s]
+                g = jax.lax.cond(
+                    conf >= 0,
+                    lambda r: pack(grad_fn(j, unpack(r), k)),
+                    lambda r: g0,
+                    row,
+                )
+                return apply_event(cc, g, s, sc, k, dl), ()
+
+            xs_f = (jv, sv, scv, confv, G0, kw)
+            if guard_stale:
+                xs_f = xs_f + (dlv,)
+            ucarry, _ = jax.lax.scan(fbody, ucarry, xs_f)
+            return (ucarry, sstate, stats, slot_scale, p), tv
+
+        def advance(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0):
+            """Fused CS steps over one chunk: E-event windows + remainder."""
+            c = (ucarry, sstate, stats, slot_scale, p)
+            Lc = Kc.shape[0]
+            ks = k0 + jnp.arange(Lc, dtype=jnp.int32)
+            nW = Lc // E if E > 1 else 0
+            Wc = nW * E
+            ts_parts = []
+            if nW:
+                resh = lambda a: a[:Wc].reshape(nW, E)
+                c, tsw = jax.lax.scan(
+                    window_body, c, (resh(ur), resh(ue), resh(Kc), resh(ks)),
+                    unroll=unroll,
+                )
+                ts_parts.append(tsw.reshape(Wc))
+            if Wc < Lc:
+                c, tse = jax.lax.scan(
+                    event_body, c, (ur[Wc:], ue[Wc:], Kc[Wc:], ks[Wc:]),
+                    unroll=unroll,
+                )
+                ts_parts.append(tse)
+            ucarry, sstate, stats, slot_scale, p = c
+            ts = ts_parts[0] if len(ts_parts) == 1 else jnp.concatenate(ts_parts)
+            return ucarry, sstate, stats, slot_scale, ts
+
+        return advance
+
+    return build
+
+
 def make_fused_runner(
     grad_fn: Callable[[Any, Pytree, Any], Pytree],
     n: int,
@@ -834,6 +1141,8 @@ def make_fused_runner(
     snapshot_dtype=None,
     lane_devices: int = 1,
     lane_axis: str | None = None,
+    fault: FaultConfig | None = None,
+    guard: GuardConfig | None = None,
 ):
     """Build the fused engine: `stream_device.stream_step` ∘ `update_step`.
 
@@ -872,6 +1181,17 @@ def make_fused_runner(
     ``lane_axis`` is for callers that already run inside a `shard_map`
     (the scenario × lane 2-D mesh of `jit_fused_runner`): it names the
     existing lane axis instead of self-wrapping.
+
+    ``fault`` injects client churn / crashes / straggler timeouts into the
+    on-device generator (`stream_device.fault_stream_step`): non-completion
+    events carry scale 0 through the shared `_make_apply_event`, so a
+    crashed or timed-out task's work is discarded and its slot re-dispatched
+    with the *current* server weights — exactly FedBuff's non-fire masking.
+    ``guard`` adds the divergence/staleness checks of `GuardConfig`;
+    ``extras`` then reports ``guard_rejects`` / ``stale_drops`` (and, under
+    faults, the per-kind event counts and availability integrals).  Both
+    compose with blocks, lanes and the scenario mesh; neither composes with
+    FedBuff (the buffer flush has no per-event masking semantics).
     """
     import jax
     import jax.numpy as jnp
@@ -907,7 +1227,19 @@ def make_fused_runner(
     axis = lane_axis if lane_axis is not None else (
         "lanes" if lane_devices > 1 else None
     )
-    need_stats = collect_extras or adaptive
+    faulty = fault is not None and fault.enabled
+    guard_stale = guard is not None and int(guard.stale_cutoff) > 0
+    if faulty and fedbuff_Z:
+        raise ValueError(
+            "fault injection composes with Algorithm 1, not FedBuff "
+            "(a crash/timeout at a flush step has no masking semantics)"
+        )
+    if guard_stale and fedbuff_Z:
+        raise ValueError(
+            "the staleness cutoff requires the per-event update (fedbuff_Z=0)"
+        )
+    # the staleness cutoff reads StatsState.slot_step, so stats must run
+    need_stats = collect_extras or adaptive or guard_stale
 
     # chunk length: refresh and eval both happen at chunk boundaries
     if adaptive:
@@ -931,7 +1263,7 @@ def make_fused_runner(
                 "(flat-packed snapshot storage)"
             )
         update_step = _make_update_step(
-            grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, enc
+            grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, enc, guard
         )
         rows = C + 1 if E > 1 else C
         ucarry, to_tree = _init_update_carry(
@@ -941,126 +1273,27 @@ def make_fused_runner(
         mu = jnp.asarray(mu, jnp.float32)
         p0 = jnp.asarray(p0, jnp.float32)
         eta = jnp.asarray(eta, jnp.float32)
+        fr = sd.resolve_fault_rates(fault, n) if faulty else None
         k_init, k_race, k_exp, k_disp = jax.random.split(key, 4)
         u_race = jax.random.uniform(k_race, (T,))
         u_exp = jax.random.uniform(k_exp, (T,))
         u_disp = jax.random.uniform(k_disp, (T,))
-        sstate, init_nodes = sd.stream_init(k_init, n, C, p0, init=init)
-        stats = sd.stats_init(n, C)
+        sstate, init_nodes = sd.stream_init(
+            k_init, n, C, p0, init=init, fault=faulty
+        )
+        stats = sd.stats_init(n, C, fault=faulty)
         # dispatch-time importance scale per in-flight slot (Alg. 1 line 10)
         if importance:
             slot_scale0 = eta / (n * p0[init_nodes])
         else:
             slot_scale0 = jnp.broadcast_to(eta, (C,))
 
-        def event_body(c, x):
-            """One fused CS step (stream advance + algorithm update)."""
-            ucarry, sstate, stats, slot_scale, p = c
-            urk, uek, kn, k = x
-            occ_pre = sstate.occ
-            sstate, ev = sd.stream_step(sstate, mu, (urk, uek, kn))
-            scale = slot_scale[ev.slot] if importance else eta
-            ucarry = update_step(ucarry, ev.j, ev.slot, scale, k)
-            if need_stats:
-                stats = sd.stats_step(stats, ev, occ_pre, sstate.occ, k)
-            if importance:
-                slot_scale = slot_scale.at[ev.slot].set(eta / (n * p[ev.k]))
-            return (ucarry, sstate, stats, slot_scale, p), ev.t
-
-        def window_body(c, x):
-            """One E-event micro-block of fused CS steps.
-
-            Phase 1 advances the closed network E steps (cheap integer /
-            scalar ops, one inner scan); phase 2 batch-gathers the E
-            window-entry snapshots and computes all gradients in one vmapped
-            call; phase 3 replays the exact sequential updates, recomputing
-            a gradient only when its task was dispatched *inside* this
-            window (``conf >= 0`` — its snapshot was written after the batch
-            gather).
-            """
-            ucarry, sstate, stats, slot_scale, p = c
-            urw, uew, knw, kw = x
-
-            def sbody(cc, xx):
-                sstate, stats, slot_scale, lastw, i = cc
-                urk, uek, kn, k = xx
-                occ_pre = sstate.occ
-                sstate, ev = sd.stream_step(sstate, mu, (urk, uek, kn))
-                sc = slot_scale[ev.slot] if importance else eta
-                conf = lastw[ev.slot]
-                lastw = lastw.at[ev.slot].set(i)
-                if need_stats:
-                    stats = sd.stats_step(stats, ev, occ_pre, sstate.occ, k)
-                if importance:
-                    slot_scale = slot_scale.at[ev.slot].set(eta / (n * p[ev.k]))
-                return (sstate, stats, slot_scale, lastw, i + 1), (
-                    ev.j, ev.slot, sc, conf, ev.t,
-                )
-
-            lastw0 = jnp.full((C,), -1, jnp.int32)
-            (sstate, stats, slot_scale, _, _), (jv, sv, scv, confv, tv) = (
-                jax.lax.scan(
-                    sbody,
-                    (sstate, stats, slot_scale, lastw0, jnp.int32(0)),
-                    (urw, uew, knw, kw),
-                )
-            )
-            w, snaps, acc = ucarry
-            batched_grads = _make_batched_grads(grad_fn, pack, unpack)
-            if axis is None:
-                G0 = batched_grads(jv, snaps[sv], kw)
-            else:
-                # lane-sharded: this device differentiates E/D of the
-                # window's lanes; one all-gather recombines the batch
-                El = E // lane_devices
-                d = jax.lax.axis_index(axis)
-                sl = lambda a: jax.lax.dynamic_slice_in_dim(a, d * El, El, 0)
-                jl, svl, kl = sl(jv), sl(sv), sl(kw)
-                Gl = batched_grads(jl, snaps[svl], kl)
-                G0 = jax.lax.all_gather(Gl, axis, tiled=True)
-
-            apply_event = _make_apply_event(fedbuff_Z, enc)
-
-            def fbody(cc, xx):
-                j, s, sc, conf, g0, k = xx
-                row = cc[1][s]
-                g = jax.lax.cond(
-                    conf >= 0,
-                    lambda r: pack(grad_fn(j, unpack(r), k)),
-                    lambda r: g0,
-                    row,
-                )
-                return apply_event(cc, g, s, sc, k), ()
-
-            ucarry, _ = jax.lax.scan(
-                fbody, (w, snaps, acc), (jv, sv, scv, confv, G0, kw)
-            )
-            return (ucarry, sstate, stats, slot_scale, p), tv
-
-        def advance(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0):
-            """Fused CS steps over one chunk: E-event windows + remainder."""
-            c = (ucarry, sstate, stats, slot_scale, p)
-            Lc = Kc.shape[0]
-            ks = k0 + jnp.arange(Lc, dtype=jnp.int32)
-            nW = Lc // E if E > 1 else 0
-            Wc = nW * E
-            ts_parts = []
-            if nW:
-                resh = lambda a: a[:Wc].reshape(nW, E)
-                c, tsw = jax.lax.scan(
-                    window_body, c, (resh(ur), resh(ue), resh(Kc), resh(ks)),
-                    unroll=unroll,
-                )
-                ts_parts.append(tsw.reshape(Wc))
-            if Wc < Lc:
-                c, tse = jax.lax.scan(
-                    event_body, c, (ur[Wc:], ue[Wc:], Kc[Wc:], ks[Wc:]),
-                    unroll=unroll,
-                )
-                ts_parts.append(tse)
-            ucarry, sstate, stats, slot_scale, p = c
-            ts = ts_parts[0] if len(ts_parts) == 1 else jnp.concatenate(ts_parts)
-            return ucarry, sstate, stats, slot_scale, ts
+        advance = _make_fused_advance(
+            grad_fn, n, C, E, update_step, pack, unpack, enc, fedbuff_Z, guard,
+            importance=importance, faulty=faulty, guard_stale=guard_stale,
+            need_stats=need_stats, axis=axis, lane_devices=lane_devices,
+            unroll=unroll,
+        )(mu, eta, fr)
 
         def sample_dispatch(cdf, u):
             return jnp.minimum(
@@ -1124,7 +1357,11 @@ def make_fused_runner(
         else:
             evals = jnp.zeros((0,))
         if not collect_extras:
-            return to_tree(ucarry[0]), evals, {"p_final": p}
+            extras = {"p_final": p}
+            if guard is not None:
+                extras["guard_rejects"] = ucarry[3][0]
+                extras["stale_drops"] = ucarry[3][1]
+            return to_tree(ucarry[0]), evals, extras
         extras = {
             "t": ts,
             "p_final": p,
@@ -1135,6 +1372,12 @@ def make_fused_runner(
             "delay_sum": stats.delay_sum,
             "comp": stats.comp,
         }
+        if guard is not None:
+            extras["guard_rejects"] = ucarry[3][0]
+            extras["stale_drops"] = ucarry[3][1]
+        if faulty:
+            extras["kind_count"] = stats.kind_count
+            extras["avail_time"] = stats.avail_tw
         return to_tree(ucarry[0]), evals, extras
 
     if not wrap_lanes:
@@ -1172,6 +1415,7 @@ def make_runner(
     snapshot_dtype=None,
     interpret: bool = True,
     lane_devices: int = 1,
+    guard: GuardConfig | None = None,
     **device_kw,
 ):
     """Build the scan engine; ``stream`` selects the event source.
@@ -1211,13 +1455,13 @@ def make_runner(
                 grad_fn, C, block_size, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
                 update_fn=update_fn, unroll=unroll, kernel=kernel,
                 snapshot_dtype=snapshot_dtype, interpret=interpret,
-                lane_devices=lane_devices,
+                lane_devices=lane_devices, guard=guard,
             )
         _check_lane_devices(lane_devices, block_size)  # rejects D>1 at E=1
         return _make_host_runner(
             grad_fn, C, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
             eval_every=eval_every, update_fn=update_fn, unroll=unroll,
-            snapshot_dtype=snapshot_dtype,
+            snapshot_dtype=snapshot_dtype, guard=guard,
         )
     if stream == "device":
         try:
@@ -1228,7 +1472,7 @@ def make_runner(
             grad_fn, n, C, T, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
             eval_every=eval_every, update_fn=update_fn, unroll=unroll,
             block_size=block_size, snapshot_dtype=snapshot_dtype,
-            lane_devices=lane_devices,
+            lane_devices=lane_devices, guard=guard,
             **device_kw,
         )
     raise ValueError(stream)
@@ -1273,6 +1517,7 @@ def jit_runner(
     donate: bool = False,
     interpret: bool = True,
     lane_devices: int = 1,
+    guard: GuardConfig | None = None,
 ):
     """Jitted, memoized host-replay runner.
 
@@ -1299,6 +1544,7 @@ def jit_runner(
     key = (
         "host", func, C, fedbuff_Z, eval_fn, update_fn, unroll, vmap_streams,
         block_size, kernel, snapshot_dtype, donate, interpret, lane_devices,
+        None if guard is None else guard.cache_key(),
     )
     if block_size > 1 and eval_every:
         raise ValueError(
@@ -1316,7 +1562,7 @@ def jit_runner(
             grad_fn, C, block_size, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn,
             update_fn=update_fn, unroll=unroll, kernel=kernel,
             snapshot_dtype=snapshot_dtype, interpret=interpret,
-            lane_devices=lane_devices, vmap_streams=vmap_streams,
+            lane_devices=lane_devices, vmap_streams=vmap_streams, guard=guard,
         )
         cache[key] = jax.jit(
             run,
@@ -1327,6 +1573,7 @@ def jit_runner(
     base = _make_host_runner(
         grad_fn, C, fedbuff_Z=fedbuff_Z, eval_fn=eval_fn, eval_every=0,
         update_fn=update_fn, unroll=unroll, snapshot_dtype=snapshot_dtype,
+        guard=guard,
     )
     if vmap_streams:
         def run(w0, J, slot, scale, eval_every=0):
@@ -1379,11 +1626,15 @@ def jit_fused_runner(
     import jax
 
     cache, func = _runner_cache(grad_fn)
-    kw_key = tuple(
-        (k, v) if k != "bound" else
-        (k, None if v is None else (v.A, v.L, v.B, v.C, v.T, v.rho))
-        for k, v in sorted(kw.items())
-    )
+
+    def _kw_entry(k, v):
+        if k == "bound":
+            return (k, None if v is None else (v.A, v.L, v.B, v.C, v.T, v.rho))
+        if k in ("fault", "guard"):
+            return (k, None if v is None else v.cache_key())
+        return (k, v)
+
+    kw_key = tuple(_kw_entry(k, v) for k, v in sorted(kw.items()))
     key = (
         "device", func, n, C, T, vmap_scenarios, shard_devices, lane_devices,
         kw_key,

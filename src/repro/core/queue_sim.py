@@ -80,6 +80,7 @@ __all__ = [
     "SimResult",
     "EventStream",
     "EventBlocks",
+    "FaultConfig",
     "ClosedNetworkSim",
     "simulate",
     "simulate_batch",
@@ -87,12 +88,83 @@ __all__ = [
     "export_blocks",
     "segment_blocks",
     "select_block_size",
+    "KIND_COMPLETE",
+    "KIND_CRASH",
+    "KIND_TIMEOUT",
+    "KIND_FLIP",
 ]
+
+#: event kind tags shared by the host simulator, the device stream and the
+#: scan engine.  Only KIND_COMPLETE events apply a gradient; crash/timeout
+#: events move the task (re-dispatch with the *current* server weights) and
+#: KIND_FLIP events toggle availability without touching any queue.
+KIND_COMPLETE = 0
+KIND_CRASH = 1
+KIND_TIMEOUT = 2
+KIND_FLIP = 3
 
 #: shared RNG pre-draw block size — every entry point uses the same default so
 #: `simulate(cfg)`, `simulate_batch(cfg)` and `ClosedNetworkSim(cfg).run(T)`
 #: produce the identical event stream for the same seed
 DEFAULT_BLOCK = 4096
+
+
+@dataclass(frozen=True, eq=False)
+class FaultConfig:
+    """Memoryless fault processes layered on the closed network.
+
+    Every rate is a per-node exponential intensity (scalar broadcast or an
+    ``(n,)`` array), so the network + faults remain a CTMC and both the
+    host event heap and the device inverse-CDF race survive unchanged in
+    law.  Semantics:
+
+      * availability is a 2-state Markov chain per node: ``off_rate`` is
+        the on->off flip intensity, ``on_rate`` off->on.  An unavailable
+        node serves nothing (completion and crash clocks are suspended;
+        memorylessness means service simply redraws on resume).
+      * ``crash_rate`` races the in-service completion while the node is
+        available; on a crash the in-flight task's work is discarded and
+        the task re-enters dispatch (K ~ p) with the current server
+        weights.
+      * ``timeout_rate`` is a per-task straggler deadline on the
+        head-of-line task.  It fires *regardless of availability* (the
+        deadline is enforced server-side), and the expired task is
+        re-dispatched exactly like a crash.
+
+    All four default to 0 (process disabled).
+    """
+
+    off_rate: float | tuple | np.ndarray = 0.0
+    on_rate: float | tuple | np.ndarray = 0.0
+    crash_rate: float | tuple | np.ndarray = 0.0
+    timeout_rate: float | tuple | np.ndarray = 0.0
+
+    def resolve(self, n: int) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Broadcast all four rates to float64 ``(n,)`` arrays (validated)."""
+        out = []
+        for name in ("off_rate", "on_rate", "crash_rate", "timeout_rate"):
+            a = np.broadcast_to(
+                np.asarray(getattr(self, name), np.float64), (n,)
+            ).copy()
+            if not np.all(np.isfinite(a)) or np.any(a < 0):
+                raise ValueError(f"FaultConfig.{name} must be finite and >= 0")
+            out.append(a)
+        return tuple(out)
+
+    @property
+    def enabled(self) -> bool:
+        return any(
+            np.any(np.asarray(r, np.float64) > 0)
+            for r in (self.off_rate, self.on_rate, self.crash_rate, self.timeout_rate)
+        )
+
+    def cache_key(self) -> tuple:
+        """Hashable fingerprint (rates flattened) for jit/runner caches."""
+        def t(x):
+            return tuple(np.asarray(x, np.float64).ravel().tolist())
+
+        return (t(self.off_rate), t(self.on_rate), t(self.crash_rate),
+                t(self.timeout_rate))
 
 
 @dataclass
@@ -108,6 +180,11 @@ class SimConfig:
     record_delays: bool = False  # opt-in per-event delay recording (flat arrays;
                                  # off by default — the queue-length accumulators
                                  # and the (J, K, t) trace are always available)
+    fault: FaultConfig | None = None  # optional churn/crash/straggler injection;
+                                      # with faults, T counts *merged* CTMC
+                                      # events (flips included), not only CS
+                                      # steps — filter by `kind` to recover the
+                                      # task-movement subsequence
 
 
 @dataclass
@@ -182,6 +259,12 @@ class EventStream:
     queue_len_sum: np.ndarray | None = None     # (n,) event-sampled occupancy sum
     queue_len_tw: np.ndarray | None = None      # (n,) time-weighted occupancy
                                                 # integral (device streams)
+    kind: np.ndarray | None = None              # (T,) event kind (KIND_*); None
+                                                # on fault-free streams (all
+                                                # events are completions).  On
+                                                # KIND_FLIP rows slot == C (the
+                                                # trash row) and K == -1 (host)
+                                                # / unused (device).
 
     @property
     def T(self) -> int:
@@ -482,14 +565,31 @@ def export_stream(cfg: SimConfig, block: int = DEFAULT_BLOCK) -> EventStream:
         for tid, _, _ in q:
             init_nodes[tid] = node
     J, K, t = sim.run(cfg.T)
+    kinds = sim.kind_trace
     slot = np.empty(cfg.T, dtype=np.int32)
     slot_queues: list[deque] = [deque() for _ in range(sim.n)]
     for s, node in enumerate(init_nodes):
         slot_queues[node].append(s)
-    for k in range(cfg.T):
-        s = slot_queues[J[k]].popleft()   # FIFO: oldest in-flight task completes
-        slot[k] = s
-        slot_queues[K[k]].append(s)       # freed slot hosts the new dispatch
+    if kinds is None:
+        for k in range(cfg.T):
+            s = slot_queues[J[k]].popleft()  # FIFO: oldest in-flight completes
+            slot[k] = s
+            slot_queues[K[k]].append(s)      # freed slot hosts the new dispatch
+        delay_steps = sim.delay_steps
+    else:
+        # fault mode: delays recomputed per trace row (the sim records only
+        # completion delays, which no longer align 1:1 with the merged trace)
+        slot_disp = np.zeros(C, dtype=np.int64)  # dispatch step + 1, per slot
+        delay_steps = np.zeros(cfg.T, dtype=np.int32)
+        for k in range(cfg.T):
+            if kinds[k] == KIND_FLIP:
+                slot[k] = C               # trash row: flips touch no task
+                continue
+            s = slot_queues[J[k]].popleft()
+            slot[k] = s
+            delay_steps[k] = k - slot_disp[s]
+            slot_queues[K[k]].append(s)   # freed slot hosts the (re-)dispatch
+            slot_disp[s] = k + 1
     return EventStream(
         J=J,
         K=K,
@@ -499,8 +599,9 @@ def export_stream(cfg: SimConfig, block: int = DEFAULT_BLOCK) -> EventStream:
         n=sim.n,
         C=C,
         p=sim.p.copy(),
-        delay_steps=sim.delay_steps,
+        delay_steps=delay_steps,
         queue_len_sum=sim.queue_len_sum,
+        kind=kinds,
     )
 
 
@@ -527,11 +628,31 @@ class ClosedNetworkSim:
         self.step_idx = 0
         # FIFO queue per node: deque of (task_id, dispatch_step, dispatch_time)
         self.queues: list[deque] = [deque() for _ in range(self.n)]
-        # Event heap of (completion_time, seq, node).  Only the head-of-line
-        # task of each node is in service; lazy invalidation via seq check.
-        self.heap: list[tuple[float, int, int]] = []
+        # Event heap of (time, seq, node, kind).  Only the head-of-line task
+        # of each node is in service; lazy invalidation via seq check.  The
+        # kind column is constant KIND_COMPLETE without faults, so ordering
+        # (by time, seq) — and hence the fault-free stream — is unchanged.
+        self.heap: list[tuple[float, int, int, int]] = []
         self._seq = 0
         self._inservice_seq = [-1] * self.n
+        # fault injection (churn / crash / straggler timeout)
+        fc = cfg.fault
+        self._fault = fc is not None and fc.enabled
+        if self._fault:
+            if cfg.service != "exp":
+                raise ValueError("fault injection requires service='exp'")
+            qoff, qon, kap, theta = fc.resolve(self.n)
+            self._qoff, self._qon = qoff.tolist(), qon.tolist()
+            self._kap, self._theta = kap.tolist(), theta.tolist()
+            # separate RNG sub-stream: fault clocks never perturb the main
+            # service/dispatch draw sequence
+            self._frng = np.random.default_rng((cfg.seed, 0xFA17))
+            self._avail = [True] * self.n
+            self._timeout_seq = [-1] * self.n
+            self._avail_tw = [0.0] * self.n   # integral of 1{available}
+            self._avail_last_t = [0.0] * self.n
+            self.kind_counts = np.zeros(4, np.int64)
+        self.kind_trace: np.ndarray | None = None  # filled by run() (fault mode)
         # delay recording (opt-in): flat per-event arrays with doubling growth
         # — the completing node of record k is the k-th completion, so the
         # per-node view is derivable and never materialized here.
@@ -566,6 +687,11 @@ class ClosedNetworkSim:
         self._exp_ptr = 0
         self._task_counter = 0
         self._init_tasks()
+        if self._fault:
+            # all nodes start available; arm the first on->off flip clocks
+            for node in range(self.n):
+                if self._qoff[node] > 0:
+                    self._push_flip(node, self._qoff[node])
 
     # -------------------------------------------------------------- #
     def _refill_disp(self) -> None:
@@ -607,7 +733,69 @@ class ClosedNetworkSim:
     def _start_service(self, node: int) -> None:
         self._seq += 1
         self._inservice_seq[node] = self._seq
-        heapq.heappush(self.heap, (self.now + self._service_time(node), self._seq, node))
+        heapq.heappush(
+            self.heap,
+            (self.now + self._service_time(node), self._seq, node, KIND_COMPLETE),
+        )
+        if self._fault and self._kap[node] > 0:
+            # crash races the completion; same seq — both die together when
+            # the head task changes or the node flips off
+            heapq.heappush(
+                self.heap,
+                (
+                    self.now + self._frng.standard_exponential() / self._kap[node],
+                    self._seq,
+                    node,
+                    KIND_CRASH,
+                ),
+            )
+
+    def _push_flip(self, node: int, rate: float) -> None:
+        self._seq += 1
+        heapq.heappush(
+            self.heap,
+            (self.now + self._frng.standard_exponential() / rate, self._seq,
+             node, KIND_FLIP),
+        )
+
+    def _schedule_head(self, node: int) -> None:
+        """Arm the clocks of a new head-of-line task.
+
+        Service (completion + crash) only runs while the node is available;
+        the straggler timeout is a server-side deadline and fires regardless.
+        """
+        if not self._fault:
+            self._start_service(node)
+            return
+        if self._avail[node]:
+            self._start_service(node)
+        if self._theta[node] > 0:
+            self._seq += 1
+            self._timeout_seq[node] = self._seq
+            heapq.heappush(
+                self.heap,
+                (self.now + self._frng.standard_exponential() / self._theta[node],
+                 self._seq, node, KIND_TIMEOUT),
+            )
+
+    def _settle_avail(self, node: int) -> None:
+        if self._avail[node]:
+            self._avail_tw[node] += self.now - self._avail_last_t[node]
+        self._avail_last_t[node] = self.now
+
+    @property
+    def avail_tw(self) -> np.ndarray | None:
+        """(n,) time integral of availability, flushed to `now` (fault mode)."""
+        if not self._fault:
+            return None
+        out = np.array(self._avail_tw, np.float64)
+        pending = np.array(self._avail, np.float64) * (
+            self.now - np.array(self._avail_last_t)
+        )
+        return out + pending
+
+    def availability(self) -> np.ndarray | None:
+        return np.array(self._avail, bool) if self._fault else None
 
     def _enqueue(self, node: int, dispatch_step: int) -> int:
         tid = self._task_counter
@@ -615,7 +803,7 @@ class ClosedNetworkSim:
         self.queues[node].append((tid, dispatch_step, self.now))
         self._change(node, +1)
         if len(self.queues[node]) == 1:
-            self._start_service(node)
+            self._schedule_head(node)
         return tid
 
     def _init_tasks(self) -> None:
@@ -685,30 +873,65 @@ class ClosedNetworkSim:
         pending = q * (self.now - np.array(self._last_t))
         return np.array(self._tw, dtype=np.float64) + pending
 
-    def step(self) -> tuple[int, int]:
-        """Advance one CS step.  Returns (J_k, K_{k+1})."""
-        # pop next *valid* completion event
+    def step_event(self) -> tuple[int, int, int]:
+        """Advance one merged-CTMC event.  Returns ``(kind, node, k_new)``.
+
+        Without faults every event is a completion, so this is exactly one CS
+        step.  With faults ``kind`` is a ``KIND_*`` tag: task movements
+        (complete / crash / timeout) pop the head-of-line task at ``node`` and
+        re-dispatch it at ``k_new ~ p``; availability flips toggle ``node``
+        and return ``k_new = -1``.  ``step_idx`` counts merged events —
+        exactly the scan-step counter of the device fault stream, so delays
+        measured in steps agree between the two paths.
+        """
         heap = self.heap
         inservice = self._inservice_seq
+        fault = self._fault
         while True:
-            t_done, seq, node = heapq.heappop(heap)
-            if inservice[node] == seq:
+            t_ev, seq, node, kind = heapq.heappop(heap)
+            if kind == KIND_FLIP:
+                break  # exactly one outstanding flip per node — always valid
+            if kind == KIND_TIMEOUT:
+                if self._timeout_seq[node] == seq:
+                    break
+            elif inservice[node] == seq:
                 break
-        self.now = t_done
+        self.now = t_ev
+        if kind == KIND_FLIP:
+            self._settle_avail(node)
+            up = not self._avail[node]
+            self._avail[node] = up
+            if up:
+                if self._qlen[node] > 0:
+                    self._start_service(node)  # memoryless: fresh service draw
+                if self._qoff[node] > 0:
+                    self._push_flip(node, self._qoff[node])
+            else:
+                self._inservice_seq[node] = -2  # suspend completion + crash
+                if self._qon[node] > 0:
+                    self._push_flip(node, self._qon[node])
+            self.step_idx += 1
+            self.kind_counts[KIND_FLIP] += 1
+            return KIND_FLIP, node, -1
+        # task movement: complete / crash / timeout pops the head-of-line task
         q = self.queues[node]
         tid, disp_step, disp_time = q.popleft()
-        if self._record:
+        if kind == KIND_COMPLETE and self._record:
             # delay in CS steps: completions strictly between dispatch and this
             i = self._dlen
             if i >= self._dcap:
                 self._grow_delay_buffers()
             self._d_node[i] = node
             self._d_steps[i] = self.step_idx - disp_step
-            self._d_time[i] = t_done - disp_time
+            self._d_time[i] = t_ev - disp_time
             self._dlen = i + 1
         self._change(node, -1)
+        if fault:
+            self._inservice_seq[node] = -2  # kill the crash/completion sibling
+            self._timeout_seq[node] = -2
+            self.kind_counts[kind] += 1
         if q:
-            self._start_service(node)
+            self._schedule_head(node)
         # dispatcher samples the next client from the pre-drawn block
         i = self._disp_ptr
         if i >= len(self._disp_buf):
@@ -718,20 +941,39 @@ class ClosedNetworkSim:
         k_new = self._disp_buf[i]
         self._enqueue(k_new, dispatch_step=self.step_idx + 1)
         self.step_idx += 1
+        return kind, node, k_new
+
+    def step(self) -> tuple[int, int]:
+        """Advance one CS step.  Returns (J_k, K_{k+1}).
+
+        With faults enabled this advances one *merged* event (which may be a
+        flip, returning K = -1) — fault-aware callers should use `step_event`
+        to see the kind tag.
+        """
+        _, node, k_new = self.step_event()
         return node, k_new
 
     def run(self, T: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Advance T steps, returning the (J, K, t) trace arrays."""
-        step = self.step
+        """Advance T steps, returning the (J, K, t) trace arrays.
+
+        In fault mode the per-event kind tags of this run are kept in
+        ``self.kind_trace`` (int8, aligned with the returned arrays).
+        """
+        step_event = self.step_event
         Jl: list[int] = []
         Kl: list[int] = []
         tl: list[float] = []
+        kl: list[int] | None = [] if self._fault else None
         append_J, append_K, append_t = Jl.append, Kl.append, tl.append
         for _ in range(T):
-            j, k_new = step()
+            kind, j, k_new = step_event()
             append_J(j)
             append_K(k_new)
             append_t(self.now)
+            if kl is not None:
+                kl.append(kind)
+        if kl is not None:
+            self.kind_trace = np.array(kl, dtype=np.int8)
         return (
             np.array(Jl, dtype=np.int32),
             np.array(Kl, dtype=np.int32),

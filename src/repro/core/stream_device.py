@@ -44,7 +44,15 @@ from typing import Any, NamedTuple
 
 import numpy as np
 
-from .queue_sim import EventBlocks, EventStream
+from .queue_sim import (
+    KIND_COMPLETE,
+    KIND_CRASH,
+    KIND_FLIP,
+    KIND_TIMEOUT,
+    EventBlocks,
+    EventStream,
+    FaultConfig,
+)
 from .theory import BoundConstants
 
 __all__ = [
@@ -53,8 +61,11 @@ __all__ = [
     "Event",
     "stream_init",
     "stream_step",
+    "fault_stream_step",
+    "resolve_fault_rates",
     "stats_init",
     "stats_step",
+    "fault_stats_step",
     "stats_stream_fn",
     "generate_stream",
     "generate_blocks",
@@ -75,6 +86,7 @@ class StreamState(NamedTuple):
     head: Any   # (n,) int32 — pop counter per node (ring index = head % C)
     tail: Any   # (n,) int32 — push counter per node
     t: Any      # () float32 — physical time
+    avail: Any = None  # (n,) float32 0/1 availability (fault mode; else None)
 
 
 class Event(NamedTuple):
@@ -85,6 +97,7 @@ class Event(NamedTuple):
     t: Any      # physical completion time
     slot: Any   # ring-buffer slot of the completing task (freed & reused)
     dt: Any     # time since the previous CS step
+    kind: Any = KIND_COMPLETE  # KIND_* tag; constant 0 on fault-free streams
 
 
 class StatsState(NamedTuple):
@@ -92,13 +105,17 @@ class StatsState(NamedTuple):
 
     occ_sum: Any    # (n,) int32 — sum over steps of post-step X_{i,k} (Palm)
     occ_tw: Any     # (n,) float32 — time-weighted integral of X_i(t)
-    busy_t: Any     # (n,) float32 — integral of 1{X_i > 0} dt
+    busy_t: Any     # (n,) float32 — integral of 1{X_i > 0} dt (fault mode:
+                    # gated on availability, so mu MLEs stay unbiased)
     comp: Any       # (n,) int32 — completions per node
     delay_sum: Any  # (n,) float32 — sum of CS-step delays per node
     slot_step: Any  # (C,) int32 — dispatch step of the task in each slot
+    avail_tw: Any = None    # (n,) float32 — integral of availability (faults)
+    kind_count: Any = None  # (4,) int32 — events per KIND_* tag (faults)
 
 
-def stream_init(key, n: int, C: int, p, init: str = "distinct"):
+def stream_init(key, n: int, C: int, p, init: str = "distinct",
+                fault: bool = False):
     """Initial placement of the C tasks.  Returns (state, init_nodes).
 
     ``"distinct"`` places the tasks on C distinct clients (uniform random
@@ -134,6 +151,7 @@ def stream_init(key, n: int, C: int, p, init: str = "distinct"):
         head=jnp.zeros(n, jnp.int32),
         tail=occ,
         t=jnp.float32(0.0),
+        avail=jnp.ones(n, jnp.float32) if fault else None,
     )
     return state, nodes
 
@@ -150,7 +168,9 @@ def stream_step(state: StreamState, mu, xs) -> tuple[StreamState, Event]:
     import jax.numpy as jnp
 
     u_race, u_exp, k_new = xs
-    occ, ring, head, tail, t = state
+    occ, ring, head, tail, t = (
+        state.occ, state.ring, state.head, state.tail, state.t,
+    )
     n, C = ring.shape
     rates = jnp.where(occ > 0, mu, 0.0)
     cr = jnp.cumsum(rates)
@@ -173,7 +193,79 @@ def stream_step(state: StreamState, mu, xs) -> tuple[StreamState, Event]:
     )
 
 
-def stats_init(n: int, C: int) -> StatsState:
+def resolve_fault_rates(fault: FaultConfig, n: int):
+    """`FaultConfig` -> jnp ``(kappa, theta, q_off, q_on)`` float32 arrays,
+    the operand order `fault_stream_step` races over."""
+    import jax.numpy as jnp
+
+    q_off, q_on, kappa, theta = fault.resolve(n)
+    return (jnp.asarray(kappa, jnp.float32), jnp.asarray(theta, jnp.float32),
+            jnp.asarray(q_off, jnp.float32), jnp.asarray(q_on, jnp.float32))
+
+
+def fault_stream_step(state: StreamState, mu, fr, xs):
+    """One merged-CTMC event of the faulty closed network.
+
+    Identical machinery to `stream_step`, but the inverse-CDF race runs over
+    ``4n`` competing exponential clocks instead of ``n``:
+
+      ``[ mu_i a_i 1{X_i>0} | kappa_i a_i 1{X_i>0} | theta_i 1{X_i>0} |
+         q_off_i a_i + q_on_i (1 - a_i) ]``
+
+    — completions, crashes, straggler timeouts (deadlines are server-side,
+    so they fire even while the node is off) and availability flips, with
+    ``a`` the 0/1 availability vector.  Everything stays memoryless, so one
+    pre-drawn uniform pair per step still suffices.  The winning index
+    decodes as ``kind = idx // n``, ``node = idx % n``.
+
+    Task movements (kind < 3) pop the head-of-line slot at ``node`` and
+    re-dispatch it at the pre-sampled ``k_new``; flips toggle availability,
+    emit ``slot = C`` (the trash row — every consumer scatter drops it) and
+    leave the queues untouched.  ``fr = resolve_fault_rates(...)``.
+    """
+    import jax.numpy as jnp
+
+    kappa, theta, q_off, q_on = fr
+    u_race, u_exp, k_new = xs
+    occ, ring, head, tail, t, avail = (
+        state.occ, state.ring, state.head, state.tail, state.t, state.avail,
+    )
+    n, C = ring.shape
+    busy = occ > 0
+    r_comp = jnp.where(busy, mu * avail, 0.0)
+    r_crash = jnp.where(busy, kappa * avail, 0.0)
+    r_tmo = jnp.where(busy, theta, 0.0)
+    r_flip = jnp.where(avail > 0, q_off, q_on)
+    rates = jnp.concatenate([r_comp, r_crash, r_tmo, r_flip])
+    cr = jnp.cumsum(rates)
+    tot = jnp.maximum(cr[-1], 1e-30)  # all-off + no clocks: time still moves
+    dt = -jnp.log1p(-u_exp) / tot
+    t = t + dt
+    idx = jnp.minimum(
+        jnp.searchsorted(cr, u_race * tot, side="right"), 4 * n - 1
+    ).astype(jnp.int32)
+    kind = idx // n
+    j = idx % n
+    move = kind < KIND_FLIP
+    # pop the oldest in-flight task at j (no-op on flips: slot -> trash C,
+    # head/occ increments masked, push target row n is dropped out-of-bounds)
+    s = jnp.where(move, ring[j, head[j] % C], C).astype(jnp.int32)
+    mv = move.astype(jnp.int32)
+    head = head.at[j].add(mv)
+    occ = occ.at[j].add(-mv)
+    push_row = jnp.where(move, k_new, n)
+    ring = ring.at[push_row, tail[k_new] % C].set(s, mode="drop")
+    tail = tail.at[k_new].add(mv)
+    occ = occ.at[k_new].add(mv)
+    flip = (kind == KIND_FLIP).astype(jnp.float32)
+    avail = avail.at[j].add(flip * (1.0 - 2.0 * avail[j]))
+    return (
+        StreamState(occ=occ, ring=ring, head=head, tail=tail, t=t, avail=avail),
+        Event(j=j, k=k_new, t=t, slot=s, dt=dt, kind=kind),
+    )
+
+
+def stats_init(n: int, C: int, fault: bool = False) -> StatsState:
     import jax.numpy as jnp
 
     return StatsState(
@@ -183,6 +275,8 @@ def stats_init(n: int, C: int) -> StatsState:
         comp=jnp.zeros(n, jnp.int32),
         delay_sum=jnp.zeros(n, jnp.float32),
         slot_step=jnp.zeros(C, jnp.int32),
+        avail_tw=jnp.zeros(n, jnp.float32) if fault else None,
+        kind_count=jnp.zeros(4, jnp.int32) if fault else None,
     )
 
 
@@ -207,20 +301,55 @@ def stats_step(stats: StatsState, ev: Event, occ_pre, occ_post, k) -> StatsState
     )
 
 
-def _network_scan(n: int, C: int, T: int, init: str, emit_events: bool):
+def fault_stats_step(
+    stats: StatsState, ev: Event, occ_pre, avail_pre, occ_post, k
+) -> StatsState:
+    """Fault-aware `stats_step`.
+
+    Differences: completions / delays only count ``KIND_COMPLETE`` events,
+    ``busy_t`` integrates ``1{X_i > 0 and available}`` (the time a node was
+    actually serving — dividing completions by it keeps `estimate_mu`
+    unbiased under churn), and the availability integral plus per-kind event
+    counts accumulate.  Slot bookkeeping is shared: any task movement
+    refreshes ``slot_step`` (crash/timeout re-dispatches reset staleness);
+    flips carry ``slot == C`` so their scatters drop out of bounds.
+    """
+    import jax.numpy as jnp
+
+    comp = (ev.kind == KIND_COMPLETE).astype(jnp.int32)
+    delay = (k - stats.slot_step[ev.slot]).astype(jnp.float32)
+    return StatsState(
+        occ_sum=stats.occ_sum + occ_post,
+        occ_tw=stats.occ_tw + occ_pre.astype(jnp.float32) * ev.dt,
+        busy_t=stats.busy_t
+        + jnp.where((occ_pre > 0) & (avail_pre > 0), ev.dt, 0.0),
+        comp=stats.comp.at[ev.j].add(comp),
+        delay_sum=stats.delay_sum.at[ev.j].add(delay * comp),
+        slot_step=stats.slot_step.at[ev.slot].set(k + 1, mode="drop"),
+        avail_tw=stats.avail_tw + avail_pre * ev.dt,
+        kind_count=stats.kind_count.at[ev.kind].add(1),
+    )
+
+
+def _network_scan(n: int, C: int, T: int, init: str, emit_events: bool,
+                  fault: bool = False):
     """Shared scan harness: T fused CS steps of stream_step + stats_step.
 
     Returns ``gen(key, mu, p) -> (init_nodes, events | None, stats)`` where
     ``events = (J, K, t, slot, delay)`` arrays when ``emit_events`` (the
     exportable stream) and None otherwise (the cheaper stats-only pass the
-    adaptive control loop and the stream benchmarks consume).
+    adaptive control loop and the stream benchmarks consume).  With
+    ``fault``, the generator signature grows a trailing
+    ``fr = resolve_fault_rates(...)`` operand, the per-step machinery swaps
+    to `fault_stream_step` / `fault_stats_step`, and the emitted events gain
+    a trailing kind column.
     """
     import jax
     import jax.numpy as jnp
 
-    def gen(key, mu, p):
+    def gen(key, mu, p, fr=None):
         k_init, k_race, k_exp, k_disp = jax.random.split(key, 4)
-        state, init_nodes = stream_init(k_init, n, C, p, init=init)
+        state, init_nodes = stream_init(k_init, n, C, p, init=init, fault=fault)
         u_race = jax.random.uniform(k_race, (T,))
         u_exp = jax.random.uniform(k_exp, (T,))
         # all T dispatch draws in one vectorized inverse-CDF op
@@ -229,15 +358,27 @@ def _network_scan(n: int, C: int, T: int, init: str, emit_events: bool):
                              side="right"),
             n - 1,
         ).astype(jnp.int32)
-        stats = stats_init(n, C)
+        stats = stats_init(n, C, fault=fault)
 
         def body(carry, xs):
             state, stats, k = carry
             occ_pre = state.occ
-            state, ev = stream_step(state, mu, xs)
-            delay = k - stats.slot_step[ev.slot]  # before stats_step advances it
-            stats = stats_step(stats, ev, occ_pre, state.occ, k)
-            ys = (ev.j, ev.k, ev.t, ev.slot, delay) if emit_events else None
+            if fault:
+                avail_pre = state.avail
+                state, ev = fault_stream_step(state, mu, fr, xs)
+                delay = k - stats.slot_step[ev.slot]
+                stats = fault_stats_step(
+                    stats, ev, occ_pre, avail_pre, state.occ, k
+                )
+                ys = (
+                    (ev.j, ev.k, ev.t, ev.slot, delay, ev.kind)
+                    if emit_events else None
+                )
+            else:
+                state, ev = stream_step(state, mu, xs)
+                delay = k - stats.slot_step[ev.slot]  # before stats_step moves it
+                stats = stats_step(stats, ev, occ_pre, state.occ, k)
+                ys = (ev.j, ev.k, ev.t, ev.slot, delay) if emit_events else None
             return (state, stats, k + 1), ys
 
         carry = (state, stats, jnp.int32(0))
@@ -248,21 +389,24 @@ def _network_scan(n: int, C: int, T: int, init: str, emit_events: bool):
 
 
 @lru_cache(maxsize=32)
-def _stream_generator(n: int, C: int, T: int, init: str):
+def _stream_generator(n: int, C: int, T: int, init: str, fault: bool = False):
     import jax
 
-    return jax.jit(_network_scan(n, C, T, init, emit_events=True))
+    return jax.jit(_network_scan(n, C, T, init, emit_events=True, fault=fault))
 
 
 @lru_cache(maxsize=32)
-def stats_stream_fn(n: int, C: int, T: int, init: str = "distinct"):
-    """Stats-only fused network scan: ``gen(key, mu, p) -> StatsState``.
+def stats_stream_fn(n: int, C: int, T: int, init: str = "distinct",
+                    fault: bool = False):
+    """Stats-only fused network scan: ``gen(key, mu, p[, fr]) -> StatsState``.
 
     No per-event outputs — just the running occupancy / busy-time /
     completion / delay accumulators.  Returned un-jitted so callers compose
     it with vmap/pmap over scenarios before compiling.
     """
-    base = _network_scan(n, C, T, init, emit_events=False)
+    base = _network_scan(n, C, T, init, emit_events=False, fault=fault)
+    if fault:
+        return lambda key, mu, p, fr: base(key, mu, p, fr)[2]
     return lambda key, mu, p: base(key, mu, p)[2]
 
 
@@ -273,14 +417,17 @@ def generate_stream(
     T: int,
     seed: int | Any = 0,
     init: str = "distinct",
+    fault: FaultConfig | None = None,
 ) -> EventStream:
     """Simulate T CS steps on device and export a host `EventStream`.
 
     Drop-in replacement for `queue_sim.export_stream` (exponential service
     only): same arrays, same invariants, different — but law-identical —
     realization.  ``seed`` may be an int or a PRNG key.  The jitted
-    generator is cached per (n, C, T, init), so sweeps over (mu, p, seed)
-    reuse one compiled program.
+    generator is cached per (n, C, T, init, faults-on), so sweeps over
+    (mu, p, seed) and fault rates reuse one compiled program.  With
+    ``fault`` the stream carries a kind column and T counts merged events
+    (flips included) — same convention as `queue_sim.export_stream`.
     """
     import jax
     import jax.numpy as jnp
@@ -291,10 +438,19 @@ def generate_stream(
     if abs(p.sum() - 1.0) > 1e-8:
         raise ValueError("p must sum to 1")
     key = jax.random.PRNGKey(seed) if np.ndim(seed) == 0 else seed
-    gen = _stream_generator(n, int(C), int(T), init)
-    init_nodes, (J, K, t, slot, delays), stats = gen(
-        key, jnp.asarray(mu, jnp.float32), jnp.asarray(p, jnp.float32)
-    )
+    faulty = fault is not None and fault.enabled
+    gen = _stream_generator(n, int(C), int(T), init, faulty)
+    if faulty:
+        init_nodes, (J, K, t, slot, delays, kind), stats = gen(
+            key, jnp.asarray(mu, jnp.float32), jnp.asarray(p, jnp.float32),
+            resolve_fault_rates(fault, n),
+        )
+        kind_np = np.asarray(kind, np.int8)
+    else:
+        init_nodes, (J, K, t, slot, delays), stats = gen(
+            key, jnp.asarray(mu, jnp.float32), jnp.asarray(p, jnp.float32)
+        )
+        kind_np = None
     return EventStream(
         J=np.asarray(J, np.int32),
         K=np.asarray(K, np.int32),
@@ -307,6 +463,7 @@ def generate_stream(
         delay_steps=np.asarray(delays, np.int32),
         queue_len_sum=np.asarray(stats.occ_sum, np.float64),
         queue_len_tw=np.asarray(stats.occ_tw, np.float64),
+        kind=kind_np,
     )
 
 
@@ -320,6 +477,7 @@ def generate_blocks(
     init: str = "distinct",
     cut_every: int = 0,
     method: str = "greedy",
+    fault: FaultConfig | None = None,
 ) -> EventBlocks:
     """Device-generated event stream, segmented into conflict-free blocks.
 
@@ -332,7 +490,7 @@ def generate_blocks(
     ("greedy" | "dp" — see `queue_sim.segment_blocks`).
     """
     return EventBlocks.from_stream(
-        generate_stream(mu, p, C, T, seed=seed, init=init),
+        generate_stream(mu, p, C, T, seed=seed, init=init, fault=fault),
         block_size,
         cut_every,
         method,
@@ -457,19 +615,33 @@ def make_bound_value_and_grad(k: BoundConstants):
     )
 
 
-def estimate_mu(comp, busy_t, prior_weight: float = 1.0):
+def estimate_mu(comp, busy_t, prior_weight: float = 1.0,
+                floor_frac: float = 1e-3):
     """Per-node service-rate MLE from observed (completions, busy time).
 
     While a node is busy its completions are Poisson(mu_i), so
     mu_i ~ comp_i / busy_i.  Nodes with little observed busy time shrink
     toward the busy-time-weighted global mean rate (``prior_weight``
     pseudo-completions at the global rate).
+
+    Dead-node safety: a node that recorded zero completions *and* zero busy
+    time (unavailable the whole window — or, with ``prior_weight = 0``, any
+    idle node) used to produce ``0/0`` or a hard zero, which the MVA delay
+    recurrence turns into inf/NaN delays and the control loop into NaN
+    sampling weights.  The estimate is therefore floored at ``floor_frac``
+    of the global mean rate (itself floored away from zero), so a dark node
+    reports as "very slow but finite" and mirror descent pushes its p
+    toward the floor instead of diverging.
     """
     import jax.numpy as jnp
 
     comp = comp.astype(jnp.float32)
     mu_bar = jnp.sum(comp) / jnp.maximum(jnp.sum(busy_t), 1e-20)
-    return (comp + prior_weight) / (busy_t + prior_weight / mu_bar)
+    mu_bar = jnp.maximum(mu_bar, 1e-8)  # zero completions everywhere
+    est = (comp + prior_weight) / jnp.maximum(
+        busy_t + prior_weight / mu_bar, 1e-20
+    )
+    return jnp.maximum(est, floor_frac * mu_bar)
 
 
 def ctrl_refresh(
@@ -487,6 +659,13 @@ def ctrl_refresh(
     exponentiated-gradient steps on the Theorem-1 bound (the same projected
     mirror-descent update as `sampling.optimize_general`, with the analytic
     jnp gradient).  Pure function of device values — traceable, vmappable.
+
+    Control-plane safeguards (faults): `estimate_mu` floors dead-node rate
+    estimates, non-finite gradient components are scrubbed to 0 (a single
+    poisoned coordinate must not NaN the whole simplex), and each iterate is
+    re-floored/renormalized — so nodes that went dark keep a small positive
+    sampling weight (bounded importance scales) instead of p collapsing to
+    NaN or exact zeros.
     """
     import jax
     import jax.numpy as jnp
@@ -498,8 +677,10 @@ def ctrl_refresh(
 
     def one(p, _):
         _, g = vg(p, mu_hat)
+        g = jnp.where(jnp.isfinite(g), g, 0.0)
         g = g - jnp.dot(g, p)
         p = p * jnp.exp(-lr * g / (jnp.max(jnp.abs(g)) + 1e-12))
+        p = jnp.where(jnp.isfinite(p), p, floor)
         p = jnp.maximum(p, floor)
         return p / jnp.sum(p), None
 

@@ -218,6 +218,11 @@ def run_experiment(
     eval_every: int = 10,
     data: FederatedClassification | None = None,
     engine: str | None = None,
+    faults=None,
+    guard=None,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 0,
+    resume: bool = False,
 ) -> FLRun:
     """One training run of {gen_async, async_sgd, fedbuff, fedavg, favano}.
 
@@ -232,6 +237,14 @@ def run_experiment(
     ``flc.devices`` lane-shards each block's E gradient lanes across that
     many devices — see ``docs/architecture.md`` for the decision matrix.
     The synchronous baselines (fedavg, favano) always use the Python loop.
+
+    Robustness knobs (async methods): ``faults`` injects client churn /
+    crashes / straggler timeouts (`repro.core.FaultConfig`); ``guard``
+    rejects divergent or over-stale updates (`repro.core.GuardConfig`);
+    ``ckpt_dir`` + ``ckpt_every`` checkpoint the full engine state every
+    ``ckpt_every`` CS steps (scan engine), and ``resume=True`` restores the
+    latest checkpoint and continues — a killed run resumed this way produces
+    the bitwise-identical final model.
     """
     if flc.stream == "device":
         if engine == "python":
@@ -274,6 +287,11 @@ def run_experiment(
         block_size=flc.block_size if use_scan else 1,
         devices=flc.devices if use_scan else 1,
         segmentation=flc.segmentation,
+        faults=faults,
+        guard=guard,
+        ckpt_dir=ckpt_dir,
+        ckpt_every=ckpt_every,
+        resume=resume,
     )
 
     if method == "gen_async":

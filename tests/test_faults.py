@@ -1,0 +1,376 @@
+"""Fault injection (churn / crashes / straggler timeouts) + guarded updates.
+
+Covers: `FaultConfig` validation, structural invariants of fault-injected
+host streams, availability-chain stationarity (z-test against the CTMC
+stationary law), exact python-vs-scan fault parity, conservation (Little) of
+the closed network under timeouts, the control-plane dead-node regressions
+(`estimate_mu` / `ctrl_refresh`), the divergence/staleness guard on every
+engine path, and the adaptive controller's bound gap on the survivor
+network under injected faults.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    KIND_COMPLETE,
+    KIND_CRASH,
+    KIND_FLIP,
+    KIND_TIMEOUT,
+    BoundConstants,
+    ClosedNetworkSim,
+    FaultConfig,
+    GuardConfig,
+    ServerConfig,
+    SimConfig,
+    ctrl_refresh,
+    estimate_mu,
+    export_stream,
+    make_fused_runner,
+    run_generalized_async_sgd,
+    step_scales,
+)
+from repro.core.sampling import bound_for_p, optimize_general
+
+
+def _leaves(w):
+    return np.concatenate(
+        [np.asarray(x, np.float64).ravel() for x in jax.tree_util.tree_leaves(w)]
+    )
+
+
+FAULT = FaultConfig(off_rate=0.3, on_rate=1.0, crash_rate=0.1, timeout_rate=0.2)
+
+
+class _QuadSource:
+    """grad = w - target_j, usable from both engines."""
+
+    def __init__(self, n):
+        self.targ = np.arange(n, dtype=np.float32)
+
+    def grad(self, j, w, k):
+        return {"a": np.asarray(w["a"]) - self.targ[j]}
+
+    def device_grad(self, j, w, k):
+        return {"a": w["a"] - jnp.asarray(self.targ)[j]}
+
+
+# ------------------------------------------------------------------ #
+# FaultConfig
+# ------------------------------------------------------------------ #
+def test_fault_config_validation():
+    with pytest.raises(ValueError):
+        FaultConfig(crash_rate=-1.0).resolve(4)
+    with pytest.raises(ValueError):
+        FaultConfig(off_rate=np.nan).resolve(4)
+    assert not FaultConfig().enabled
+    assert FaultConfig(timeout_rate=0.5).enabled
+    # per-node arrays broadcast and hash
+    fc = FaultConfig(crash_rate=np.array([0.1, 0.2]))
+    off, on, crash, timeout = fc.resolve(2)
+    assert crash.tolist() == [0.1, 0.2]
+    assert isinstance(hash(fc.cache_key()), int)
+
+
+def test_fault_requires_exponential_service():
+    cfg = SimConfig(mu=np.ones(4), p=np.full(4, 0.25), C=2, T=10,
+                    service="det", fault=FAULT)
+    with pytest.raises(ValueError):
+        ClosedNetworkSim(cfg)
+
+
+# ------------------------------------------------------------------ #
+# host stream invariants under faults
+# ------------------------------------------------------------------ #
+def test_fault_stream_invariants():
+    n, C, T = 6, 3, 2000
+    mu = np.linspace(0.5, 2.0, n)
+    p = np.full(n, 1 / n)
+    stream = export_stream(
+        SimConfig(mu=mu, p=p, C=C, T=T, seed=3, fault=FAULT)
+    )
+    kinds = stream.kind
+    assert kinds is not None and kinds.shape == (T,)
+    flips = kinds == KIND_FLIP
+    # flips touch no task: trash slot, no dispatch
+    assert (stream.slot[flips] == C).all()
+    assert (stream.K[flips] == -1).all()
+    # task movements keep the FIFO/slot bookkeeping exact
+    moves = ~flips
+    assert (stream.slot[moves] < C).all()
+    assert (stream.K[moves] >= 0).all()
+    # all four kinds actually occur at these rates
+    counts = np.bincount(kinds, minlength=4)
+    assert (counts > 0).all()
+    # the replay scale masks every non-completion event
+    scale = step_scales(stream, 0.1, p, "importance")
+    assert (scale[kinds != KIND_COMPLETE] == 0).all()
+    assert (scale[kinds == KIND_COMPLETE] > 0).all()
+    # event times are non-decreasing across the merged trace
+    assert (np.diff(stream.t) >= 0).all()
+
+
+def test_availability_stationarity():
+    """Time-averaged availability matches the 2-state chain's stationary law.
+
+    For the on/off chain with rates (q_off, q_on), pi_on = q_on/(q_on+q_off)
+    and the time-average over [0, t] is asymptotically normal with variance
+    2*pi_on*pi_off / ((q_on+q_off) * t) (Markov-chain CLT); we assert every
+    node's z-score is within 4 sigma.
+    """
+    q_off, q_on = 0.4, 1.2
+    n, C, T = 5, 3, 40_000
+    cfg = SimConfig(mu=np.full(n, 1.0), p=np.full(n, 1 / n), C=C, T=T,
+                    seed=11, fault=FaultConfig(off_rate=q_off, on_rate=q_on))
+    sim = ClosedNetworkSim(cfg)
+    sim.run(T)
+    assert sim.avail_tw is not None
+    frac = sim.avail_tw / sim.now
+    pi_on = q_on / (q_on + q_off)
+    var = 2 * pi_on * (1 - pi_on) / ((q_on + q_off) * sim.now)
+    z = (frac - pi_on) / np.sqrt(var)
+    assert np.all(np.abs(z) < 4.0), (frac, pi_on, z)
+
+
+# ------------------------------------------------------------------ #
+# python-vs-scan fault parity (the oracle check)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("block_size", [1, 6])
+def test_python_scan_fault_parity(block_size):
+    n, C, T = 6, 3, 400
+    src = _QuadSource(n)
+    w0 = {"a": jnp.zeros(5, jnp.float32)}
+    guard = GuardConfig(max_grad_norm=50.0, stale_cutoff=60)
+    base = dict(n=n, C=C, T=T, eta=0.05, mu=np.linspace(0.5, 2.0, n),
+                seed=7, faults=FAULT, guard=guard)
+    w_py, tr_py = run_generalized_async_sgd(
+        w0, src, ServerConfig(**base, engine="python")
+    )
+    w_sc, tr_sc = run_generalized_async_sgd(
+        w0, src, ServerConfig(**base, engine="scan", block_size=block_size)
+    )
+    assert np.max(np.abs(_leaves(w_py) - _leaves(w_sc))) < 1e-5
+    # same merged event stream => identical kind counts and guard counters
+    np.testing.assert_array_equal(
+        tr_py.extras["kind_count"], tr_sc.extras["kind_count"]
+    )
+    assert tr_py.extras["stale_drops"] == tr_sc.extras["stale_drops"]
+    assert tr_py.extras["guard_rejects"] == tr_sc.extras["guard_rejects"]
+
+
+def test_fused_fault_blocked_matches_per_event():
+    """Device stream: the blocked window replays fault events exactly."""
+    n, C, T = 8, 4, 300
+    src = _QuadSource(n)
+    w0 = {"a": jnp.zeros(5, jnp.float32)}
+    outs = []
+    for E in (1, 8):
+        runner = make_fused_runner(
+            src.device_grad, n, C, T, block_size=E, fault=FAULT,
+            guard=GuardConfig(max_grad_norm=50.0, stale_cutoff=60),
+        )
+        w, _, extras = runner(
+            w0, jnp.linspace(0.5, 2.0, n), jnp.full(n, 1 / n),
+            jax.random.PRNGKey(2), 0.05,
+        )
+        outs.append((_leaves(w), np.asarray(extras["kind_count"])))
+    assert np.array_equal(outs[0][0], outs[1][0])
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+
+
+# ------------------------------------------------------------------ #
+# conservation (Little's law variant) under timeouts
+# ------------------------------------------------------------------ #
+def test_closed_network_conservation_under_timeouts():
+    """Crashes/timeouts re-dispatch instantly, so the closed network keeps
+    exactly C tasks in flight: the event-sampled total occupancy is C*T and
+    the time-averaged total occupancy is C (Little's law with the in-system
+    population forced by the closed loop)."""
+    n, C, T = 6, 4, 5000
+    cfg = SimConfig(mu=np.linspace(0.5, 2.0, n), p=np.full(n, 1 / n), C=C,
+                    T=T, seed=5, fault=FAULT)
+    sim = ClosedNetworkSim(cfg)
+    sim.run(T)
+    assert int(np.sum(sim.queue_len_sum)) == C * T
+    # device side: time-averaged occupancy from the fused engine's stats
+    src = _QuadSource(n)
+    runner = make_fused_runner(
+        src.device_grad, n, C, 2000, fault=FAULT
+    )
+    _, _, extras = runner(
+        {"a": jnp.zeros(3, jnp.float32)}, jnp.linspace(0.5, 2.0, n),
+        jnp.full(n, 1 / n), jax.random.PRNGKey(0), 0.01,
+    )
+    assert abs(float(np.sum(extras["occ_time_avg"])) - C) < 1e-3
+    # movement accounting: completions + crashes + timeouts + flips = T
+    assert int(np.sum(extras["kind_count"])) == 2000
+
+
+# ------------------------------------------------------------------ #
+# control-plane dead-node regressions
+# ------------------------------------------------------------------ #
+def test_estimate_mu_dead_node_regression():
+    comp = jnp.array([10, 0, 5], jnp.int32)
+    busy = jnp.array([5.0, 0.0, 2.5], jnp.float32)
+    est = estimate_mu(comp, busy)
+    assert np.isfinite(np.asarray(est)).all()
+    assert float(est[1]) > 0  # dark node floors, never 0 or NaN
+    # all-dead window (no completions anywhere) stays finite
+    est0 = estimate_mu(jnp.zeros(3, jnp.int32), jnp.zeros(3, jnp.float32))
+    assert np.isfinite(np.asarray(est0)).all() and (np.asarray(est0) > 0).all()
+
+
+def test_ctrl_refresh_dead_node_regression():
+    k = BoundConstants(C=4, T=1000)
+    p = jnp.full(6, 1 / 6)
+    comp = jnp.array([50, 40, 30, 20, 10, 0], jnp.int32)
+    busy = jnp.array([10.0, 10.0, 10.0, 10.0, 10.0, 0.0], jnp.float32)
+    p2 = np.asarray(ctrl_refresh(p, comp, busy, k))
+    assert np.isfinite(p2).all()
+    assert abs(p2.sum() - 1.0) < 1e-5
+    assert (p2 > 0).all()  # floored, never collapses to 0
+    # degenerate: a refresh from an all-zero window is a no-op-ish simplex
+    p3 = np.asarray(ctrl_refresh(p, jnp.zeros(6, jnp.int32),
+                                 jnp.zeros(6, jnp.float32), k))
+    assert np.isfinite(p3).all() and abs(p3.sum() - 1.0) < 1e-5
+
+
+# ------------------------------------------------------------------ #
+# divergence / staleness guard
+# ------------------------------------------------------------------ #
+class _SpikeSource:
+    """Emits a norm-exploding gradient whenever the server step hits the
+    spike cadence, and a NaN gradient at one specific step."""
+
+    def __init__(self, n, spike_every=50, nan_step=125):
+        self.targ = np.arange(n, dtype=np.float32)
+        self.spike_every = spike_every
+        self.nan_step = nan_step
+
+    def device_grad(self, j, w, k):
+        g = w["a"] - jnp.asarray(self.targ)[j]
+        spike = (k % self.spike_every) == (self.spike_every - 1)
+        g = jnp.where(spike, g + 1e6, g)
+        g = jnp.where(k == self.nan_step, jnp.full_like(g, jnp.nan), g)
+        return {"a": g}
+
+    def grad(self, j, w, k):
+        g = np.asarray(w["a"]) - self.targ[j]
+        if (k % self.spike_every) == (self.spike_every - 1):
+            g = g + 1e6
+        if k == self.nan_step:
+            g = np.full_like(g, np.nan)
+        return {"a": g}
+
+
+@pytest.mark.parametrize("engine,stream,block_size", [
+    ("python", "host", 1),
+    ("scan", "host", 1),
+    ("scan", "host", 6),
+    ("scan", "device", 1),
+    ("scan", "device", 8),
+])
+def test_guard_rejects_divergent_updates(engine, stream, block_size):
+    n, C, T = 6, 3, 300
+    src = _SpikeSource(n)
+    w0 = {"a": jnp.zeros(5, jnp.float32)}
+    cfg = ServerConfig(
+        n=n, C=C, T=T, eta=0.05, mu=np.linspace(0.5, 2.0, n), seed=7,
+        engine=engine, stream=stream, block_size=block_size,
+        guard=GuardConfig(max_grad_norm=100.0),
+    )
+    w, tr = run_generalized_async_sgd(w0, src, cfg)
+    assert np.isfinite(_leaves(w)).all()
+    assert tr.extras["guard_rejects"] > 0
+    # without the guard the same source destroys the iterate
+    cfg_open = ServerConfig(
+        n=n, C=C, T=T, eta=0.05, mu=np.linspace(0.5, 2.0, n), seed=7,
+        engine=engine, stream=stream, block_size=block_size,
+    )
+    w_open, _ = run_generalized_async_sgd(w0, src, cfg_open)
+    assert not np.isfinite(_leaves(w_open)).all() or (
+        np.abs(_leaves(w_open)).max() > 1e4
+    )
+
+
+def test_stale_cutoff_drops_old_updates():
+    """A tiny cutoff under heavy churn must drop some completions, and the
+    guarded run differs from the unguarded one (the drops are real)."""
+    n, C, T = 6, 3, 500
+    src = _QuadSource(n)
+    w0 = {"a": jnp.zeros(5, jnp.float32)}
+    base = dict(n=n, C=C, T=T, eta=0.05, mu=np.linspace(0.2, 1.0, n),
+                seed=3, faults=FAULT)
+    w_g, tr_g = run_generalized_async_sgd(
+        w0, src, ServerConfig(**base, engine="scan",
+                              guard=GuardConfig(stale_cutoff=10))
+    )
+    assert tr_g.extras["stale_drops"] > 0
+    w_u, _ = run_generalized_async_sgd(
+        w0, src, ServerConfig(**base, engine="scan")
+    )
+    assert np.abs(_leaves(w_g) - _leaves(w_u)).max() > 0
+    # python oracle agrees on the drop count (same merged stream)
+    w_p, tr_p = run_generalized_async_sgd(
+        w0, src, ServerConfig(**base, engine="python",
+                              guard=GuardConfig(stale_cutoff=10))
+    )
+    assert tr_p.extras["stale_drops"] == tr_g.extras["stale_drops"]
+    assert np.max(np.abs(_leaves(w_p) - _leaves(w_g))) < 1e-5
+
+
+def test_guard_fedbuff_composition_rejected():
+    from repro.core import run_fedbuff
+
+    n = 4
+    src = _QuadSource(n)
+    w0 = {"a": jnp.zeros(3, jnp.float32)}
+    cfg = ServerConfig(n=n, C=2, T=50, eta=0.05, engine="scan",
+                       faults=FAULT)
+    with pytest.raises(ValueError):
+        run_fedbuff(w0, src, cfg, Z=5)
+
+
+# ------------------------------------------------------------------ #
+# adaptive sampling on the survivor network
+# ------------------------------------------------------------------ #
+@pytest.mark.slow
+def test_adaptive_under_faults_tracks_survivor_bound():
+    """Under churn + crashes + timeouts, the adaptive controller's final p
+    must be within 10% of the static-optimal bound for the survivor rates
+    it can observe — the busy-time-gated MLE `estimate_mu` (availability
+    gating keeps it unbiased for the service-rate-while-up, which is what
+    the refresh objective is defined over)."""
+    n, C, T = 8, 4, 6000
+    mu = np.array([2.0] * 4 + [1.0] * 4)
+    # half the slow cluster churns hard: available ~1/6 of the time
+    off = np.array([0.0] * 6 + [5.0] * 2)
+    on = np.ones(8)
+    fault = FaultConfig(off_rate=off, on_rate=on, crash_rate=0.1,
+                        timeout_rate=0.1)
+    src = _QuadSource(n)
+    k = BoundConstants(C=C, T=T)
+    runner = make_fused_runner(
+        src.device_grad, n, C, T, adaptive=True, refresh_every=300,
+        bound=k, fault=fault,
+    )
+    _, _, extras = runner(
+        {"a": jnp.zeros(3, jnp.float32)}, jnp.asarray(mu, jnp.float32),
+        jnp.full(n, 1 / n), jax.random.PRNGKey(1), 0.01,
+    )
+    p_final = np.asarray(extras["p_final"], np.float64)
+    assert np.isfinite(p_final).all() and abs(p_final.sum() - 1) < 1e-4
+    p_final = p_final / p_final.sum()  # f32 -> f64 renormalization
+    mu_hat = np.asarray(
+        estimate_mu(jnp.asarray(extras["comp"]),
+                    jnp.asarray(extras["busy_time"])), np.float64
+    )
+    g_adapt, _, _ = bound_for_p(mu_hat, p_final, k)
+    g_opt = optimize_general(mu_hat, k).bound
+    assert g_adapt <= 1.10 * g_opt, (g_adapt, g_opt, p_final)
+    # the busy-gated MLE really does see through the churn: the hard-churn
+    # nodes' estimates recover their while-up service rate, not the tiny
+    # availability-discounted throughput
+    assert (mu_hat[6:] > 0.5).all(), mu_hat
