@@ -142,6 +142,11 @@ class FLConfig:
     stream: str = "host"           # scan event source: host (pre-simulated
                                    # replay) | device (fused on-device
                                    # generator — zero host pre-simulation)
+    sparse: bool | str = "auto"    # device stream: sparse O(C) stream state
+                                   # for large n (see ServerConfig.sparse) —
+                                   # "auto" switches on above SPARSE_AUTO_N
+                                   # when the speed profile collapses to few
+                                   # classes; True forces, False keeps dense
     adaptive: bool = False         # device stream: adaptive sampling control
                                    # loop (re-optimize p from observed queues)
     refresh_every: int = 250       # control-loop cadence in CS steps

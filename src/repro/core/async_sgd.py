@@ -106,6 +106,13 @@ class ServerConfig:
     stream: str = "host"        # scan engine event source: "host" (pre-simulated
                                 # EventStream replay, the parity oracle) |
                                 # "device" (fused on-device generator, exp only)
+    sparse: bool | str = "auto"  # device stream: sparse O(C) per-event state
+                                 # keyed by the in-flight slots (flat in n).
+                                 # "auto" switches on when n >= SPARSE_AUTO_N,
+                                 # the speed profile collapses to few classes
+                                 # and the run is per-event/unsharded/un-
+                                 # checkpointed; True forces it (errors if
+                                 # unsupported); False keeps the dense oracle
     adaptive: bool = False      # device stream: re-optimize p from running
                                 # occupancy estimates every refresh_every steps
     refresh_every: int = 0      # control-loop cadence (CS steps)
@@ -167,6 +174,80 @@ def _resolve(cfg: ServerConfig) -> tuple[np.ndarray, np.ndarray]:
     p = np.full(cfg.n, 1.0 / cfg.n) if cfg.p is None else np.asarray(cfg.p, float)
     mu = np.ones(cfg.n) if cfg.mu is None else np.asarray(cfg.mu, float)
     return p, mu
+
+
+# sparse="auto" switches the device stream to the O(C) class-collapsed
+# representation at and above this population size (below it the dense
+# (n, C) path is already fast and stays the oracle)
+SPARSE_AUTO_N = 50_000
+
+
+def _resolve_sparse(cfg: ServerConfig, mu, p, block_size, ckpt_on):
+    """Decide whether the device stream runs sparse; collapse to classes.
+
+    Returns ``(ClassSpec, mu_m, p_m)`` — class-level rates and per-node
+    sampling probabilities — or ``(None, None, None)`` to keep the dense
+    path.  ``sparse=True`` raises on any unsupported combination;
+    ``sparse="auto"`` silently falls back to dense (small n, too many
+    distinct speed classes, blocked/sharded/checkpointed runs, or fault
+    rates that vary within a class).
+    """
+    forced = cfg.sparse is True
+    blockers = []
+    if block_size != "auto" and int(block_size) > 1:
+        blockers.append("block_size > 1")
+    if cfg.devices > 1:
+        blockers.append("devices > 1")
+    if ckpt_on:
+        blockers.append("checkpointing")
+    if blockers:
+        if forced:
+            raise ValueError(
+                "sparse=True does not compose with " + ", ".join(blockers)
+            )
+        return None, None, None
+    if not forced and cfg.n < SPARSE_AUTO_N:
+        return None, None, None
+    from .stream_device import build_class_spec, resolve_fault_rates_classes
+
+    try:
+        spec, mu_m, p_m = build_class_spec(mu, p)
+        if cfg.faults is not None and cfg.faults.enabled:
+            resolve_fault_rates_classes(cfg.faults, spec)  # class-constant?
+    except ValueError:
+        if forced:
+            raise
+        return None, None, None
+    return spec, np.asarray(mu_m, np.float64), np.asarray(p_m, np.float64)
+
+
+def _expand_class_extras(extras: dict, classes) -> dict:
+    """Expand (m,) class-level runner extras back to per-client (n,) arrays.
+
+    Per-node quantities (`p_final`, `p_traj`) gather through ``inv_cls``;
+    class totals (`occ_mean`, `busy_time`, `comp`, ...) divide by the class
+    size first — within a class clients are exchangeable, so the per-client
+    expectation is the class total over the class count.  `mean_delays` is
+    computed at class level (class totals keep the ratio exact) and
+    gathered.
+    """
+    inv = np.asarray(classes.inv_cls)
+    cnt = np.asarray(classes.counts, np.float64)
+    out = {k: np.asarray(v) for k, v in extras.items()}
+    if "p_final" in out:
+        out["p_final"] = out["p_final"][inv]
+    if "p_traj" in out:
+        out["p_traj"] = out["p_traj"][..., inv]
+    if "comp" in out and "delay_sum" in out:
+        out["mean_delays"] = (
+            np.asarray(out["delay_sum"], np.float64)
+            / np.maximum(np.asarray(out["comp"], np.float64), 1.0)
+        )[inv]
+    for k in ("occ_mean", "occ_time_avg", "busy_time", "delay_sum", "comp",
+              "avail_time"):
+        if k in out:
+            out[k] = (np.asarray(out[k], np.float64) / cnt)[inv]
+    return out
 
 
 def _device_grad_fn(source) -> Callable:
@@ -305,6 +386,15 @@ def _run_scan(
                 "stream='device' supports exponential service only "
                 "(the on-device race relies on memorylessness)"
             )
+        classes = class_mu = class_p = None
+        if cfg.sparse is True or cfg.sparse == "auto":
+            classes, class_mu, class_p = _resolve_sparse(
+                cfg, mu, p, block_size, ckpt_on
+            )
+        elif cfg.sparse is not False:
+            raise ValueError(f"sparse={cfg.sparse!r} (expected bool or 'auto')")
+        if classes is not None:
+            block_size = 1  # sparse stream is per-event; skip the auto probe
         if block_size == "auto":
             block_size = _auto_block_size(
                 _probe_stream_slots(mu, p, cfg.C, cfg.T, cfg.seed),
@@ -368,12 +458,17 @@ def _run_scan(
             lane_devices=cfg.devices,
             fault=faults,
             guard=guard,
+            classes=classes,
         )
+        run_mu = mu if classes is None else class_mu
+        run_p = p if classes is None else class_p
         w, evals, extras = runner(
-            w0_dev, jnp.asarray(mu), jnp.asarray(p),
+            w0_dev, jnp.asarray(run_mu), jnp.asarray(run_p),
             jax.random.PRNGKey(cfg.seed), cfg.eta,
         )
         w = jax.block_until_ready(w)
+        if classes is not None:
+            extras = _expand_class_extras(extras, classes)
         times = (
             np.asarray(extras["t"], np.float64)
             if "t" in extras
@@ -389,10 +484,15 @@ def _run_scan(
         if "occ_mean" in extras:
             trace.mean_queue_lengths = np.asarray(extras["occ_mean"], np.float64)
             comp = np.asarray(extras["comp"], np.float64)
+            mean_delays = (
+                np.asarray(extras["mean_delays"], np.float64)
+                if "mean_delays" in extras  # sparse: exact class-level ratio
+                else np.asarray(extras["delay_sum"], np.float64)
+                / np.maximum(comp, 1.0)
+            )
             trace.extras.update(
                 p_traj=np.asarray(extras["p_traj"], np.float64),
-                mean_delays=np.asarray(extras["delay_sum"], np.float64)
-                / np.maximum(comp, 1.0),
+                mean_delays=mean_delays,
                 comp=comp,
                 busy_time=np.asarray(extras["busy_time"], np.float64),
             )

@@ -951,33 +951,68 @@ def _make_host_block_runner(
 def _make_fused_advance(
     grad_fn, n, C, E, update_step, pack, unpack, enc, fedbuff_Z, guard, *,
     importance, faulty, guard_stale, need_stats, axis, lane_devices, unroll,
+    classes=None,
 ):
     """The chunk-advance core of the fused engine, shared with `engine_ckpt`.
 
     ``build(mu, eta, fr)`` closes over the traced scalars and returns
-    ``advance(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0) ->
-    (ucarry, sstate, stats, slot_scale, ts)`` — fused CS steps over one
+    ``advance(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0[, ub])
+    -> (ucarry, sstate, stats, slot_scale, ts)`` — fused CS steps over one
     chunk of pre-drawn uniforms: E-event windows plus a per-event remainder.
     Factoring it out of `make_fused_runner` keeps exactly one copy of the
     event semantics for the monolithic runner and the checkpointed
     chunk-at-a-time driver (`core.engine_ckpt`).
+
+    ``classes`` (a `stream_device.ClassSpec`) switches the event source to
+    the sparse O(C) stream: ``mu``/``p`` become (m,) class-level values,
+    stats accumulate per class, and per-event cost is flat in n.  The
+    algorithm side is untouched — events still carry global client ids and
+    slot indices, so the snapshot ring, guards and update math are shared.
+    Sparse is per-event only (E == 1); ``ub`` is the extra per-event
+    uniform resolving idle-pool availability bits under faults.
     """
     import jax
     import jax.numpy as jnp
 
     from . import stream_device as sd
 
+    sparse = classes is not None
+    if sparse and E > 1:
+        raise ValueError("the sparse stream supports block_size=1 only")
+    spec = classes.device() if sparse else None
+    m_cls = classes.m if sparse else 0
+
     def build(mu, eta, fr):
         def event_body(c, x):
             """One fused CS step (stream advance + algorithm update)."""
             ucarry, sstate, stats, slot_scale, p = c
-            urk, uek, kn, k = x
-            occ_pre = sstate.occ
-            if faulty:
-                avail_pre = sstate.avail
-                sstate, ev = sd.fault_stream_step(sstate, mu, fr, (urk, uek, kn))
+            if sparse:
+                if faulty:
+                    urk, uek, kn, ubk, k = x
+                else:
+                    urk, uek, kn, k = x
+                if need_stats:
+                    occ_pre, busy_pre, avail_pre = sd.sparse_class_stats(
+                        sstate, m_cls, fault=faulty
+                    )
+                if faulty:
+                    sstate, ev = sd.sparse_fault_stream_step(
+                        sstate, mu, spec, fr, (urk, uek, kn, ubk)
+                    )
+                else:
+                    sstate, ev = sd.sparse_stream_step(
+                        sstate, mu, spec, (urk, uek, kn)
+                    )
             else:
-                sstate, ev = sd.stream_step(sstate, mu, (urk, uek, kn))
+                urk, uek, kn, k = x
+                occ_pre = sstate.occ
+                if faulty:
+                    avail_pre = sstate.avail
+                    sstate, ev = sd.fault_stream_step(
+                        sstate, mu, fr, (urk, uek, kn)
+                    )
+                else:
+                    sstate, ev = sd.stream_step(sstate, mu, (urk, uek, kn))
             # flips carry slot C: the (C,) gather clamps but the scale is
             # masked to 0, and every scatter below drops out of bounds
             scale = slot_scale[ev.slot] if importance else eta
@@ -986,14 +1021,27 @@ def _make_fused_advance(
             stale = (k - stats.slot_step[ev.slot]) if guard_stale else None
             ucarry = update_step(ucarry, ev.j, ev.slot, scale, k, stale)
             if need_stats:
-                if faulty:
+                if sparse:
+                    cls_j = spec.inv_cls[ev.j]
+                    occ_post = sd.class_occupancy(sstate.cls, m_cls)
+                    if faulty:
+                        stats = sd.sparse_fault_stats_step(
+                            stats, ev, cls_j, occ_pre, busy_pre, avail_pre,
+                            occ_post, k,
+                        )
+                    else:
+                        stats = sd.sparse_stats_step(
+                            stats, ev, cls_j, occ_pre, busy_pre, occ_post, k
+                        )
+                elif faulty:
                     stats = sd.fault_stats_step(
                         stats, ev, occ_pre, avail_pre, sstate.occ, k
                     )
                 else:
                     stats = sd.stats_step(stats, ev, occ_pre, sstate.occ, k)
             if importance:
-                slot_scale = slot_scale.at[ev.slot].set(eta / (n * p[ev.k]))
+                pk = p[spec.inv_cls[ev.k]] if sparse else p[ev.k]
+                slot_scale = slot_scale.at[ev.slot].set(eta / (n * pk))
             return (ucarry, sstate, stats, slot_scale, p), ev.t
 
         def window_body(c, x):
@@ -1088,7 +1136,8 @@ def _make_fused_advance(
             ucarry, _ = jax.lax.scan(fbody, ucarry, xs_f)
             return (ucarry, sstate, stats, slot_scale, p), tv
 
-        def advance(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0):
+        def advance(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0,
+                    ub=None):
             """Fused CS steps over one chunk: E-event windows + remainder."""
             c = (ucarry, sstate, stats, slot_scale, p)
             Lc = Kc.shape[0]
@@ -1104,10 +1153,11 @@ def _make_fused_advance(
                 )
                 ts_parts.append(tsw.reshape(Wc))
             if Wc < Lc:
-                c, tse = jax.lax.scan(
-                    event_body, c, (ur[Wc:], ue[Wc:], Kc[Wc:], ks[Wc:]),
-                    unroll=unroll,
-                )
+                if sparse and faulty:
+                    xse = (ur[Wc:], ue[Wc:], Kc[Wc:], ub[Wc:], ks[Wc:])
+                else:
+                    xse = (ur[Wc:], ue[Wc:], Kc[Wc:], ks[Wc:])
+                c, tse = jax.lax.scan(event_body, c, xse, unroll=unroll)
                 ts_parts.append(tse)
             ucarry, sstate, stats, slot_scale, p = c
             ts = ts_parts[0] if len(ts_parts) == 1 else jnp.concatenate(ts_parts)
@@ -1143,6 +1193,7 @@ def make_fused_runner(
     lane_axis: str | None = None,
     fault: FaultConfig | None = None,
     guard: GuardConfig | None = None,
+    classes=None,
 ):
     """Build the fused engine: `stream_device.stream_step` ∘ `update_step`.
 
@@ -1192,6 +1243,18 @@ def make_fused_runner(
     faults, the per-kind event counts and availability integrals).  Both
     compose with blocks, lanes and the scenario mesh; neither composes with
     FedBuff (the buffer flush has no per-event masking semantics).
+
+    ``classes`` (a `stream_device.ClassSpec`, from `build_class_spec`)
+    switches the event source to the sparse O(C) per-event stream for
+    large n: the closed network is represented by its C in-flight slots
+    and per-event cost is flat in n.  ``run`` then takes **class-level**
+    ``mu``/``p0`` of shape (m,) — per-*node* rates/probabilities, one per
+    speed class — and the occupancy/busy/delay/completion extras come back
+    with shape (m,) (per class) instead of (n,).  The adaptive control
+    loop runs on the class simplex (`ctrl_refresh(..., counts=...)`).
+    Requires ``block_size=1`` and ``lane_devices=1``; dispatch draws use
+    the O(log m) class tree + within-class uniform member draw, exact in
+    law versus the dense path by exchangeability within a class.
     """
     import jax
     import jax.numpy as jnp
@@ -1229,6 +1292,17 @@ def make_fused_runner(
     )
     faulty = fault is not None and fault.enabled
     guard_stale = guard is not None and int(guard.stale_cutoff) > 0
+    sparse = classes is not None
+    if sparse:
+        if E > 1:
+            raise ValueError("classes= (sparse stream) requires block_size=1")
+        if lane_devices > 1:
+            raise ValueError("classes= (sparse stream) requires lane_devices=1")
+        if classes.n != n:
+            raise ValueError(
+                f"ClassSpec covers n={classes.n} clients, runner built "
+                f"for n={n}"
+            )
     if faulty and fedbuff_Z:
         raise ValueError(
             "fault injection composes with Algorithm 1, not FedBuff "
@@ -1273,18 +1347,35 @@ def make_fused_runner(
         mu = jnp.asarray(mu, jnp.float32)
         p0 = jnp.asarray(p0, jnp.float32)
         eta = jnp.asarray(eta, jnp.float32)
-        fr = sd.resolve_fault_rates(fault, n) if faulty else None
-        k_init, k_race, k_exp, k_disp = jax.random.split(key, 4)
+        spec = classes.device() if sparse else None
+        if sparse:
+            fr = sd.resolve_fault_rates_classes(fault, classes) if faulty \
+                else None
+            k_init, k_race, k_exp, k_disp, k_mem, k_bit = jax.random.split(
+                key, 6
+            )
+            u_mem = jax.random.uniform(k_mem, (T,))
+            u_bit = jax.random.uniform(k_bit, (T,)) if faulty else None
+            sstate, init_nodes = sd.sparse_stream_init(
+                k_init, spec, C, p0, init=init, fault=faulty
+            )
+            stats = sd.sparse_stats_init(classes.m, C, fault=faulty)
+        else:
+            fr = sd.resolve_fault_rates(fault, n) if faulty else None
+            k_init, k_race, k_exp, k_disp = jax.random.split(key, 4)
+            u_mem = u_bit = None
+            sstate, init_nodes = sd.stream_init(
+                k_init, n, C, p0, init=init, fault=faulty
+            )
+            stats = sd.stats_init(n, C, fault=faulty)
         u_race = jax.random.uniform(k_race, (T,))
         u_exp = jax.random.uniform(k_exp, (T,))
         u_disp = jax.random.uniform(k_disp, (T,))
-        sstate, init_nodes = sd.stream_init(
-            k_init, n, C, p0, init=init, fault=faulty
-        )
-        stats = sd.stats_init(n, C, fault=faulty)
         # dispatch-time importance scale per in-flight slot (Alg. 1 line 10)
         if importance:
-            slot_scale0 = eta / (n * p0[init_nodes])
+            p_nodes0 = p0[spec.inv_cls[init_nodes]] if sparse \
+                else p0[init_nodes]
+            slot_scale0 = eta / (n * p_nodes0)
         else:
             slot_scale0 = jnp.broadcast_to(eta, (C,))
 
@@ -1292,26 +1383,44 @@ def make_fused_runner(
             grad_fn, n, C, E, update_step, pack, unpack, enc, fedbuff_Z, guard,
             importance=importance, faulty=faulty, guard_stale=guard_stale,
             need_stats=need_stats, axis=axis, lane_devices=lane_devices,
-            unroll=unroll,
+            unroll=unroll, classes=classes,
         )(mu, eta, fr)
 
-        def sample_dispatch(cdf, u):
-            return jnp.minimum(
-                jnp.searchsorted(cdf, u, side="right"), n - 1
-            ).astype(jnp.int32)
+        if sparse:
+            # O(log m) class draw + uniform member — flat in n
+            def sample_dispatch(p, u, um):
+                return sd.sample_dispatch_classes(p, spec, u, um)
+        else:
+            # segment-tree inverse-CDF: O(log n) ulp error and never lands
+            # on a zero-probability client (the clamped fp32
+            # cumsum+searchsorted over-selected index n-1 at large n)
+            def sample_dispatch(p, u, um=None):
+                ptree = sd.tree_build(p)
+                return jax.vmap(
+                    lambda uu: sd.tree_sample(ptree, uu)
+                )(u).astype(jnp.int32)
 
         def chunk_step(carry, xs):
-            ucarry, sstate, stats, slot_scale, p, cdf = carry
-            ur, ue, ud, k0 = xs
-            Kc = sample_dispatch(cdf, ud)
+            ucarry, sstate, stats, slot_scale, p = carry
+            if sparse and faulty:
+                ur, ue, ud, um, ub, k0 = xs
+            elif sparse:
+                ur, ue, ud, um, k0 = xs
+                ub = None
+            else:
+                ur, ue, ud, k0 = xs
+                um = ub = None
+            Kc = sample_dispatch(p, ud, um)
             ucarry, sstate, stats, slot_scale, ts = advance(
-                ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0
+                ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0, ub
             )
             if adaptive:
                 p = sd.ctrl_refresh(
-                    p, stats.comp, stats.busy_t, bound, lr=ctrl_lr, iters=ctrl_iters
+                    p, stats.comp, stats.busy_t, bound, lr=ctrl_lr,
+                    iters=ctrl_iters,
+                    counts=tuple(int(c) for c in classes.counts) if sparse
+                    else None,
                 )
-                cdf = jnp.cumsum(p)
             if not eval_on:
                 ev_val = jnp.float32(0.0)
             elif eval_stride == 1:
@@ -1328,27 +1437,31 @@ def make_fused_runner(
                     ucarry[0],
                 )
             ys = (ts, ev_val, p) if collect_extras else (ev_val,)
-            return (ucarry, sstate, stats, slot_scale, p, cdf), ys
+            return (ucarry, sstate, stats, slot_scale, p), ys
 
-        carry = (ucarry, sstate, stats, slot_scale0, p0, jnp.cumsum(p0))
-        xs = (
-            u_race[:Tc].reshape(n_chunks, L),
-            u_exp[:Tc].reshape(n_chunks, L),
-            u_disp[:Tc].reshape(n_chunks, L),
-            jnp.arange(n_chunks, dtype=jnp.int32) * L,
-        )
+        carry = (ucarry, sstate, stats, slot_scale0, p0)
+        resh = lambda a: a[:Tc].reshape(n_chunks, L)
+        xs = (resh(u_race), resh(u_exp), resh(u_disp))
+        if sparse:
+            xs = xs + (resh(u_mem),)
+            if faulty:
+                xs = xs + (resh(u_bit),)
+        xs = xs + (jnp.arange(n_chunks, dtype=jnp.int32) * L,)
         carry, ys = jax.lax.scan(chunk_step, carry, xs)
         if collect_extras:
             ts, evals, p_traj = ys
             ts = ts.reshape(Tc)
         else:
             (evals,) = ys
-        ucarry, sstate, stats, slot_scale, p, cdf = carry
+        ucarry, sstate, stats, slot_scale, p = carry
         if Tc < T:  # tail events past the last chunk boundary
-            Kc = sample_dispatch(cdf, u_disp[Tc:])
+            Kc = sample_dispatch(
+                p, u_disp[Tc:], u_mem[Tc:] if sparse else None
+            )
             ucarry, sstate, stats, slot_scale, ts_tail = advance(
                 ucarry, sstate, stats, slot_scale, p,
                 u_race[Tc:], u_exp[Tc:], Kc, Tc,
+                u_bit[Tc:] if sparse and faulty else None,
             )
             if collect_extras:
                 ts = jnp.concatenate([ts, ts_tail])
@@ -1378,6 +1491,9 @@ def make_fused_runner(
         if faulty:
             extras["kind_count"] = stats.kind_count
             extras["avail_time"] = stats.avail_tw
+        if sparse:
+            # class-level extras: consumers expand per class via the counts
+            extras["class_counts"] = jnp.asarray(classes.counts, jnp.int32)
         return to_tree(ucarry[0]), evals, extras
 
     if not wrap_lanes:
@@ -1631,6 +1747,8 @@ def jit_fused_runner(
         if k == "bound":
             return (k, None if v is None else (v.A, v.L, v.B, v.C, v.T, v.rho))
         if k in ("fault", "guard"):
+            return (k, None if v is None else v.cache_key())
+        if k == "classes":
             return (k, None if v is None else v.cache_key())
         return (k, v)
 

@@ -39,6 +39,9 @@ __all__ = [
     "buzen_add_node",
     "buzen_remove_node",
     "buzen_replace_node",
+    "buzen_log_normalizing_constants",
+    "buzen_log_add_node",
+    "buzen_log_remove_node",
     "batched_expected_delays",
     "two_cluster_delay_bounds",
     "three_cluster_delay_bounds",
@@ -164,6 +167,129 @@ def buzen_replace_node(
     """O(C) update of G after perturbing a single node's theta — the
     incremental alternative to a full O(n*C) reconvolution."""
     return buzen_add_node(buzen_remove_node(G, th_old), th_new)
+
+
+# ---------------------------------------------------------------------- #
+# log-space Buzen: large n / C / skewed theta without float64 over- or
+# underflow.  Even after the theta/theta.max rescaling, G(c) ~ binom(n, c)
+# exceeds float64 range once n*C is large (n = 10^4, C = 10^3 already
+# overflows), and strongly skewed thetas underflow the tail entries — the
+# linear-space path then returns inf/0 and every downstream ratio is
+# garbage.  These variants carry log G(c) throughout.
+# ---------------------------------------------------------------------- #
+def _log_nb_series(lth: float, count: float, C: int) -> np.ndarray:
+    """log coefficients of (1 - e^lth x)^(-count), orders 0..C.
+
+    The generating function of a speed class with ``count`` identical
+    nodes: its order-k coefficient is the negative-binomial weight
+    binom(count+k-1, k) th^k, built stably via the log-ratio recurrence
+    ``lnb_k = lnb_{k-1} + lth + log((count+k-1)/k)``.
+    """
+    if C == 0:
+        return np.zeros(1)
+    k = np.arange(1.0, C + 1.0)
+    return np.concatenate([[0.0], np.cumsum(lth + np.log((count + k - 1.0) / k))])
+
+
+def _log_conv(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Truncated log-space polynomial product: out[c] = logsumexp_j a[j]+b[c-j]."""
+    from scipy.special import logsumexp
+
+    L = a.shape[0]
+    M = np.full((L, L), -np.inf)
+    for c in range(L):
+        M[c, : c + 1] = a[: c + 1] + b[c::-1]
+    return logsumexp(M, axis=1)
+
+
+def buzen_log_normalizing_constants(
+    theta: np.ndarray, C: int, counts: np.ndarray | None = None
+) -> np.ndarray:
+    """log G(c), c = 0..C, overflow/underflow-free.
+
+    Without ``counts``: one exact log-space convolution per node.  Adding
+    a node is ``G'[c] = sum_j G[j] th^(c-j)``, i.e. with the tilted vector
+    ``h[j] = log G[j] - j log th`` simply ``log G'[c] = c log th +
+    logcumsumexp(h)[c]`` — a vectorized `np.logaddexp.accumulate`, O(C)
+    per node with no renormalization step and no within-vector underflow
+    (a plain running-renormalization sweep keeps the *scale* in range but
+    still zeroes entries >~300 decades below the vector max, destroying
+    the low-c constants that tail probabilities need).
+
+    With ``counts`` (m,): ``theta`` holds one entry per *speed class* and
+    ``counts`` its multiplicities — the class-collapsed control plane.
+    Each class contributes a negative-binomial series (`_log_nb_series`)
+    and the m series are convolved fully in log space: O(m*C^2)
+    independent of n, which is what makes n = 10^6 exact analysis cheap.
+
+    Same rescaling contract as `buzen_normalizing_constants`: pass
+    ``theta / theta.max()``; all ratios of G entries are invariant.
+    """
+    theta = np.asarray(theta, dtype=np.float64)
+    if theta.ndim != 1 or theta.size == 0:
+        raise ValueError("theta must be a non-empty 1-D array")
+    if np.any(theta <= 0):
+        raise ValueError("theta must be strictly positive")
+    if C < 0:
+        raise ValueError("C must be >= 0")
+    if counts is not None:
+        counts = np.asarray(counts, dtype=np.float64)
+        if counts.shape != theta.shape or np.any(counts < 1):
+            raise ValueError("counts must match theta with entries >= 1")
+        lg = _log_nb_series(float(np.log(theta[0])), float(counts[0]), C)
+        for lth, cnt in zip(np.log(theta[1:]), counts[1:]):
+            lg = _log_conv(lg, _log_nb_series(float(lth), float(cnt), C))
+        return lg
+    tilt = np.arange(C + 1, dtype=np.float64)
+    lg = np.full(C + 1, -np.inf)
+    lg[0] = 0.0
+    for lth in np.log(theta):
+        ct = tilt * lth
+        lg = ct + np.logaddexp.accumulate(lg - ct)
+    return lg
+
+
+def buzen_log_add_node(lG: np.ndarray, lth: float) -> np.ndarray:
+    """O(C) log-space reconvolution: add one node with log-theta ``lth``.
+
+    ``lG'[c] = logaddexp(lG[c], lth + lG'[c-1])`` — the IIR recurrence of
+    `buzen_add_node` carried in logs.
+    """
+    lG = np.asarray(lG, dtype=np.float64)
+    out = np.empty_like(lG)
+    out[0] = lG[0]
+    for c in range(1, lG.shape[0]):
+        out[c] = np.logaddexp(lG[c], lth + out[c - 1])
+    return out
+
+
+def buzen_log_remove_node(lG: np.ndarray, lth: float) -> np.ndarray:
+    """O(C) log-space unconvolution, inverse of `buzen_log_add_node`.
+
+    Inverts ``lG[c] = logaddexp(lG'[c], lth + lG[c-1])`` — like the
+    linear-space first difference, the subtracted term uses the *full*
+    network's constants, so this is vectorized:
+    ``lG'[c] = lG[c] + log1p(-exp(lth + lG[c-1] - lG[c]))``.  Like
+    `buzen_remove_node` it cancels catastrophically when the removed node
+    dominates; that regime surfaces as the log1p argument reaching -1 and
+    raises instead of returning NaN/-inf.
+    """
+    lG = np.asarray(lG, dtype=np.float64)
+    d = lth + lG[:-1] - lG[1:]
+    if np.any(d >= 0.0):
+        raise FloatingPointError(
+            "buzen_log_remove_node lost all precision (removed node "
+            "dominates); recompute with buzen_log_normalizing_constants"
+        )
+    out = np.empty_like(lG)
+    out[0] = lG[0]
+    out[1:] = lG[1:] + np.log1p(-np.exp(d))
+    if not np.all(np.isfinite(out)):
+        raise FloatingPointError(
+            "buzen_log_remove_node lost all precision (removed node "
+            "dominates); recompute with buzen_log_normalizing_constants"
+        )
+    return out
 
 
 def gamma_ratio(F: int, c: float) -> float:

@@ -35,7 +35,7 @@ Delay recording semantics
 -------------------------
 Delay recording is opt-in (``SimConfig.record_delays=True``) and **flat**:
 
-  * `ClosedNetworkSim.delay_steps` is a ``(k,)`` int32 array in *completion
+  * `ClosedNetworkSim.delay_steps` is a ``(k,)`` int64 array in *completion
     order* — entry ``i`` is the CS-step delay of the i-th completion, i.e.
     the number of CS steps strictly between that task's dispatch and its
     completion (``M_{i,k}`` of §2).  The completing node of record ``i`` is
@@ -580,7 +580,7 @@ def export_stream(cfg: SimConfig, block: int = DEFAULT_BLOCK) -> EventStream:
         # fault mode: delays recomputed per trace row (the sim records only
         # completion delays, which no longer align 1:1 with the merged trace)
         slot_disp = np.zeros(C, dtype=np.int64)  # dispatch step + 1, per slot
-        delay_steps = np.zeros(cfg.T, dtype=np.int32)
+        delay_steps = np.zeros(cfg.T, dtype=np.int64)
         for k in range(cfg.T):
             if kinds[k] == KIND_FLIP:
                 slot[k] = C               # trash row: flips touch no task
@@ -665,7 +665,9 @@ class ClosedNetworkSim:
         if self._record:
             self._dcap = max(int(cfg.T), 1024)
             self._d_node = np.empty(self._dcap, np.int32)
-            self._d_steps = np.empty(self._dcap, np.int32)
+            # int64: a CS-step delay is bounded by T, which exceeds int32
+            # range on T > 2^31 runs — int32 here silently wrapped
+            self._d_steps = np.empty(self._dcap, np.int64)
             self._d_time = np.empty(self._dcap, np.float64)
         # incremental queue-length counters + lazily-flushed accumulators
         # (python lists: O(1) scalar access is much faster than numpy indexing)

@@ -206,6 +206,100 @@ def optimize_two_cluster(
     return SamplingResult(p=p_vec, eta=eta, bound=bound, uniform_bound=ub, m=m)
 
 
+# class-collapse threshold for optimize_general: below this population the
+# dense analytic path is fast and stays the default (and the oracle)
+_COLLAPSE_MIN_N = 1024
+
+
+def _mva_delays_f64(
+    mu_m: np.ndarray, p_m: np.ndarray, counts: np.ndarray, C: int
+) -> tuple[np.ndarray, float]:
+    """Class-collapsed exact MVA in float64: (delays m (m,), throughput).
+
+    ``mu_m``/``p_m`` are per-*node* class values, ``counts`` multiplicities.
+    The MVA recurrence W = (1+Q)/mu, lam = M / sum_i p_i W_i is a sum over
+    nodes; within a class every node is identical, so the sum collapses to
+    counts-weighted class terms — O(m*C) independent of n.  Delays follow
+    the arrival theorem (queue seen at C-1) with the (C-1)/C Little's-law
+    normalization of `JacksonNetwork.expected_delays`.
+    """
+    w = counts.astype(np.float64)
+    Q = np.zeros_like(mu_m)
+    Q_prev, lam = Q, 0.0
+    for M in range(1, C + 1):
+        W = (1.0 + Q) / mu_m
+        lam = M / float((w * p_m) @ W)
+        Q_prev = Q
+        Q = lam * p_m * W
+    m = lam * (Q_prev + 1.0) / mu_m * (C - 1.0) / C
+    return m, lam
+
+
+def _optimize_general_classes(
+    mu: np.ndarray, k: BoundConstants, iters: int, lr: float
+) -> SamplingResult | None:
+    """Class-collapsed mirror descent: O(m*C) per iteration, any n.
+
+    Collapses mu to its m distinct speed classes (the optimum is
+    class-symmetric by exchangeability), runs exponentiated gradient on
+    the m-dimensional class-mass simplex with exact f64 MVA delays and a
+    finite-difference class gradient (m+1 cheap evaluations per step —
+    the dense analytic VJP is O(n*C) and moot here), then expands the
+    optimal per-node p back to (n,).  Returns None when the profile does
+    not collapse (too many classes) — caller falls back to the dense path.
+    """
+    from .stream_device import build_class_spec
+
+    n = mu.size
+    try:
+        spec, mu_m, p_u = build_class_spec(mu)
+    except ValueError:
+        return None
+    m_cls = spec.m
+    if m_cls > max(n // 4, 1):
+        return None  # no real collapse: dense path is as good
+    counts = np.asarray(spec.counts, np.float64)
+    mu_m = np.asarray(mu_m, np.float64)
+    inv = np.asarray(spec.inv_cls)
+
+    def objective(z: np.ndarray) -> tuple[float, float, np.ndarray]:
+        """Bound at class masses z (sum 1): (value, eta*, class delays)."""
+        p_m = z / counts
+        md, _ = _mva_delays_f64(mu_m, p_m, counts, k.C)
+        p_full, m_full = p_m[inv], md[inv]
+        eta = optimal_eta(p_full, m_full, k)
+        return generalized_bound(eta, p_full, m_full, k), eta, md
+
+    z = counts / n  # uniform start
+    floor = 1e-5 * counts / n
+    best_z, best_v = z.copy(), np.inf
+    for _ in range(iters):
+        val, _, _ = objective(z)
+        if val < best_v:
+            best_z, best_v = z.copy(), val
+        h = 1e-7
+        g = np.empty(m_cls)
+        for j in range(m_cls):
+            zq = z.copy()
+            zq[j] += h
+            g[j] = (objective(zq / zq.sum())[0] - val) / h
+        g = g - float(g @ z)
+        z = z * np.exp(-lr * g / (np.abs(g).max() + 1e-12))
+        z = np.maximum(z, floor)
+        z /= z.sum()
+    val = objective(z)[0]
+    if val < best_v:
+        best_z, best_v = z.copy(), val
+    bound, eta, md = objective(best_z)
+    p_m = best_z / counts
+    mdu, _ = _mva_delays_f64(mu_m, np.full(m_cls, 1.0 / n), counts, k.C)
+    pu_full, mu_full = np.full(n, 1.0 / n), mdu[inv]
+    ub = generalized_bound(optimal_eta(pu_full, mu_full, k), pu_full, mu_full, k)
+    return SamplingResult(
+        p=p_m[inv], eta=eta, bound=bound, uniform_bound=ub, m=md[inv]
+    )
+
+
 def optimize_general(
     mu: np.ndarray,
     k: BoundConstants,
@@ -213,6 +307,7 @@ def optimize_general(
     lr: float = 0.3,
     seed: int = 0,
     method: str = "analytic",
+    collapse: bool | str = "auto",
 ) -> SamplingResult:
     """Mirror descent (exponentiated gradient) on the simplex.
 
@@ -222,8 +317,22 @@ def optimize_general(
     ``method="analytic"`` (default) uses the exact O(n*C) gradient from the
     product-form identity; ``method="fd"`` is the seed finite-difference
     path (O(n^2*C) per step), kept for regression benchmarks.
+
+    ``collapse="auto"`` switches to the class-collapsed optimizer
+    (`_optimize_general_classes`, O(m*C) per step — runs at n = 10^6)
+    when n >= 1024 and mu has few distinct values; ``True`` forces it,
+    ``False`` keeps the dense path regardless.
     """
     mu = np.asarray(mu, dtype=np.float64)
+    if collapse is True or (collapse == "auto" and mu.size >= _COLLAPSE_MIN_N):
+        res = _optimize_general_classes(mu, k, iters=iters, lr=lr)
+        if res is not None:
+            return res
+        if collapse is True:
+            raise ValueError(
+                "collapse=True: mu does not reduce to a small number of "
+                "speed classes"
+            )
     if method == "fd":
         return _optimize_general_fd(mu, k, iters=iters, lr=lr)
     if method != "analytic":

@@ -69,6 +69,24 @@ __all__ = [
     "stats_stream_fn",
     "generate_stream",
     "generate_blocks",
+    "tree_build",
+    "tree_sample",
+    "tree_update",
+    "kahan_add",
+    "kahan_value",
+    "ClassSpec",
+    "build_class_spec",
+    "resolve_fault_rates_classes",
+    "SparseStreamState",
+    "sparse_stream_init",
+    "sparse_stream_step",
+    "sparse_fault_stream_step",
+    "sparse_stats_init",
+    "sparse_stats_step",
+    "sparse_fault_stats_step",
+    "sparse_stats_stream_fn",
+    "class_occupancy",
+    "sample_dispatch_classes",
     "mva_throughput_delays",
     "optimal_eta_jnp",
     "generalized_bound_jnp",
@@ -78,6 +96,104 @@ __all__ = [
 ]
 
 
+# ---------------------------------------------------------------------- #
+# segment-tree CDF sampler: hierarchical sums, descent never lands on a
+# zero-weight leaf — the unbiased replacement for cumsum+searchsorted
+# ---------------------------------------------------------------------- #
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def tree_build(w):
+    """Flattened-heap sum tree over the weight vector ``w``.
+
+    Returns a ``(2N,)`` array (N = next power of two >= len(w)) with
+    ``tree[1]`` the root total, children of node i at ``2i`` / ``2i+1``
+    and the (zero-padded) leaves at ``tree[N:]``.  The root is a pairwise
+    (hierarchical) sum, so its rounding error is O(log n) ulps — the
+    float32 ``cumsum`` it replaces accumulates O(n) ulps, which visibly
+    biases the inverse-CDF race at n >= 1e5.
+    """
+    import jax.numpy as jnp
+
+    w = jnp.asarray(w)
+    n = w.shape[0]
+    N = _next_pow2(n)
+    level = jnp.zeros(N, w.dtype).at[:n].set(w) if N != n else w
+    levels = [level]
+    while levels[-1].shape[0] > 1:
+        lv = levels[-1]
+        levels.append(lv.reshape(-1, 2).sum(axis=1))
+    return jnp.concatenate([jnp.zeros(1, w.dtype)] + levels[::-1])
+
+
+def tree_sample(tree, u):
+    """Inverse-CDF draw from a `tree_build` tree; returns a leaf index.
+
+    Descends ``x = u * total`` through the heap: go right iff the left
+    mass is exhausted *and* the right subtree has positive mass.  A leaf
+    with zero weight is therefore never selected — the clamped
+    ``searchsorted`` this replaces rounds ``u * total`` past the last
+    cumsum entry and over-selects the final (possibly idle, rate-0)
+    index; the descent re-routes that mass to the last positive leaf,
+    which is exactly the conditional law given the rounding event.
+    """
+    import jax.numpy as jnp
+
+    N = tree.shape[0] // 2
+    depth = max(N.bit_length() - 1, 0)
+    x = u * tree[1]
+    idx = jnp.int32(1)
+    for _ in range(depth):
+        left = tree[2 * idx]
+        right = tree[2 * idx + 1]
+        go_right = (x >= left) & (right > 0)
+        x = jnp.where(go_right, x - left, x)
+        idx = 2 * idx + go_right.astype(jnp.int32)
+    return idx - N
+
+
+def tree_update(tree, idx, value):
+    """Set leaf ``idx`` to ``value`` and refresh its root path (O(log n))."""
+    import jax.numpy as jnp
+
+    N = tree.shape[0] // 2
+    depth = max(N.bit_length() - 1, 0)
+    pos = jnp.asarray(idx, jnp.int32) + N
+    delta = value - tree[pos]
+    path = jnp.stack([pos >> d for d in range(depth + 1)])
+    return tree.at[path].add(delta)
+
+
+# ---------------------------------------------------------------------- #
+# Kahan-compensated accumulation: float32 time integrals stall once the
+# accumulator passes ~2^24 (increments round to zero); a compensated
+# (sum, c) pair keeps relative O(eps) accuracy on any backend, x64 or not
+# ---------------------------------------------------------------------- #
+def kahan_add(s, c, x):
+    """One compensated add: returns the new ``(s, c)`` pair.
+
+    The represented total is ``s - c``; ``s`` alone is the correctly
+    rounded float32 running sum (safe to read in traced code).
+    """
+    y = x - c
+    t = s + y
+    return t, (t - s) - y
+
+
+def kahan_value(s, c):
+    """Host-side exact readout of a compensated pair (float64)."""
+    return np.asarray(s, np.float64) - np.asarray(c, np.float64)
+
+
+def _kahan_scatter_add(s, c, idx, x):
+    """Compensated ``s.at[idx].add(x)`` for a single dynamic index."""
+    sj, cj = s[idx], c[idx]
+    y = x - cj
+    t = sj + y
+    return s.at[idx].set(t), c.at[idx].set((t - sj) - y)
+
+
 class StreamState(NamedTuple):
     """Device state of the closed network (one scenario)."""
 
@@ -85,8 +201,9 @@ class StreamState(NamedTuple):
     ring: Any   # (n, C) int32 — FIFO ring buffer of slot ids per node
     head: Any   # (n,) int32 — pop counter per node (ring index = head % C)
     tail: Any   # (n,) int32 — push counter per node
-    t: Any      # () float32 — physical time
+    t: Any      # () float32 — physical time (Kahan sum; see t_c)
     avail: Any = None  # (n,) float32 0/1 availability (fault mode; else None)
+    t_c: Any = 0.0     # () float32 — Kahan compensation of t
 
 
 class Event(NamedTuple):
@@ -101,7 +218,15 @@ class Event(NamedTuple):
 
 
 class StatsState(NamedTuple):
-    """Running observables accumulated on device (one scenario)."""
+    """Running observables accumulated on device (one scenario).
+
+    All float accumulators are Kahan pairs (``x`` plus compensation
+    ``x_c``; host readout via `kahan_value`) — plain float32 integrals
+    stall once they pass ~2^24, corrupting `estimate_mu`/`ctrl_refresh`
+    on T ~ 1e8 runs.  In sparse (class-collapsed) mode the per-node
+    vectors become per-class ``(m,)`` vectors; field names are shared so
+    every consumer reads both layouts.
+    """
 
     occ_sum: Any    # (n,) int32 — sum over steps of post-step X_{i,k} (Palm)
     occ_tw: Any     # (n,) float32 — time-weighted integral of X_i(t)
@@ -112,6 +237,10 @@ class StatsState(NamedTuple):
     slot_step: Any  # (C,) int32 — dispatch step of the task in each slot
     avail_tw: Any = None    # (n,) float32 — integral of availability (faults)
     kind_count: Any = None  # (4,) int32 — events per KIND_* tag (faults)
+    occ_tw_c: Any = 0.0     # Kahan compensations of the float integrals
+    busy_t_c: Any = 0.0
+    delay_sum_c: Any = 0.0
+    avail_tw_c: Any = None
 
 
 def stream_init(key, n: int, C: int, p, init: str = "distinct",
@@ -131,11 +260,9 @@ def stream_init(key, n: int, C: int, p, init: str = "distinct",
         else:
             nodes = (jnp.arange(C, dtype=jnp.int32) % n)
     elif init == "sampled":
-        cdf = jnp.cumsum(p)
+        ptree = tree_build(jnp.asarray(p, jnp.float32))
         u = jax.random.uniform(key, (C,))
-        nodes = jnp.minimum(
-            jnp.searchsorted(cdf, u, side="right"), n - 1
-        ).astype(jnp.int32)
+        nodes = jax.vmap(lambda uu: tree_sample(ptree, uu))(u).astype(jnp.int32)
     else:
         raise ValueError(init)
     # FIFO position of task s at its node = number of earlier tasks there
@@ -163,7 +290,10 @@ def stream_step(state: StreamState, mu, xs) -> tuple[StreamState, Event]:
     and holding time) plus the pre-sampled dispatch target K_{k+1} ~ p.  With
     exponential service the network is a CTMC, so given the occupancy the
     next completion is at node j w.p. mu_j 1{X_j>0} / sum(...) after an
-    Exp(sum) holding time — no per-node residual clocks needed.
+    Exp(sum) holding time — no per-node residual clocks needed.  The race is
+    sampled by segment-tree descent (`tree_build`/`tree_sample`): pairwise
+    sums keep the CDF unbiased at large n and the descent never selects an
+    idle (rate-0) node, unlike the clamped float32 cumsum+searchsorted.
     """
     import jax.numpy as jnp
 
@@ -173,13 +303,11 @@ def stream_step(state: StreamState, mu, xs) -> tuple[StreamState, Event]:
     )
     n, C = ring.shape
     rates = jnp.where(occ > 0, mu, 0.0)
-    cr = jnp.cumsum(rates)
-    tot = cr[-1]
+    rtree = tree_build(rates)
+    tot = rtree[1]
     dt = -jnp.log1p(-u_exp) / tot
-    t = t + dt
-    j = jnp.minimum(
-        jnp.searchsorted(cr, u_race * tot, side="right"), n - 1
-    ).astype(jnp.int32)
+    t, t_c = kahan_add(t, state.t_c, dt)
+    j = tree_sample(rtree, u_race).astype(jnp.int32)
     # pop the oldest in-flight task at j; its freed slot hosts the dispatch
     s = ring[j, head[j] % C]
     head = head.at[j].add(1)
@@ -188,7 +316,7 @@ def stream_step(state: StreamState, mu, xs) -> tuple[StreamState, Event]:
     tail = tail.at[k_new].add(1)
     occ = occ.at[k_new].add(1)
     return (
-        StreamState(occ=occ, ring=ring, head=head, tail=tail, t=t),
+        StreamState(occ=occ, ring=ring, head=head, tail=tail, t=t, t_c=t_c),
         Event(j=j, k=k_new, t=t, slot=s, dt=dt),
     )
 
@@ -237,13 +365,11 @@ def fault_stream_step(state: StreamState, mu, fr, xs):
     r_tmo = jnp.where(busy, theta, 0.0)
     r_flip = jnp.where(avail > 0, q_off, q_on)
     rates = jnp.concatenate([r_comp, r_crash, r_tmo, r_flip])
-    cr = jnp.cumsum(rates)
-    tot = jnp.maximum(cr[-1], 1e-30)  # all-off + no clocks: time still moves
+    rtree = tree_build(rates)
+    tot = jnp.maximum(rtree[1], 1e-30)  # all-off + no clocks: time still moves
     dt = -jnp.log1p(-u_exp) / tot
-    t = t + dt
-    idx = jnp.minimum(
-        jnp.searchsorted(cr, u_race * tot, side="right"), 4 * n - 1
-    ).astype(jnp.int32)
+    t, t_c = kahan_add(t, state.t_c, dt)
+    idx = tree_sample(rtree, u_race).astype(jnp.int32)
     kind = idx // n
     j = idx % n
     move = kind < KIND_FLIP
@@ -260,7 +386,8 @@ def fault_stream_step(state: StreamState, mu, fr, xs):
     flip = (kind == KIND_FLIP).astype(jnp.float32)
     avail = avail.at[j].add(flip * (1.0 - 2.0 * avail[j]))
     return (
-        StreamState(occ=occ, ring=ring, head=head, tail=tail, t=t, avail=avail),
+        StreamState(occ=occ, ring=ring, head=head, tail=tail, t=t,
+                    avail=avail, t_c=t_c),
         Event(j=j, k=k_new, t=t, slot=s, dt=dt, kind=kind),
     )
 
@@ -277,6 +404,10 @@ def stats_init(n: int, C: int, fault: bool = False) -> StatsState:
         slot_step=jnp.zeros(C, jnp.int32),
         avail_tw=jnp.zeros(n, jnp.float32) if fault else None,
         kind_count=jnp.zeros(4, jnp.int32) if fault else None,
+        occ_tw_c=jnp.zeros(n, jnp.float32),
+        busy_t_c=jnp.zeros(n, jnp.float32),
+        delay_sum_c=jnp.zeros(n, jnp.float32),
+        avail_tw_c=jnp.zeros(n, jnp.float32) if fault else None,
     )
 
 
@@ -291,13 +422,25 @@ def stats_step(stats: StatsState, ev: Event, occ_pre, occ_post, k) -> StatsState
     import jax.numpy as jnp
 
     delay = (k - stats.slot_step[ev.slot]).astype(jnp.float32)
+    occ_tw, occ_tw_c = kahan_add(
+        stats.occ_tw, stats.occ_tw_c, occ_pre.astype(jnp.float32) * ev.dt
+    )
+    busy_t, busy_t_c = kahan_add(
+        stats.busy_t, stats.busy_t_c, jnp.where(occ_pre > 0, ev.dt, 0.0)
+    )
+    delay_sum, delay_sum_c = _kahan_scatter_add(
+        stats.delay_sum, stats.delay_sum_c, ev.j, delay
+    )
     return StatsState(
         occ_sum=stats.occ_sum + occ_post,
-        occ_tw=stats.occ_tw + occ_pre.astype(jnp.float32) * ev.dt,
-        busy_t=stats.busy_t + jnp.where(occ_pre > 0, ev.dt, 0.0),
+        occ_tw=occ_tw,
+        busy_t=busy_t,
         comp=stats.comp.at[ev.j].add(1),
-        delay_sum=stats.delay_sum.at[ev.j].add(delay),
+        delay_sum=delay_sum,
         slot_step=stats.slot_step.at[ev.slot].set(k + 1),
+        occ_tw_c=occ_tw_c,
+        busy_t_c=busy_t_c,
+        delay_sum_c=delay_sum_c,
     )
 
 
@@ -318,16 +461,33 @@ def fault_stats_step(
 
     comp = (ev.kind == KIND_COMPLETE).astype(jnp.int32)
     delay = (k - stats.slot_step[ev.slot]).astype(jnp.float32)
+    occ_tw, occ_tw_c = kahan_add(
+        stats.occ_tw, stats.occ_tw_c, occ_pre.astype(jnp.float32) * ev.dt
+    )
+    busy_t, busy_t_c = kahan_add(
+        stats.busy_t, stats.busy_t_c,
+        jnp.where((occ_pre > 0) & (avail_pre > 0), ev.dt, 0.0),
+    )
+    delay_sum, delay_sum_c = _kahan_scatter_add(
+        stats.delay_sum, stats.delay_sum_c, ev.j,
+        delay * comp.astype(jnp.float32),
+    )
+    avail_tw, avail_tw_c = kahan_add(
+        stats.avail_tw, stats.avail_tw_c, avail_pre * ev.dt
+    )
     return StatsState(
         occ_sum=stats.occ_sum + occ_post,
-        occ_tw=stats.occ_tw + occ_pre.astype(jnp.float32) * ev.dt,
-        busy_t=stats.busy_t
-        + jnp.where((occ_pre > 0) & (avail_pre > 0), ev.dt, 0.0),
+        occ_tw=occ_tw,
+        busy_t=busy_t,
         comp=stats.comp.at[ev.j].add(comp),
-        delay_sum=stats.delay_sum.at[ev.j].add(delay * comp),
+        delay_sum=delay_sum,
         slot_step=stats.slot_step.at[ev.slot].set(k + 1, mode="drop"),
-        avail_tw=stats.avail_tw + avail_pre * ev.dt,
+        avail_tw=avail_tw,
         kind_count=stats.kind_count.at[ev.kind].add(1),
+        occ_tw_c=occ_tw_c,
+        busy_t_c=busy_t_c,
+        delay_sum_c=delay_sum_c,
+        avail_tw_c=avail_tw_c,
     )
 
 
@@ -352,11 +512,11 @@ def _network_scan(n: int, C: int, T: int, init: str, emit_events: bool,
         state, init_nodes = stream_init(k_init, n, C, p, init=init, fault=fault)
         u_race = jax.random.uniform(k_race, (T,))
         u_exp = jax.random.uniform(k_exp, (T,))
-        # all T dispatch draws in one vectorized inverse-CDF op
-        K = jnp.minimum(
-            jnp.searchsorted(jnp.cumsum(p), jax.random.uniform(k_disp, (T,)),
-                             side="right"),
-            n - 1,
+        # all T dispatch draws through one shared segment tree (hierarchical
+        # CDF — O(log n) per draw, unbiased at large n, zero-p never drawn)
+        ptree = tree_build(jnp.asarray(p, jnp.float32))
+        K = jax.vmap(lambda u: tree_sample(ptree, u))(
+            jax.random.uniform(k_disp, (T,))
         ).astype(jnp.int32)
         stats = stats_init(n, C, fault=fault)
 
@@ -460,9 +620,9 @@ def generate_stream(
         n=n,
         C=int(C),
         p=p.copy(),
-        delay_steps=np.asarray(delays, np.int32),
+        delay_steps=np.asarray(delays, np.int64),
         queue_len_sum=np.asarray(stats.occ_sum, np.float64),
-        queue_len_tw=np.asarray(stats.occ_tw, np.float64),
+        queue_len_tw=kahan_value(stats.occ_tw, stats.occ_tw_c),
         kind=kind_np,
     )
 
@@ -498,9 +658,561 @@ def generate_blocks(
 
 
 # ---------------------------------------------------------------------- #
+# sparse O(C) closed network: state keyed by the C in-flight tasks
+# ---------------------------------------------------------------------- #
+class ClassSpec(NamedTuple):
+    """Static speed-class structure of the client population.
+
+    Clients with identical ``(mu, p)`` are exchangeable in the closed
+    Jackson network (the paper's two-cluster structure, generalized to m
+    classes), so the sparse stream only tracks *which class* each idle
+    node belongs to and keeps per-node identity for the C in-flight
+    tasks.  ``perm`` maps compact (class-sorted) positions to global
+    client ids — clients of class c occupy ``perm[offsets[c] :
+    offsets[c] + counts[c]]`` — and ``inv_cls`` inverts it per global id.
+    Both tables are O(n) *memory* but only touched by O(1) gathers per
+    event, so per-event cost stays flat in n.
+    """
+
+    counts: Any   # (m,) int32 — class sizes
+    offsets: Any  # (m,) int32 — exclusive prefix sums of counts
+    perm: Any     # (n,) int32 — compact position -> global client id
+    inv_cls: Any  # (n,) int32 — global client id -> class index
+
+    @property
+    def n(self) -> int:
+        return int(self.perm.shape[0])
+
+    @property
+    def m(self) -> int:
+        return int(self.counts.shape[0])
+
+    def device(self) -> "ClassSpec":
+        import jax.numpy as jnp
+
+        return ClassSpec(*(jnp.asarray(a, jnp.int32) for a in self))
+
+    def cache_key(self) -> tuple:
+        return (
+            self.n,
+            tuple(np.asarray(self.counts).tolist()),
+            hash(np.asarray(self.perm, np.int32).tobytes()),
+        )
+
+
+def build_class_spec(mu, p=None, max_classes: int = 64):
+    """Detect speed classes from per-node ``(mu, p)``.
+
+    Returns ``(spec, mu_m, p_m)`` with class-level service rates and
+    per-node dispatch probabilities.  Raises if more than ``max_classes``
+    distinct ``(mu, p)`` pairs exist — the sparse path is for populations
+    with cluster structure, not fully heterogeneous rates.
+    """
+    mu = np.asarray(mu, np.float64)
+    n = mu.size
+    p = np.full(n, 1.0 / n) if p is None else np.asarray(p, np.float64)
+    vals, inv = np.unique(np.stack([mu, p], axis=1), axis=0, return_inverse=True)
+    m = vals.shape[0]
+    if m > max_classes:
+        raise ValueError(
+            f"{m} distinct (mu, p) classes exceed max_classes={max_classes}; "
+            "the sparse stream needs cluster structure"
+        )
+    inv = inv.reshape(n)
+    counts = np.bincount(inv, minlength=m)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    spec = ClassSpec(
+        counts=counts.astype(np.int32),
+        offsets=offsets.astype(np.int32),
+        perm=np.argsort(inv, kind="stable").astype(np.int32),
+        inv_cls=inv.astype(np.int32),
+    )
+    return spec, vals[:, 0].copy(), vals[:, 1].copy()
+
+
+def resolve_fault_rates_classes(fault: FaultConfig, spec: ClassSpec):
+    """Class-level `resolve_fault_rates`: ``(kappa, theta, q_off, q_on)``
+    as ``(m,)`` arrays.  Fault rates must be constant within each speed
+    class — the exchangeability the sparse idle pools rely on."""
+    import jax.numpy as jnp
+
+    q_off, q_on, kappa, theta = fault.resolve(spec.n)
+    perm = np.asarray(spec.perm)
+    offsets = np.asarray(spec.offsets)
+    counts = np.asarray(spec.counts)
+    out = []
+    for name, r in (("crash_rate", kappa), ("timeout_rate", theta),
+                    ("off_rate", q_off), ("on_rate", q_on)):
+        rc = np.asarray(r, np.float64)[perm]
+        vals = rc[offsets]
+        for c in range(counts.size):
+            seg = rc[offsets[c]: offsets[c] + counts[c]]
+            if not np.allclose(seg, vals[c]):
+                raise ValueError(
+                    f"FaultConfig.{name} varies within speed class {c}; "
+                    "the sparse stream requires class-constant fault rates"
+                )
+        out.append(jnp.asarray(vals, jnp.float32))
+    return tuple(out)
+
+
+class SparseStreamState(NamedTuple):
+    """Sparse device state of the closed network: O(C + m), not O(n·C).
+
+    Each of the C circulating tasks is one slot; FIFO order within a node
+    is the monotone ``seq`` stamp and ``head`` marks the head-of-line
+    task (exactly one per busy node).  Under faults, availability is
+    carried per slot (consistent across slots of the same node) and idle
+    nodes are tracked as per-class ``(idle_on, idle_off)`` counts —
+    within-class identities are exchangeable, so the collapse is exact in
+    law for every per-class observable.
+    """
+
+    node: Any   # (C,) int32 — global client id of each in-flight task
+    cls: Any    # (C,) int32 — speed class of that node
+    seq: Any    # (C,) int32 — dispatch stamp (FIFO: head = min seq per node)
+    head: Any   # (C,) bool — head-of-line flag
+    t: Any      # () float32 — physical time (Kahan; see t_c)
+    t_c: Any    # () float32
+    next_seq: Any  # () int32 — next dispatch stamp
+    avail: Any = None     # (C,) float32 — availability bit of the slot's node
+    idle_on: Any = None   # (m,) int32 — idle & available nodes per class
+    idle_off: Any = None  # (m,) int32 — idle & unavailable nodes per class
+
+
+def sample_dispatch_classes(p, spec: ClassSpec, u_cls, u_mem):
+    """Vectorized dispatch draws K ~ p for a class-structured population.
+
+    ``p`` is the (m,) *per-node* probability by class; a draw picks the
+    class from the (m,) mass vector ``counts * p`` by segment-tree
+    descent, then a uniform member — identical in law to the dense (n,)
+    inverse-CDF draw, at O(log m) per event.  ``u_cls``/``u_mem`` are
+    1-D uniform blocks; returns global client ids.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    counts = jnp.asarray(spec.counts, jnp.int32)
+    offsets = jnp.asarray(spec.offsets, jnp.int32)
+    perm = jnp.asarray(spec.perm, jnp.int32)
+    mass = counts.astype(jnp.float32) * jnp.asarray(p, jnp.float32)
+    mtree = tree_build(mass)
+    c = jax.vmap(lambda u: tree_sample(mtree, u))(u_cls).astype(jnp.int32)
+    member = jnp.minimum(
+        (u_mem * counts[c].astype(jnp.float32)).astype(jnp.int32),
+        counts[c] - 1,
+    )
+    return perm[offsets[c] + member]
+
+
+def sparse_stream_init(key, spec: ClassSpec, C: int, p=None,
+                       init: str = "distinct", fault: bool = False):
+    """Initial sparse placement of the C tasks.  Returns (state, nodes).
+
+    Same two conventions as `stream_init`.  "distinct" draws a uniform
+    C-subset by sequential rank-adjusted draws (O(C^2), exact — the r-th
+    smallest unchosen id is recovered by bumping r past every chosen id
+    at or below it) rather than an O(n) permutation, so even the one-time
+    init stays flat in n; every event is O(C + m + log n).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n, m = spec.n, spec.m
+    if init == "distinct":
+        if C <= n:
+            ranks = jax.vmap(
+                lambda k, hi: jax.random.randint(k, (), 0, hi)
+            )(jax.random.split(key, C), jnp.arange(n, n - C, -1))
+
+            def draw(i, chosen):
+                sort = jnp.sort(chosen)  # sentinels n sort last
+
+                def bump(x, s):
+                    return jnp.where(s <= x, x + 1, x), None
+
+                r, _ = jax.lax.scan(bump, ranks[i], sort)
+                return chosen.at[i].set(r)
+
+            nodes = jax.lax.fori_loop(
+                0, C, draw, jnp.full(C, n, jnp.int32)).astype(jnp.int32)
+        else:
+            nodes = jnp.arange(C, dtype=jnp.int32) % n
+    elif init == "sampled":
+        k1, k2 = jax.random.split(key)
+        nodes = sample_dispatch_classes(
+            p, spec, jax.random.uniform(k1, (C,)), jax.random.uniform(k2, (C,))
+        )
+    else:
+        raise ValueError(init)
+    # head-of-line = first occurrence of each node among the C slots
+    eq = nodes[None, :] == nodes[:, None]
+    head = jnp.sum(jnp.tril(eq, -1), axis=1) == 0
+    cls = jnp.asarray(spec.inv_cls, jnp.int32)[nodes]
+    if fault:
+        busy_m = jnp.zeros(m, jnp.int32).at[cls].add(head.astype(jnp.int32))
+        idle_on = jnp.asarray(spec.counts, jnp.int32) - busy_m
+        avail = jnp.ones(C, jnp.float32)
+        idle_off = jnp.zeros(m, jnp.int32)
+    else:
+        avail = idle_on = idle_off = None
+    state = SparseStreamState(
+        node=nodes,
+        cls=cls,
+        seq=jnp.arange(C, dtype=jnp.int32),
+        head=head,
+        t=jnp.float32(0.0),
+        t_c=jnp.float32(0.0),
+        next_seq=jnp.int32(C),
+        avail=avail,
+        idle_on=idle_on,
+        idle_off=idle_off,
+    )
+    return state, nodes
+
+
+def class_occupancy(cls, m: int):
+    """(m,) int32 per-class task counts from the (C,) slot classes."""
+    import jax.numpy as jnp
+
+    return jnp.zeros(m, jnp.int32).at[cls].add(1)
+
+
+def sparse_class_stats(state: SparseStreamState, m: int, fault: bool = False):
+    """Per-class (occupancy, busy-node, available-node) counts.
+
+    ``busy`` counts distinct busy nodes (one head per busy node); in
+    fault mode it is gated on availability (the `estimate_mu` exposure)
+    and ``avail`` counts available nodes (busy-available heads plus the
+    idle-on pool).  Returns ``(occ, busy, avail-or-None)``.
+    """
+    import jax.numpy as jnp
+
+    occ = class_occupancy(state.cls, m)
+    h = state.head.astype(jnp.int32)
+    if not fault:
+        busy = jnp.zeros(m, jnp.int32).at[state.cls].add(h)
+        return occ, busy, None
+    ha = h * (state.avail > 0).astype(jnp.int32)
+    busy = jnp.zeros(m, jnp.int32).at[state.cls].add(ha)
+    avail = busy + state.idle_on
+    return occ, busy, avail
+
+
+def sparse_stream_step(state: SparseStreamState, mu, spec, xs):
+    """One CS step of the sparse closed network — O(C + log n) work.
+
+    ``xs = (u_race, u_exp, k_new)`` as in `stream_step`; ``mu`` is the
+    (m,) class rate vector and ``spec`` a device `ClassSpec`.  The
+    completion race runs over the <= C head-of-line tasks only (each busy
+    node contributes exactly one head), so nothing scales with n.
+    """
+    import jax.numpy as jnp
+
+    u_race, u_exp, k_new = xs
+    node, cls, seq, head = state.node, state.cls, state.seq, state.head
+    C = node.shape[0]
+    ar = jnp.arange(C, dtype=jnp.int32)
+    rates = jnp.where(head, mu[cls], 0.0)
+    rtree = tree_build(rates)
+    dt = -jnp.log1p(-u_exp) / rtree[1]
+    t, t_c = kahan_add(state.t, state.t_c, dt)
+    s = tree_sample(rtree, u_race).astype(jnp.int32)
+    j = node[s]
+    # promote j's next-oldest task (if any) to head-of-line
+    others_j = (node == j) & (ar != s)
+    has_succ = jnp.any(others_j)
+    succ = jnp.argmin(jnp.where(others_j, seq, jnp.int32(2**31 - 1)))
+    head = head & (ar != s)
+    head = head | ((ar == succ) & has_succ)
+    # the freed slot hosts the dispatch; join-or-fresh by O(C) membership
+    exists_k = jnp.any((node == k_new) & (ar != s))
+    node = node.at[s].set(k_new)
+    cls = cls.at[s].set(jnp.asarray(spec.inv_cls, jnp.int32)[k_new])
+    seq = seq.at[s].set(state.next_seq)
+    head = jnp.where(ar == s, ~exists_k, head)
+    return (
+        SparseStreamState(node=node, cls=cls, seq=seq, head=head, t=t,
+                          t_c=t_c, next_seq=state.next_seq + 1),
+        Event(j=j, k=k_new, t=t, slot=s, dt=dt),
+    )
+
+
+def sparse_fault_stream_step(state: SparseStreamState, mu, spec, fr, xs):
+    """One merged-CTMC event of the faulty sparse network — O(C + m).
+
+    The race runs over ``4C + 2m`` clocks: per head slot [completion |
+    crash | timeout | availability flip] plus per class [idle on->off |
+    idle off->on] — the exact class-collapse of the dense ``4n`` race
+    (each busy node has one head; idle nodes are exchangeable within a
+    class).  ``xs = (u_race, u_exp, k_new, u_bit)``: ``u_bit`` resolves
+    the availability bit when the dispatch lands on an idle node (drawn
+    from the class's (idle_on, idle_off) composition — exact in law by
+    exchangeability; within-class *identities* of idle nodes are not
+    tracked).  ``fr = resolve_fault_rates_classes(...)``.  Idle-pool
+    flips emit a representative id of the class with ``slot = C`` (the
+    trash row), like dense flips.
+    """
+    import jax.numpy as jnp
+
+    kappa, theta, q_off, q_on = fr
+    u_race, u_exp, k_new, u_bit = xs
+    node, cls, seq, head, a = (
+        state.node, state.cls, state.seq, state.head, state.avail,
+    )
+    ion, ioff = state.idle_on, state.idle_off
+    C = node.shape[0]
+    m = ion.shape[0]
+    ar = jnp.arange(C, dtype=jnp.int32)
+    inv_cls = jnp.asarray(spec.inv_cls, jnp.int32)
+    hf = head.astype(jnp.float32)
+    rates = jnp.concatenate([
+        mu[cls] * a * hf,
+        kappa[cls] * a * hf,
+        theta[cls] * hf,
+        (q_off[cls] * a + q_on[cls] * (1.0 - a)) * hf,
+        ion.astype(jnp.float32) * q_off,
+        ioff.astype(jnp.float32) * q_on,
+    ])
+    rtree = tree_build(rates)
+    tot = jnp.maximum(rtree[1], 1e-30)  # all-off + no clocks: time still moves
+    dt = -jnp.log1p(-u_exp) / tot
+    t, t_c = kahan_add(state.t, state.t_c, dt)
+    idx = tree_sample(rtree, u_race).astype(jnp.int32)
+
+    move = idx < 3 * C
+    kind = jnp.where(move, idx // C, KIND_FLIP).astype(jnp.int32)
+    s_mv = jnp.where(move, idx % C, 0)
+    is_bf = (idx >= 3 * C) & (idx < 4 * C)
+    s_bf = jnp.where(is_bf, idx - 3 * C, 0)
+    is_if = idx >= 4 * C
+    if_on2off = is_if & (idx < 4 * C + m)
+    if_c = jnp.where(
+        is_if, jnp.where(if_on2off, idx - 4 * C, idx - 4 * C - m), 0
+    )
+
+    j_mv = node[s_mv]
+    cls_j = cls[s_mv]
+    a_j = a[s_mv]
+    j_bf = node[s_bf]
+    perm = jnp.asarray(spec.perm, jnp.int32)
+    offsets = jnp.asarray(spec.offsets, jnp.int32)
+    j = jnp.where(move, j_mv, jnp.where(is_bf, j_bf, perm[offsets[if_c]]))
+    s = jnp.where(move, s_mv, C).astype(jnp.int32)
+
+    # movement (complete / crash / timeout): pop the head at j, redispatch
+    others_j = move & (node == j_mv) & (ar != s_mv)
+    has_succ = jnp.any(others_j)
+    succ = jnp.argmin(jnp.where(others_j, seq, jnp.int32(2**31 - 1)))
+    head = head & ~(move & (ar == s_mv))
+    head = head | ((ar == succ) & has_succ)
+
+    cls_k = inv_cls[k_new]
+    k_is_j = move & (k_new == j_mv)
+    exists_k = move & jnp.any((node == k_new) & (ar != s_mv))
+    j_idles = move & ~has_succ & ~k_is_j
+    # pool state the fresh draw sees: after j (possibly) went idle
+    ion1 = ion.at[cls_j].add((j_idles & (a_j > 0)).astype(jnp.int32))
+    ioff1 = ioff.at[cls_j].add((j_idles & (a_j == 0)).astype(jnp.int32))
+    pool_on = ion1[cls_k].astype(jnp.float32)
+    pool = pool_on + ioff1[cls_k].astype(jnp.float32)
+    bit_pool = (u_bit * jnp.maximum(pool, 1.0) < pool_on).astype(jnp.float32)
+    bit_join = jnp.max(jnp.where((node == k_new) & (ar != s_mv), a, 0.0))
+    bit_new = jnp.where(exists_k, bit_join, jnp.where(k_is_j, a_j, bit_pool))
+    fresh = move & ~exists_k & ~k_is_j
+    ion2 = ion1.at[cls_k].add(-(fresh & (bit_new > 0)).astype(jnp.int32))
+    ioff2 = ioff1.at[cls_k].add(-(fresh & (bit_new == 0)).astype(jnp.int32))
+
+    # busy-node availability flip: toggle every slot of that node
+    a = jnp.where(is_bf & (node == j_bf), 1.0 - a, a)
+    # idle-pool flips: move one node between the (on, off) counts
+    ion3 = ion2.at[if_c].add(jnp.where(is_if, jnp.where(if_on2off, -1, 1), 0))
+    ioff3 = ioff2.at[if_c].add(jnp.where(is_if, jnp.where(if_on2off, 1, -1), 0))
+
+    at_s = move & (ar == s_mv)
+    node = jnp.where(at_s, k_new, node)
+    cls = jnp.where(at_s, cls_k, cls)
+    seq = jnp.where(at_s, state.next_seq, seq)
+    head = jnp.where(at_s, ~exists_k, head)
+    a = jnp.where(at_s, bit_new, a)
+    return (
+        SparseStreamState(
+            node=node, cls=cls, seq=seq, head=head, t=t, t_c=t_c,
+            next_seq=state.next_seq + move.astype(jnp.int32),
+            avail=a, idle_on=ion3, idle_off=ioff3,
+        ),
+        Event(j=j, k=k_new, t=t, slot=s, dt=dt, kind=kind),
+    )
+
+
+def sparse_stats_init(m: int, C: int, fault: bool = False) -> StatsState:
+    """Per-class `StatsState`: same fields, (m,) instead of (n,)."""
+    import jax.numpy as jnp
+
+    return StatsState(
+        occ_sum=jnp.zeros(m, jnp.int32),
+        occ_tw=jnp.zeros(m, jnp.float32),
+        busy_t=jnp.zeros(m, jnp.float32),
+        comp=jnp.zeros(m, jnp.int32),
+        delay_sum=jnp.zeros(m, jnp.float32),
+        slot_step=jnp.zeros(C, jnp.int32),
+        avail_tw=jnp.zeros(m, jnp.float32) if fault else None,
+        kind_count=jnp.zeros(4, jnp.int32) if fault else None,
+        occ_tw_c=jnp.zeros(m, jnp.float32),
+        busy_t_c=jnp.zeros(m, jnp.float32),
+        delay_sum_c=jnp.zeros(m, jnp.float32),
+        avail_tw_c=jnp.zeros(m, jnp.float32) if fault else None,
+    )
+
+
+def sparse_stats_step(stats: StatsState, ev: Event, cls_j, occ_pre, busy_pre,
+                      occ_post, k) -> StatsState:
+    """Per-class `stats_step`: ``occ_pre``/``busy_pre``/``occ_post`` are the
+    (m,) counts from `sparse_class_stats` and ``cls_j`` the class of the
+    completing node."""
+    import jax.numpy as jnp
+
+    delay = (k - stats.slot_step[ev.slot]).astype(jnp.float32)
+    occ_tw, occ_tw_c = kahan_add(
+        stats.occ_tw, stats.occ_tw_c, occ_pre.astype(jnp.float32) * ev.dt
+    )
+    busy_t, busy_t_c = kahan_add(
+        stats.busy_t, stats.busy_t_c, busy_pre.astype(jnp.float32) * ev.dt
+    )
+    delay_sum, delay_sum_c = _kahan_scatter_add(
+        stats.delay_sum, stats.delay_sum_c, cls_j, delay
+    )
+    return StatsState(
+        occ_sum=stats.occ_sum + occ_post,
+        occ_tw=occ_tw,
+        busy_t=busy_t,
+        comp=stats.comp.at[cls_j].add(1),
+        delay_sum=delay_sum,
+        slot_step=stats.slot_step.at[ev.slot].set(k + 1),
+        occ_tw_c=occ_tw_c,
+        busy_t_c=busy_t_c,
+        delay_sum_c=delay_sum_c,
+    )
+
+
+def sparse_fault_stats_step(stats: StatsState, ev: Event, cls_j, occ_pre,
+                            busy_pre, avail_pre, occ_post, k) -> StatsState:
+    """Fault-aware per-class stats: mirrors `fault_stats_step` with (m,)
+    vectors (``avail_pre`` = available nodes per class, busy + idle-on)."""
+    import jax.numpy as jnp
+
+    comp = (ev.kind == KIND_COMPLETE).astype(jnp.int32)
+    delay = (k - stats.slot_step[ev.slot]).astype(jnp.float32)
+    occ_tw, occ_tw_c = kahan_add(
+        stats.occ_tw, stats.occ_tw_c, occ_pre.astype(jnp.float32) * ev.dt
+    )
+    busy_t, busy_t_c = kahan_add(
+        stats.busy_t, stats.busy_t_c, busy_pre.astype(jnp.float32) * ev.dt
+    )
+    delay_sum, delay_sum_c = _kahan_scatter_add(
+        stats.delay_sum, stats.delay_sum_c, cls_j,
+        delay * comp.astype(jnp.float32),
+    )
+    avail_tw, avail_tw_c = kahan_add(
+        stats.avail_tw, stats.avail_tw_c, avail_pre.astype(jnp.float32) * ev.dt
+    )
+    return StatsState(
+        occ_sum=stats.occ_sum + occ_post,
+        occ_tw=occ_tw,
+        busy_t=busy_t,
+        comp=stats.comp.at[cls_j].add(comp),
+        delay_sum=delay_sum,
+        slot_step=stats.slot_step.at[ev.slot].set(k + 1, mode="drop"),
+        avail_tw=avail_tw,
+        kind_count=stats.kind_count.at[ev.kind].add(1),
+        occ_tw_c=occ_tw_c,
+        busy_t_c=busy_t_c,
+        delay_sum_c=delay_sum_c,
+        avail_tw_c=avail_tw_c,
+    )
+
+
+def _sparse_network_scan(m: int, C: int, T: int, init: str,
+                         fault: bool = False):
+    """Sparse analogue of `_network_scan`: T fused sparse CS steps.
+
+    Returns ``gen(key, mu, p, spec[, fr]) -> (init_nodes, stats, state)``
+    with (m,) class-level ``mu``/``p`` and a device `ClassSpec`.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def gen(key, mu, p, spec, fr=None):
+        keys = jax.random.split(key, 6)
+        state, init_nodes = sparse_stream_init(
+            keys[0], spec, C, p, init=init, fault=fault
+        )
+        u_race = jax.random.uniform(keys[1], (T,))
+        u_exp = jax.random.uniform(keys[2], (T,))
+        K = sample_dispatch_classes(
+            p, spec,
+            jax.random.uniform(keys[3], (T,)),
+            jax.random.uniform(keys[4], (T,)),
+        )
+        u_bit = jax.random.uniform(keys[5], (T,)) if fault else None
+        stats = sparse_stats_init(m, C, fault=fault)
+
+        def body(carry, xs):
+            state, stats, k = carry
+            occ_pre, busy_pre, avail_pre = sparse_class_stats(
+                state, m, fault=fault
+            )
+            if fault:
+                ur, ue, kn, ub = xs
+                state, ev = sparse_fault_stream_step(
+                    state, mu, spec, fr, (ur, ue, kn, ub)
+                )
+                cls_j = jnp.asarray(spec.inv_cls, jnp.int32)[ev.j]
+                stats = sparse_fault_stats_step(
+                    stats, ev, cls_j, occ_pre, busy_pre, avail_pre,
+                    class_occupancy(state.cls, m), k,
+                )
+            else:
+                ur, ue, kn = xs
+                state, ev = sparse_stream_step(state, mu, spec, (ur, ue, kn))
+                cls_j = jnp.asarray(spec.inv_cls, jnp.int32)[ev.j]
+                stats = sparse_stats_step(
+                    stats, ev, cls_j, occ_pre, busy_pre,
+                    class_occupancy(state.cls, m), k,
+                )
+            return (state, stats, k + 1), None
+
+        xs = (u_race, u_exp, K, u_bit) if fault else (u_race, u_exp, K)
+        (state, stats, _), _ = jax.lax.scan(
+            body, (state, stats, jnp.int32(0)), xs
+        )
+        return init_nodes, stats, state
+
+    return gen
+
+
+@lru_cache(maxsize=32)
+def sparse_stats_stream_fn(m: int, C: int, T: int, init: str = "distinct",
+                           fault: bool = False):
+    """Stats-only sparse network scan, cached per shape.
+
+    ``gen(key, mu, p, spec[, fr]) -> (StatsState, SparseStreamState)``
+    with (m,) class-level inputs; per-event cost is flat in n (the
+    benchmark surface of ``benchmarks/engine.py --scale``).  Un-jitted so
+    callers compose with vmap before compiling; ``spec`` must be a
+    device `ClassSpec` (``spec.device()``).
+    """
+    base = _sparse_network_scan(m, C, T, init, fault=fault)
+    if fault:
+        return lambda key, mu, p, spec, fr: base(key, mu, p, spec, fr)[1:]
+    return lambda key, mu, p, spec: base(key, mu, p, spec)[1:]
+
+
+# ---------------------------------------------------------------------- #
 # jnp control plane: exact Jackson analysis + Theorem-1 bound, traceable
 # ---------------------------------------------------------------------- #
-def mva_throughput_delays(mu, p, C: int, normalized: bool = True):
+def mva_throughput_delays(mu, p, C: int, normalized: bool = True,
+                          counts=None):
     """Exact (m, lam) of the closed network via Mean Value Analysis.
 
     The MVA recurrence over populations M = 1..C
@@ -513,6 +1225,12 @@ def mva_throughput_delays(mu, p, C: int, normalized: bool = True):
     C-step scan of O(n) vectorized ops that AD flows through cheaply.
     Returns ``(m, lam)``: delays in CS steps (Prop. 3 estimate, with the
     (C-1)/C Little's-law normalization by default) and the throughput.
+
+    ``counts`` collapses identical nodes to speed classes: ``mu``/``p``
+    are then (m,) class-level values (per-*node* probabilities) with
+    ``counts[c]`` nodes per class, and the recurrence runs in O(m·C) —
+    numerically identical to the dense recurrence on the expanded
+    vectors, so n = 1e6 costs the same as n = m.
     """
     import jax
     import jax.numpy as jnp
@@ -520,10 +1238,11 @@ def mva_throughput_delays(mu, p, C: int, normalized: bool = True):
     mu = jnp.asarray(mu)
     p = jnp.asarray(p)
     n = p.shape[0]
+    w = jnp.ones(n, p.dtype) if counts is None else jnp.asarray(counts, p.dtype)
 
     def body(Q, M):
         W = (1.0 + Q) / mu
-        lam = M / jnp.dot(p, W)
+        lam = M / jnp.dot(w * p, W)
         return lam * p * W, lam
 
     Ms = jnp.arange(1, C + 1, dtype=p.dtype)
@@ -540,34 +1259,49 @@ def mva_throughput_delays(mu, p, C: int, normalized: bool = True):
     return m, lam_C
 
 
-def generalized_bound_jnp(eta, p, m, k: BoundConstants):
-    """G(p, eta) of Eq. (3) — jnp port of `theory.generalized_bound`."""
+def _class_weights(p, counts):
+    """(weights, total n) for dense (counts=None) or class-collapsed sums."""
     import jax.numpy as jnp
 
-    n = p.shape[0]
-    n2 = float(n) ** 2
+    if counts is None:
+        return jnp.ones_like(p), float(p.shape[0])
+    w = jnp.asarray(counts, p.dtype)
+    return w, float(int(np.sum(np.asarray(counts))))
+
+
+def generalized_bound_jnp(eta, p, m, k: BoundConstants, counts=None):
+    """G(p, eta) of Eq. (3) — jnp port of `theory.generalized_bound`.
+
+    With ``counts``, p/m are (m,) class-level values and every sum over
+    nodes becomes a counts-weighted sum over classes (O(m))."""
+    import jax.numpy as jnp
+
+    w, n = _class_weights(p, counts)
+    n2 = n**2
     t1 = k.A / (eta * (k.T + 1))
-    t2 = eta * k.L * k.B * jnp.sum(1.0 / (n2 * p))
-    t3 = eta**2 * k.L**2 * k.B * k.C * jnp.sum(m / (n2 * p**2))
+    t2 = eta * k.L * k.B * jnp.sum(w / (n2 * p))
+    t3 = eta**2 * k.L**2 * k.B * k.C * jnp.sum(w * m / (n2 * p**2))
     return t1 + t2 + t3
 
 
-def optimal_eta_jnp(p, m, k: BoundConstants, newton_iters: int = 20):
+def optimal_eta_jnp(p, m, k: BoundConstants, newton_iters: int = 20,
+                    counts=None):
     """argmin_eta G(p, eta) s.t. eta <= eta_max, traceable.
 
     The stationary point solves 2c eta^3 + b eta^2 = D (unique positive
     root); Newton from eta0 = cbrt(D / 2c) >= root converges monotonically
     (f is convex increasing on eta > 0).  The Theorem-1 cap
-    min(a, b) mirrors `theory.eta_max_components`.
+    min(a, b) mirrors `theory.eta_max_components`.  ``counts`` collapses
+    the node sums to counts-weighted class sums.
     """
     import jax
     import jax.numpy as jnp
 
-    n = p.shape[0]
-    n2 = float(n) ** 2
+    w, n = _class_weights(p, counts)
+    n2 = n**2
     D = k.A / (k.T + 1)
-    b = k.L * k.B * jnp.sum(1.0 / (n2 * p))
-    c = k.L**2 * k.B * k.C * jnp.sum(m / (n2 * p**2))
+    b = k.L * k.B * jnp.sum(w / (n2 * p))
+    c = k.L**2 * k.B * k.C * jnp.sum(w * m / (n2 * p**2))
 
     eta0 = jnp.cbrt(D / (2.0 * c))
 
@@ -578,27 +1312,27 @@ def optimal_eta_jnp(p, m, k: BoundConstants, newton_iters: int = 20):
 
     eta, _ = jax.lax.scan(newton, eta0, None, length=newton_iters)
     growth = 1.0 + k.rho**2
-    m_k = jnp.sum(m / (n2 * p**2))
+    m_k = jnp.sum(w * m / (n2 * p**2))
     a_cap = 1.0 / jnp.sqrt(16.0 * k.L**2 * k.C * m_k * growth)
-    b_cap = n2 / (8.0 * k.L * growth * jnp.sum(1.0 / p))
+    b_cap = n2 / (8.0 * k.L * growth * jnp.sum(w / p))
     return jnp.minimum(eta, jnp.minimum(a_cap, b_cap))
 
 
 @lru_cache(maxsize=32)
-def _bound_value_and_grad(k_tuple):
+def _bound_value_and_grad(k_tuple, counts=None):
     import jax
 
     k = BoundConstants(*k_tuple)
 
     def objective(p, mu):
-        m, _ = mva_throughput_delays(mu, p, k.C)
-        eta = optimal_eta_jnp(p, m, k)
-        return generalized_bound_jnp(eta, p, m, k)
+        m, _ = mva_throughput_delays(mu, p, k.C, counts=counts)
+        eta = optimal_eta_jnp(p, m, k, counts=counts)
+        return generalized_bound_jnp(eta, p, m, k, counts=counts)
 
     return jax.value_and_grad(objective)
 
 
-def make_bound_value_and_grad(k: BoundConstants):
+def make_bound_value_and_grad(k: BoundConstants, counts=None):
     """(value, grad) of f(p) = G(p, eta*(p)) with delays from MVA — the jnp
     port of `sampling.bound_value_and_grad`.
 
@@ -608,10 +1342,14 @@ def make_bound_value_and_grad(k: BoundConstants):
     there, so the Newton iterates' sensitivity is multiplied by ~0); when
     the cap is active, ``jnp.minimum`` routes the chain rule through the
     active branch — the same case split `sampling.bound_value_and_grad`
-    does by hand.  Cached per BoundConstants.
+    does by hand.  Cached per (BoundConstants, counts); ``counts`` (a
+    tuple of class sizes) switches everything to the O(m·C)
+    class-collapsed form with (m,) per-node class probabilities.
     """
+    if counts is not None:
+        counts = tuple(int(c) for c in counts)
     return _bound_value_and_grad(
-        (k.A, k.L, k.B, int(k.C), int(k.T), k.rho)
+        (k.A, k.L, k.B, int(k.C), int(k.T), k.rho), counts
     )
 
 
@@ -652,6 +1390,7 @@ def ctrl_refresh(
     lr: float = 0.3,
     iters: int = 4,
     floor_scale: float = 1e-5,
+    counts=None,
 ):
     """One adaptive-sampling refresh: re-optimize p from running estimates.
 
@@ -666,23 +1405,40 @@ def ctrl_refresh(
     re-floored/renormalized — so nodes that went dark keep a small positive
     sampling weight (bounded importance scales) instead of p collapsing to
     NaN or exact zeros.
+
+    With ``counts`` (a static tuple of class sizes), everything runs in
+    the O(m·C) class-collapsed form: ``p`` is the (m,) per-node
+    probability by class, ``comp``/``busy_t`` the per-class aggregates
+    (the pooled MLE is strictly better-conditioned than per-node), and
+    the exponentiated-gradient step operates on the class *masses*
+    ``z = counts · p`` (the simplex the collapsed problem lives on).
+    Within a class the dense optimum is symmetric, so the collapsed
+    optimum is exact — the adaptive loop at n = 1e6 costs the same as
+    n = m.
     """
     import jax
     import jax.numpy as jnp
 
-    vg = make_bound_value_and_grad(k)
+    vg = make_bound_value_and_grad(k, counts=counts)
     mu_hat = estimate_mu(comp, busy_t)
-    n = p.shape[0]
+    if counts is None:
+        w = jnp.ones_like(p)
+        n = p.shape[0]
+    else:
+        w = jnp.asarray(counts, p.dtype)
+        n = int(np.sum(np.asarray(counts)))
     floor = floor_scale / n
 
     def one(p, _):
         _, g = vg(p, mu_hat)
         g = jnp.where(jnp.isfinite(g), g, 0.0)
-        g = g - jnp.dot(g, p)
-        p = p * jnp.exp(-lr * g / (jnp.max(jnp.abs(g)) + 1e-12))
-        p = jnp.where(jnp.isfinite(p), p, floor)
-        p = jnp.maximum(p, floor)
-        return p / jnp.sum(p), None
+        z = w * p
+        gz = g / w
+        gz = gz - jnp.dot(gz, z)
+        z = z * jnp.exp(-lr * gz / (jnp.max(jnp.abs(gz)) + 1e-12))
+        z = jnp.where(jnp.isfinite(z), z, w * floor)
+        z = jnp.maximum(z, w * floor)
+        return (z / jnp.sum(z)) / w, None
 
     p, _ = jax.lax.scan(one, p, None, length=iters)
     return p

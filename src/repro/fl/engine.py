@@ -282,6 +282,7 @@ def run_experiment(
         eval_every=eval_every,
         engine="scan" if use_scan else "python",
         stream=flc.stream if use_scan else "host",
+        sparse=flc.sparse,
         adaptive=flc.adaptive if use_scan else False,
         refresh_every=flc.refresh_every,
         block_size=flc.block_size if use_scan else 1,
@@ -470,6 +471,10 @@ def run_matrix(
             shard = rem if (rem > 1 and B % rem == 0) else 1
         else:
             shard = D if (D > 1 and B % D == 0) else 1
+        # the scenario matrix stays on the dense stream: scenarios vmap over
+        # full (n,) mu/p rows, while the sparse O(C) path needs a static
+        # per-scenario ClassSpec — single runs pick it up via
+        # ServerConfig.sparse (run_fl), where n can be orders larger
         runner = jit_fused_runner(
             clients.device_grad, n, C, T,
             vmap_scenarios=True,

@@ -26,10 +26,11 @@ class TestDelayRecordingSemantics:
     def test_flat_array_invariant(self):
         cfg = self._cfg()
         stream = export_stream(cfg)
-        # flat form: one int32 record per CS step, aligned with (J, K, t)
+        # flat form: one int64 record per CS step, aligned with (J, K, t) —
+        # a CS-step delay is bounded by T, which exceeds int32 on T > 2^31
         assert stream.delay_steps is not None
         assert stream.delay_steps.shape == (cfg.T,)
-        assert stream.delay_steps.dtype == np.int32
+        assert stream.delay_steps.dtype == np.int64
         assert np.all(stream.delay_steps >= 0)
         # record k is the delay of the task completing at step k (node J[k]):
         # regrouping the flat pair by J in event order IS the per-node view

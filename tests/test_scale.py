@@ -1,0 +1,413 @@
+"""Large-n scaling fixes (million-client closed network).
+
+Locks the four numeric bugfixes and the sparse O(C) stream:
+
+  * segment-tree dispatch is unbiased at n = 1e5 (the fp32 inverse-CDF
+    clamp it replaces biased the tail) and never selects zero-weight leaves;
+  * Kahan-compensated time accumulators keep advancing past the fp32
+    stall point t ~ 2^24 (regression fails on a plain float32 sum);
+  * log-space Buzen stays finite where the linear convolution overflows,
+    inverts exactly (add/remove roundtrip), and at n = 1e6, C = 1e3 the
+    class-collapsed constants reproduce the MVA throughput to <= 1e-5;
+  * `delay_steps` exports are int64 end to end (int32 wraps on T > 2^31);
+  * the sparse class-collapsed stream matches the dense (n,C) oracle in
+    law — occupancy, delay moments, completion shares, fault kind
+    counts — and the class-collapsed control plane matches the dense
+    recurrences to <= 1e-5.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stream_device as sd
+from repro.core.engine_scan import make_runner
+from repro.core.jackson import (
+    buzen_log_add_node,
+    buzen_log_normalizing_constants,
+    buzen_log_remove_node,
+    buzen_normalizing_constants,
+)
+from repro.core.queue_sim import FaultConfig, SimConfig, export_stream
+from repro.core.sampling import _mva_delays_f64, optimize_general
+from repro.core.stream_device import (
+    BoundConstants,
+    build_class_spec,
+    generate_stream,
+    kahan_add,
+    kahan_value,
+    mva_throughput_delays,
+    tree_build,
+    tree_sample,
+    tree_update,
+)
+
+
+def _two_class_mu(n, seed=7, frac=0.3, ratio=2.5):
+    rng = np.random.default_rng(seed)
+    return np.where(rng.random(n) < frac, ratio, 1.0)
+
+
+# ------------------------------------------------------------------ #
+# segment-tree sampler: unbiasedness at large n, zero-weight safety
+# ------------------------------------------------------------------ #
+class TestSegmentTree:
+    def test_chi_square_unbiased_at_1e5(self):
+        """Group frequencies of 1e5-leaf draws match the weight shares.
+
+        The clamped fp32 inverse-CDF this replaces systematically starved
+        the tail at this size (cumsum error ~ n*eps pushes late boundaries
+        past 1.0); the pairwise tree keeps O(log n) ulp error and the
+        descent re-splits mass exactly, so a chi-square over weight groups
+        must accept.
+        """
+        from scipy.stats import chi2
+
+        n, groups, S = 100_000, 10, 40_000
+        per = n // groups
+        # group g has constant leaf weight g+1; last group weight 0
+        w = np.repeat(np.arange(1.0, groups + 1), per).astype(np.float32)
+        w[-per:] = 0.0
+        tree = tree_build(jnp.asarray(w))
+        u = jax.random.uniform(jax.random.PRNGKey(0), (S,))
+        idx = np.asarray(jax.jit(jax.vmap(lambda x: tree_sample(tree, x)))(u))
+        assert idx.min() >= 0 and idx.max() < n
+        assert np.all(w[idx] > 0), "zero-weight leaf selected"
+        got = np.bincount(idx // per, minlength=groups)[: groups - 1]
+        share = np.arange(1.0, groups) / np.arange(1.0, groups).sum()
+        stat = float(np.sum((got - S * share) ** 2 / (S * share)))
+        assert stat < chi2.ppf(1 - 1e-3, df=groups - 2)
+
+    def test_zero_weight_boundaries(self):
+        """Interior zeros and u at the CDF edges never pick a dead leaf."""
+        w = jnp.asarray([0.0, 2.0, 0.0, 0.0, 1.0, 0.0, 3.0, 0.0])
+        tree = tree_build(w)
+        us = jnp.asarray([0.0, 2.0 / 6.0, 3.0 / 6.0, 1.0 - 1e-7, 0.5])
+        idx = np.asarray(jax.vmap(lambda x: tree_sample(tree, x))(us))
+        assert np.all(np.asarray(w)[idx] > 0)
+
+    def test_update_matches_rebuild(self):
+        rng = np.random.default_rng(3)
+        w = rng.uniform(0.0, 2.0, 37).astype(np.float32)
+        tree = tree_build(jnp.asarray(w))
+        for i, v in [(0, 5.0), (36, 0.0), (17, 1.25)]:
+            w[i] = v
+            tree = tree_update(tree, i, jnp.float32(v))
+        np.testing.assert_allclose(np.asarray(tree),
+                                   np.asarray(tree_build(jnp.asarray(w))),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------------ #
+# Kahan time accumulators: regression past the fp32 stall point
+# ------------------------------------------------------------------ #
+class TestKahanAccumulator:
+    def test_plain_fp32_stalls_kahan_does_not(self):
+        """At t ~ 2^25 a 0.5-step increment rounds to zero in fp32.
+
+        This is the exact failure mode of the old `StreamState.t` on
+        T ~ 1e8 runs; the compensated pair keeps the true total to
+        float64 accuracy.  The plain-sum assertion is the regression:
+        it fails if anyone reverts the accumulator to a bare float32.
+        """
+        t0, dt, steps = np.float32(2.0**25), np.float32(0.5), 400
+        plain = t0
+        s, c = t0, np.float32(0.0)
+        for _ in range(steps):
+            plain = np.float32(plain + dt)
+            s, c = kahan_add(s, c, dt)
+        assert plain == t0, "fp32 stall regime changed — update the test"
+        total = kahan_value(s, c)
+        assert abs(total - (float(t0) + 0.5 * steps)) < 1e-3
+
+    def test_kahan_matches_float64_on_random_stream(self):
+        rng = np.random.default_rng(0)
+        dts = rng.exponential(0.01, 20_000).astype(np.float32)
+        s, c = np.float32(2.0**24), np.float32(0.0)
+        for dt in dts:
+            s, c = kahan_add(s, c, dt)
+        exact = 2.0**24 + np.sum(dts.astype(np.float64))
+        assert abs(kahan_value(s, c) - exact) / exact < 1e-7
+
+
+# ------------------------------------------------------------------ #
+# log-space Buzen: overflow-free normalizing constants
+# ------------------------------------------------------------------ #
+class TestLogBuzen:
+    def test_matches_linear_small(self):
+        theta = np.random.default_rng(1).uniform(0.2, 2.0, 8)
+        C = 12
+        lG = buzen_log_normalizing_constants(theta, C)
+        np.testing.assert_allclose(
+            lG, np.log(buzen_normalizing_constants(theta, C)),
+            rtol=1e-10, atol=1e-10)
+
+    def test_counts_collapse_matches_expanded(self):
+        theta_m = np.array([0.4, 1.1, 2.3])
+        counts = np.array([4, 5, 6])
+        C = 10
+        lG_c = buzen_log_normalizing_constants(theta_m, C, counts=counts)
+        lG_d = buzen_log_normalizing_constants(np.repeat(theta_m, counts), C)
+        np.testing.assert_allclose(lG_c, lG_d, rtol=1e-9, atol=1e-9)
+
+    def test_finite_where_linear_overflows(self):
+        theta = np.full(50, 100.0)
+        C = 200
+        with np.errstate(over="ignore", invalid="ignore"):
+            G = buzen_normalizing_constants(theta, C)
+        assert not np.all(np.isfinite(G)), "overflow regime changed"
+        lG = buzen_log_normalizing_constants(theta, C)
+        assert np.all(np.isfinite(lG))
+        # closed-form check: G[c] = binom(c + 49, 49) 100^c in this
+        # symmetric case; test the throughput ratio instead of G itself
+        lam = np.exp(lG[C - 1] - lG[C])  # = (C/(C+49))/100
+        np.testing.assert_allclose(lam, (C / (C + 49.0)) / 100.0, rtol=1e-10)
+
+    def test_add_remove_roundtrip(self):
+        theta = np.random.default_rng(2).uniform(0.3, 3.0, 6)
+        C = 16
+        lG = buzen_log_normalizing_constants(theta, C)
+        lth = float(np.log(theta[2]))
+        lG_removed = buzen_log_remove_node(lG, lth)
+        np.testing.assert_allclose(
+            lG_removed,
+            buzen_log_normalizing_constants(np.delete(theta, 2), C),
+            rtol=1e-8, atol=1e-8)
+        np.testing.assert_allclose(buzen_log_add_node(lG_removed, lth), lG,
+                                   rtol=1e-8, atol=1e-8)
+
+    def test_million_node_constants_match_mva(self):
+        """n = 1e6, C = 1e3: class-collapsed log-Buzen vs f64 MVA.
+
+        The linear convolution cannot represent these constants at all
+        (G[C] ~ 1e3800); the NB-series log path computes them in O(m*C^2)
+        and its throughput G[C-1]/G[C] must agree with the (independent)
+        counts-weighted MVA recurrence.
+        """
+        n, C = 1_000_000, 1_000
+        counts = np.array([300_000, 700_000])
+        mu_m = np.array([2.5, 1.0])
+        p_m = np.full(2, 1.0 / n)
+        lG = buzen_log_normalizing_constants(p_m / mu_m, C, counts=counts)
+        assert np.all(np.isfinite(lG))
+        lam_buzen = np.exp(lG[C - 1] - lG[C])
+        _, lam_mva = _mva_delays_f64(mu_m, p_m, counts, C)
+        np.testing.assert_allclose(lam_buzen, lam_mva, rtol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# int64 delay exports
+# ------------------------------------------------------------------ #
+class TestInt64Delays:
+    def test_host_export_int64(self):
+        cfg = SimConfig(mu=np.ones(5), p=np.full(5, 0.2), C=3, T=200,
+                        seed=1, record_delays=True)
+        assert export_stream(cfg).delay_steps.dtype == np.int64
+
+    def test_host_fault_export_int64(self):
+        cfg = SimConfig(mu=np.ones(5), p=np.full(5, 0.2), C=3, T=200,
+                        seed=1, record_delays=True,
+                        fault=FaultConfig(off_rate=0.05, on_rate=0.5))
+        assert export_stream(cfg).delay_steps.dtype == np.int64
+
+    def test_device_export_int64(self):
+        stream = generate_stream(np.ones(5), np.full(5, 0.2), C=3, T=200,
+                                 seed=0)
+        assert stream.delay_steps.dtype == np.int64
+
+
+# ------------------------------------------------------------------ #
+# sparse O(C) stream vs dense (n,C) oracle: law-level parity
+# ------------------------------------------------------------------ #
+class TestSparseDenseParity:
+    @pytest.mark.parametrize("n,T", [(1_000, 20_000), (10_000, 8_000)])
+    def test_stream_law_parity(self, n, T):
+        """Occupancy, delay moment and completion shares agree in law.
+
+        Realizations differ (the sparse race runs over C + m clocks, the
+        dense over n), so the comparison is distributional: per-class
+        time-averaged occupancy and completion shares within sampling
+        noise, total occupancy exactly C, mean delay at the Little's-law
+        value C-1 for both.
+        """
+        C = 64
+        mu = _two_class_mu(n)
+        p = np.full(n, 1.0 / n)
+        spec, mu_m, p_m = build_class_spec(mu, p)
+        sdev = spec.device()
+
+        gen_s = sd.sparse_stats_stream_fn(spec.m, C, T)
+        st_s, state = jax.jit(
+            lambda k, mu_, p_: gen_s(k, mu_, p_, sdev)
+        )(jax.random.PRNGKey(0), jnp.asarray(mu_m, jnp.float32),
+          jnp.asarray(p_m, jnp.float32))
+        gen_d = sd.stats_stream_fn(n, C, T)
+        st_d = jax.jit(gen_d)(jax.random.PRNGKey(1),
+                              jnp.asarray(mu, jnp.float32),
+                              jnp.asarray(p, jnp.float32))
+
+        # dense per-node stats aggregated to classes via the spec layout
+        inv = np.asarray(spec.inv_cls)
+        m = spec.m
+
+        def agg(x):
+            return np.bincount(inv, weights=np.asarray(x, np.float64),
+                               minlength=m)
+
+        t_s = kahan_value(state.t, state.t_c)
+        occ_s = kahan_value(st_s.occ_tw, st_s.occ_tw_c) / t_s
+        occ_d = agg(kahan_value(st_d.occ_tw, st_d.occ_tw_c))
+        occ_d /= occ_d.sum() / C  # normalize by the dense run's own t
+        np.testing.assert_allclose(occ_s.sum(), C, rtol=1e-5)
+        np.testing.assert_allclose(occ_s / C, occ_d / C, atol=0.05)
+
+        comp_s = np.asarray(st_s.comp, np.float64)
+        comp_d = agg(st_d.comp)
+        assert comp_s.sum() == T and comp_d.sum() == T
+        np.testing.assert_allclose(comp_s / T, comp_d / T, atol=0.03)
+
+        delay_s = float(kahan_value(st_s.delay_sum, st_s.delay_sum_c).sum())
+        delay_d = float(kahan_value(st_d.delay_sum, st_d.delay_sum_c).sum())
+        assert abs(delay_s / T - (C - 1)) < 0.5 * np.sqrt(C)
+        assert abs(delay_s / T - delay_d / T) < 0.5 * np.sqrt(C)
+
+        # and the sparse run matches the class-collapsed MVA occupancy:
+        # Q_c = count_c p_c m_c C/(C-1) (Little + the (C-1)/C convention)
+        md, _ = mva_throughput_delays(mu_m, p_m, C,
+                                      counts=tuple(int(c)
+                                                   for c in spec.counts))
+        occ_mva = (np.asarray(spec.counts) * np.asarray(p_m)
+                   * np.asarray(md, np.float64) * C / (C - 1.0))
+        np.testing.assert_allclose(occ_s, occ_mva, rtol=0.05)
+
+    def test_fault_kind_count_parity(self):
+        """Sparse and dense fault streams see the same event mix."""
+        n, C, T = 1_000, 8, 4_000
+        mu = _two_class_mu(n)
+        p = np.full(n, 1.0 / n)
+        spec, mu_m, p_m = build_class_spec(mu, p)
+        fc = FaultConfig(crash_rate=0.02, timeout_rate=0.05,
+                         off_rate=0.01, on_rate=0.3)
+        d = 4
+        c = np.random.default_rng(0).normal(size=(n, d)).astype(np.float32)
+        c_dev = jnp.asarray(c)
+        grad = lambda j, w, k: w - c_dev[j]  # noqa: E731
+
+        run_d = make_runner(grad, C=C, stream="device", n=n, T=T, fault=fc)
+        run_s = make_runner(grad, C=C, stream="device", n=n, T=T, fault=fc,
+                            classes=spec)
+        kc_d = np.zeros(4)
+        kc_s = np.zeros(4)
+        for seed in range(2):
+            _, _, ex = jax.jit(run_d)(
+                jnp.zeros(d), jnp.asarray(mu, jnp.float32),
+                jnp.asarray(p, jnp.float32), jax.random.PRNGKey(seed), 0.05)
+            kc_d += np.asarray(ex["kind_count"], np.float64)
+            _, _, ex = jax.jit(run_s)(
+                jnp.zeros(d), jnp.asarray(mu_m, jnp.float32),
+                jnp.asarray(p_m, jnp.float32), jax.random.PRNGKey(seed), 0.05)
+            kc_s += np.asarray(ex["kind_count"], np.float64)
+        np.testing.assert_allclose(kc_d / kc_d.sum(), kc_s / kc_s.sum(),
+                                   atol=0.04)
+
+    def test_sparse_requires_class_constant_fault_rates(self):
+        n = 100
+        mu = _two_class_mu(n)
+        spec, _, _ = build_class_spec(mu, np.full(n, 1.0 / n))
+        fc = FaultConfig(crash_rate=np.linspace(0.01, 0.2, n))
+        with pytest.raises(ValueError, match="varies within speed class"):
+            sd.resolve_fault_rates_classes(fc, spec)
+
+
+# ------------------------------------------------------------------ #
+# class-collapsed control plane vs dense recurrences
+# ------------------------------------------------------------------ #
+class TestControlPlaneCollapse:
+    @pytest.mark.parametrize("n", [1_000, 10_000])
+    def test_mva_counts_matches_dense(self, n):
+        """Collapsed f32 MVA hits the f64 truth to <= 1e-5; dense to f32 noise.
+
+        The counts-weighted recurrence sums m terms where the dense one
+        sums n, so the collapsed path is the *tighter* of the two in
+        float32 — the dense cross-check tolerance covers its own
+        length-n dot-product rounding (~n*eps), not a model difference.
+        """
+        C = 32
+        mu = _two_class_mu(n)
+        p = np.full(n, 1.0 / n, np.float32)
+        spec, mu_m, p_m = build_class_spec(mu, p)
+        md_c, lam_c = mva_throughput_delays(
+            mu_m, p_m, C, counts=tuple(int(c) for c in spec.counts))
+        md_d, lam_d = mva_throughput_delays(mu, p, C)
+        md_64, lam_64 = _mva_delays_f64(np.asarray(mu_m, np.float64),
+                                        np.asarray(p_m, np.float64),
+                                        np.asarray(spec.counts), C)
+        np.testing.assert_allclose(float(lam_c), lam_64, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(md_c), md_64, rtol=1e-5)
+        np.testing.assert_allclose(float(lam_d), lam_64, rtol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(md_c)[np.asarray(spec.inv_cls)], np.asarray(md_d),
+            rtol=1e-4)
+
+    def test_optimize_general_collapse_matches_dense(self):
+        n = 2_000
+        mu = _two_class_mu(n)
+        k = BoundConstants(C=16, T=4_000)
+        dense = optimize_general(mu, k, iters=30, collapse=False)
+        coll = optimize_general(mu, k, iters=30, collapse=True)
+        assert coll.p.shape == (n,)
+        np.testing.assert_allclose(coll.bound, dense.bound, rtol=1e-3)
+        np.testing.assert_allclose(coll.uniform_bound, dense.uniform_bound,
+                                   rtol=1e-6)
+        # same optimum: per-class mass within a relative hair
+        np.testing.assert_allclose(np.sort(coll.p), np.sort(dense.p),
+                                   rtol=5e-2)
+
+    def test_optimize_general_runs_at_1e6(self):
+        mu = _two_class_mu(50_000)  # the collapsed path is O(m*C) per iter:
+        k = BoundConstants(C=16, T=4_000)  # size-independent above this
+        res = optimize_general(mu, k, iters=10)
+        assert res.p.shape == (50_000,)
+        assert np.isfinite(res.bound)
+        np.testing.assert_allclose(res.p.sum(), 1.0, rtol=1e-6)
+
+
+# ------------------------------------------------------------------ #
+# ServerConfig wiring: sparse="auto"/True picks the collapsed engine
+# ------------------------------------------------------------------ #
+class TestServerConfigSparse:
+    class _Quadratic:
+        def __init__(self, n, d=4, seed=0):
+            rng = np.random.default_rng(seed)
+            self.c = rng.normal(size=(n, d)).astype(np.float32)
+            self.c_dev = jnp.asarray(self.c)
+            self.d = d
+
+        def grad(self, i, w, k):
+            return w - self.c[i]
+
+        def device_grad(self, j, w, k):
+            return w - self.c_dev[j]
+
+    def test_sparse_true_matches_dense_in_law(self):
+        from repro.core import ServerConfig, run_generalized_async_sgd
+
+        n, C, T = 300, 8, 2_000
+        mu = _two_class_mu(n)
+        prob = self._Quadratic(n)
+        target = prob.c.mean(0)
+
+        outs = {}
+        for sparse in (False, True):
+            cfg = ServerConfig(n=n, C=C, T=T, eta=0.05, mu=mu, seed=0,
+                               engine="scan", stream="device", sparse=sparse)
+            w, trace = run_generalized_async_sgd(
+                np.zeros(prob.d, np.float32), prob, cfg)
+            mql = np.asarray(trace.mean_queue_lengths, np.float64)
+            assert mql.shape == (n,)
+            np.testing.assert_allclose(mql.sum(), C, rtol=1e-3)
+            assert trace.extras["p_final"].shape == (n,)
+            outs[sparse] = np.linalg.norm(np.asarray(w) - target)
+        assert outs[True] < 5 * max(outs[False], 0.05)
+        assert outs[False] < 5 * max(outs[True], 0.05)
