@@ -514,6 +514,113 @@ def run_faults(quick: bool) -> dict:
 
 
 # --------------------------------------------------------------------- #
+# real-model LM benchmark: compiled scan/blocked engine vs the per-event
+# Python LM loop on the same LMTask shards -> BENCH_lm.json
+# --------------------------------------------------------------------- #
+def run_lm_bench(quick: bool) -> dict:
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.fl import LMTask, run_experiment
+
+    n, C = (8, 4) if quick else (16, 8)
+    results = []
+
+    def once(flc, task, engine, eval_every):
+        run_experiment(flc, "gen_async", eta=0.05, eval_every=eval_every,
+                       engine=engine, task=task)
+
+    def compare(tag, cfg, *, T, batch, seq, shard, block_size=1, reps=2,
+                note=""):
+        task = LMTask(cfg=cfg, batch_size=batch, seq_len=seq, shard_size=shard)
+        flc = FLConfig(n_clients=n, concurrency=C, server_steps=T,
+                       sampling="uniform", seed=0, block_size=block_size)
+        cold_s = _best(lambda: once(flc, task, "scan", T), 1)
+        py_s = scan_s = float("inf")
+        for _ in range(reps):  # interleaved so load noise hits both alike
+            py_s = min(py_s, _best(lambda: once(flc, task, "python", T), 1))
+            scan_s = min(scan_s, _best(lambda: once(flc, task, "scan", T), 1))
+        entry = _row(
+            tag, block_size=block_size, python_s=py_s, cold_s=cold_s,
+            warm_s=scan_s, speedup=round(py_s / scan_s, 2), note=note,
+        )
+        results.append(entry)
+        print(f"{tag:56s} {py_s:8.2f} s -> {scan_s:7.3f} s   "
+              f"x{entry['speedup']:.1f}  (cold {cold_s:.2f}s)")
+        return task, flc, scan_s
+
+    # --- dispatch-bound: tiny transformer, host sync dominates ----------- #
+    # per-event gradient work is microseconds of FLOPs; the Python loop pays
+    # a host round trip (dispatch + eval of the jitted grad + tree update)
+    # per CS step, the scan engine none — this is the >=5x headline row
+    T_d = 1000 if quick else 2000
+    tiny = smoke_config("granite-3-2b").replace(
+        num_layers=1, d_model=32, num_heads=1, num_kv_heads=1, head_dim=32,
+        d_ff=64, vocab_size=64)
+    compare(
+        f"lm_tiny_gen_async(n={n},C={C},T={T_d},L=1,d=32,b=1,s=8)", tiny,
+        T=T_d, batch=1, seq=8, shard=64, reps=3,
+        note="dispatch-bound: 1-layer d_model=32 transformer, per-event "
+        "host sync dominates the Python loop; warm scan replays the "
+        "whole run as one XLA program",
+    )
+
+    # --- compute-bound: smoke config, real GEMM-heavy gradient ----------- #
+    T_c = 48 if quick else 240
+    smoke = smoke_config("granite-3-2b")
+    task_c, flc_c, scan_c = compare(
+        f"lm_smoke_gen_async(n={n},C={C},T={T_c},L=2,d=256,b=8,s=64)", smoke,
+        T=T_c, batch=8, seq=64, shard=128, reps=2,
+        note="compute-bound: smoke transformer (2L, d_model=256, vocab=512)"
+        ", both engines dominated by the same gradient FLOPs; speedup is "
+        "the removed dispatch overhead only on a FLOP-saturated host",
+    )
+
+    # --- micro-block gradient batching on the real model ----------------- #
+    E = 4 if quick else 8
+    flc_b = flc_c.replace(block_size=E)
+    blk_cold = _best(lambda: once(flc_b, task_c, "scan", T_c), 1)
+    blk_warm = _best(lambda: once(flc_b, task_c, "scan", T_c), 2)
+    results.append(_row(
+        f"lm_smoke_gen_async(n={n},C={C},T={T_c},L=2,d=256,b=8,s=64)",
+        block_size=E, cold_s=blk_cold, warm_s=blk_warm,
+        speedup=round(scan_c / blk_warm, 2),
+        note="blocked scan vs per-event scan (speedup vs the E=1 warm row): "
+        "E transformer gradients at E distinct dispatch snapshots batched "
+        "into one vmapped call.  On this host the batching LOSES: vmapping "
+        "the gradient over E different parameter vectors multiplies the "
+        "weight working set by E, and XLA:CPU lowers the weight-batched "
+        "GEMMs to loops, so a narrow cache-bound CPU pays ~linear-in-E "
+        "per-event cost.  The mechanism targets accelerators, where the "
+        "per-step latency the batching removes dominates (the "
+        "classification rows in BENCH_block.json, whose single shared "
+        "weight matrix keeps the working set flat, do win on CPU)",
+    ))
+    print(f"lm_smoke blocked E={E}: {blk_warm:7.3f}s  "
+          f"x{scan_c / blk_warm:.2f} vs per-event scan")
+
+    return {
+        "bench": "lm",
+        "quick": quick,
+        "devices": _devices(),
+        "dtype": DTYPE,
+        "cpu_count": os.cpu_count(),
+        "backend": jax.default_backend(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "results": results,
+        "note": "both engines consume identical LMTask shards (same jitted "
+        "gradient, same minibatches -> scan == python to float tolerance); "
+        "python_s is the per-event Python LM loop, warm_s the compiled "
+        "engine after its one-off trace+compile (cold_s).  Recorded on "
+        "this host honestly: a narrow CPU container is FLOP-saturated on "
+        "the smoke config, so its speedup reflects dispatch-overhead "
+        "removal only, and micro-block batching loses outright (see the "
+        "block_size row note) — the dispatch-bound tiny row is where the "
+        ">=5x claim lives",
+    }
+
+
+# --------------------------------------------------------------------- #
 # stream benchmark: fused on-device event generation vs the host-export
 # path, at scenario-matrix scale -> BENCH_stream.json
 # --------------------------------------------------------------------- #
@@ -788,21 +895,27 @@ def main() -> None:
                     help="benchmark the sparse O(C) stream + class-collapsed "
                     "control plane across n up to 1e6: per-event cost must "
                     "stay flat in n (writes BENCH_scale.json)")
+    ap.add_argument("--lm", action="store_true",
+                    help="benchmark the real-model path: compiled scan / "
+                    "blocked engine vs the per-event Python LM loop on "
+                    "identical LMTask shards (writes BENCH_lm.json)")
     ap.add_argument("--out", default=None, help="output JSON path")
     args = ap.parse_args()
-    if sum((args.stream, args.block, args.faults, args.scale)) > 1:
-        ap.error("--stream, --block, --faults and --scale are mutually "
+    if sum((args.stream, args.block, args.faults, args.scale, args.lm)) > 1:
+        ap.error("--stream, --block, --faults, --scale and --lm are mutually "
                  "exclusive")
     name = ("BENCH_stream.json" if args.stream
             else "BENCH_block.json" if args.block
             else "BENCH_faults.json" if args.faults
             else "BENCH_scale.json" if args.scale
+            else "BENCH_lm.json" if args.lm
             else "BENCH_engine.json")
     out = args.out or str(Path(__file__).resolve().parent.parent / name)
     payload = (run_stream(args.quick) if args.stream
                else run_block(args.quick) if args.block
                else run_faults(args.quick) if args.faults
                else run_scale(args.quick) if args.scale
+               else run_lm_bench(args.quick) if args.lm
                else run(args.quick))
     Path(out).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"\nwrote {out}")

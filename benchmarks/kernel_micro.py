@@ -54,3 +54,76 @@ def bench_kernels():
     gbps = 3 * 4e6 * 4 / us / 1e3
     out.append(row("kernel_weighted_update_4M", us, f"gb_s={gbps:.1f}"))
     return out
+
+
+def sweep_block_tiles(P: int = 8192, rows_R: int = 17, Es=(8, 16),
+                      iters: int = 3, save: bool = True):
+    """Column-tile sweep for the blocked-update kernels (autotune source).
+
+    Times `block_prefix_update` / `block_scatter_rows` at every tile in
+    `autotune.TILE_CANDIDATES` for each micro-block size E, records each
+    winner in the cached autotune table keyed (backend, P, E) — the table
+    `repro.kernels.ops` consults on the blocked engine's pallas path.  On
+    CPU the kernels execute in interpret mode: those timings are honest for
+    this backend (and stored under "cpu", so they never leak to TPU) but
+    Python-speed — the sweep sizes default small accordingly.
+    """
+    from repro.kernels import autotune
+    from repro.kernels.weighted_update import (
+        BLOCK_TILE,
+        block_prefix_update,
+        block_scatter_rows,
+    )
+
+    backend = jax.default_backend()
+    interpret = backend != "tpu"
+    if P % BLOCK_TILE:
+        raise ValueError(f"P={P} must be a multiple of BLOCK_TILE={BLOCK_TILE}")
+    rng = np.random.default_rng(0)
+    out = []
+    for E in Es:
+        snaps = jnp.asarray(rng.normal(size=(rows_R, P)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(P,)), jnp.float32)
+        D = jnp.asarray(rng.normal(size=(E, P)) * 1e-3, jnp.float32)
+        slots = jnp.asarray(rng.integers(0, rows_R - 1, size=E), jnp.int32)
+        for name, fn, mid in (
+            ("block_prefix_update", block_prefix_update, D),
+            ("block_scatter_rows", block_scatter_rows, D),
+        ):
+            best_tile, best_us = None, float("inf")
+            for tile in autotune.TILE_CANDIDATES:
+                if tile > P:
+                    continue
+                us = timeit(
+                    lambda: jax.block_until_ready(
+                        fn(snaps, w, mid, slots, interpret=interpret, tile=tile)
+                    ),
+                    iters=iters,
+                )
+                out.append(row(f"{name}_P{P}_E{E}_tile{tile}", us,
+                               f"backend={backend}"))
+                if us < best_us:
+                    best_tile, best_us = tile, us
+            if save and best_tile is not None:
+                autotune.record(name, backend, P, E, best_tile, us=best_us)
+            out.append(row(f"{name}_P{P}_E{E}_best", best_us,
+                           f"tile={best_tile}"))
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep-tiles", action="store_true",
+                    help="tile sweep for the blocked-update kernels; "
+                         "records winners in the autotune table")
+    ap.add_argument("--P", type=int, default=8192)
+    ap.add_argument("--E", type=int, nargs="*", default=[8, 16])
+    ap.add_argument("--no-save", action="store_true")
+    a = ap.parse_args()
+    rows = (sweep_block_tiles(P=a.P, Es=tuple(a.E), save=not a.no_save)
+            if a.sweep_tiles else bench_kernels())
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -282,7 +282,7 @@ def run_checkpointed(
     flat_mode = default_update and unpack is not None
     if E > 1 and not flat_mode:
         raise ValueError(
-            "block_size > 1 requires uniform-dtype parameters "
+            "block_size > 1 requires all-float parameters "
             "(flat-packed snapshot storage)"
         )
     update_step = _make_update_step(
@@ -600,7 +600,7 @@ def run_checkpointed_host_blocked(
     pack, unpack, enc = _snapshot_codec(w0, snapshot_dtype, pad_to=pad_to)
     if unpack is None:
         raise ValueError(
-            "block_size > 1 requires uniform-dtype parameters "
+            "block_size > 1 requires all-float parameters "
             "(flat-packed snapshot storage)"
         )
     block_step = _make_block_step(

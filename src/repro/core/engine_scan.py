@@ -257,12 +257,17 @@ def blocked_inputs_batch(
 # shared pieces: snapshot codec + the algorithm step
 # ------------------------------------------------------------------ #
 def _snapshot_codec(w0, snapshot_dtype=None, pad_to: int = 1):
-    """Flat-packed snapshot storage when all leaves share a dtype.
+    """Flat-packed snapshot storage for any all-float parameter pytree.
 
     The ring buffer then is ONE (C, P) array — a single gather/scatter
     per step instead of two per leaf, which matters for small models
-    where per-op overhead inside the scan dominates.  Mixed-dtype trees
-    fall back to per-leaf (C, ...) buffers.
+    where per-op overhead inside the scan dominates.  Uniform-dtype trees
+    pack losslessly; mixed *float* trees (e.g. bf16 matmul weights with
+    fp32 norms — the real-model presets) pack per-leaf into the common
+    promoted dtype (``jnp.result_type`` over the leaves, so bf16+fp32
+    packs to an fp32 master vector) and ``unpack`` casts each leaf back
+    to its original dtype.  Only trees with non-float leaves fall back to
+    per-leaf (C, ...) buffers.
 
     Returns ``(pack, unpack, enc)``: ``pack`` flattens a pytree to the
     padded compute-dtype vector, ``unpack`` restores the pytree from a
@@ -276,15 +281,16 @@ def _snapshot_codec(w0, snapshot_dtype=None, pad_to: int = 1):
     import jax.numpy as jnp
 
     leaves, treedef = jax.tree_util.tree_flatten(w0)
-    dtypes = {jnp.asarray(l).dtype for l in leaves}
-    if len(dtypes) != 1:
+    leaf_dtypes = [jnp.asarray(l).dtype for l in leaves]
+    dtypes = set(leaf_dtypes)
+    if not all(jnp.issubdtype(d, jnp.inexact) for d in dtypes):
         if snapshot_dtype is not None:
             raise ValueError(
-                "snapshot_dtype requires uniform-dtype parameters "
+                "snapshot_dtype requires all-float parameters "
                 "(flat-packed snapshot storage)"
             )
-        return None, None, None  # per-leaf buffers
-    compute_dtype = dtypes.pop()
+        return None, None, None  # non-float leaves: per-leaf buffers
+    compute_dtype = jnp.result_type(*dtypes) if len(dtypes) > 1 else dtypes.pop()
     store_dtype = (
         jnp.dtype(snapshot_dtype) if snapshot_dtype is not None else compute_dtype
     )
@@ -296,14 +302,16 @@ def _snapshot_codec(w0, snapshot_dtype=None, pad_to: int = 1):
 
     def pack(w):
         ls = jax.tree_util.tree_leaves(w)
-        flat = jnp.concatenate([jnp.ravel(x) for x in ls])
+        flat = jnp.concatenate(
+            [jnp.ravel(x).astype(compute_dtype) for x in ls]
+        )
         if P_pad != P:
             flat = jnp.pad(flat, (0, P_pad - P))
         return flat
 
     def unpack(flat):
         ls = [
-            flat[offs[i] : offs[i + 1]].reshape(shapes[i]).astype(compute_dtype)
+            flat[offs[i] : offs[i + 1]].reshape(shapes[i]).astype(leaf_dtypes[i])
             for i in range(len(shapes))
         ]
         return jax.tree_util.tree_unflatten(treedef, ls)
@@ -548,10 +556,9 @@ def _make_block_step(
     import jax.numpy as jnp
 
     if kernel == "pallas":
-        from ..kernels.weighted_update import (
-            block_prefix_update,
-            block_scatter_rows,
-        )
+        # the ops wrappers consult the cached autotune table (backend, P, E)
+        # for the column tile; a miss is the plain full-BLOCK_TILE kernel
+        from ..kernels.ops import block_prefix_update, block_scatter_rows
 
         apply_block = partial(block_prefix_update, interpret=interpret)
         scatter_rows = partial(block_scatter_rows, interpret=interpret)
@@ -853,7 +860,7 @@ def _make_host_block_runner(
         pack, unpack, enc = _snapshot_codec(w0, snapshot_dtype, pad_to=pad_to)
         if unpack is None:
             raise ValueError(
-                "block_size > 1 requires uniform-dtype parameters "
+                "block_size > 1 requires all-float parameters "
                 "(flat-packed snapshot storage)"
             )
         block_step = _make_block_step(
@@ -1333,7 +1340,7 @@ def make_fused_runner(
         flat_mode = default_update and unpack is not None
         if E > 1 and not flat_mode:
             raise ValueError(
-                "block_size > 1 requires uniform-dtype parameters "
+                "block_size > 1 requires all-float parameters "
                 "(flat-packed snapshot storage)"
             )
         update_step = _make_update_step(

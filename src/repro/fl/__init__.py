@@ -1,9 +1,13 @@
 from .engine import (
+    ClassificationTask,
     DeviceFLClients,
+    DeviceTaskClients,
     FLClients,
     FLRun,
+    LMTask,
     MatrixResult,
     MLPClassifier,
+    TaskSetup,
     run_experiment,
     run_matrix,
     sampling_for,

@@ -40,6 +40,10 @@ __all__ = [
     "MLPClassifier",
     "FLClients",
     "DeviceFLClients",
+    "DeviceTaskClients",
+    "TaskSetup",
+    "ClassificationTask",
+    "LMTask",
     "FLRun",
     "MatrixResult",
     "run_experiment",
@@ -142,6 +146,66 @@ class DeviceFLClients:
         return self._loss_grad(params, {"x": x, "y": y})
 
 
+class DeviceTaskClients:
+    """Device-resident gradient source for an arbitrary ``(loss_fn, params)``.
+
+    The model-generic counterpart of `DeviceFLClients`: any loss
+    ``loss_fn(params, batch) -> scalar`` over a dict batch, with the
+    per-client datasets stacked as device-resident ``(n, m, ...)`` arrays.
+    ``device_grad`` is traceable (client id / server step arrive as abstract
+    scalars) and uses the same pre-drawn-window idiom: one offset-table
+    lookup plus one `jax.lax.dynamic_slice` per leaf per step.
+
+    It also exposes a host ``grad`` for the per-event Python loop: the SAME
+    jitted ``device_grad`` called with concrete scalars, so the Python
+    oracle consumes bit-identical minibatches to the compiled engine —
+    which is what makes exact scan-vs-python parity checks possible for
+    real models (the LM path), not just the MLP.
+    """
+
+    OFFSET_BLOCK = 8192  # pre-drawn window offsets, reused cyclically
+
+    def __init__(self, loss_fn, shards: dict, batch_size: int, seed: int = 0):
+        self.shards = {k: jnp.asarray(v) for k, v in shards.items()}
+        first = next(iter(self.shards.values()))
+        self.n_clients, shard_size = int(first.shape[0]), int(first.shape[1])
+        for k, v in self.shards.items():
+            if v.shape[:2] != (self.n_clients, shard_size):
+                raise ValueError(f"shard {k!r}: leading dims must agree")
+        if batch_size > shard_size:
+            raise ValueError("batch_size must be <= shard size")
+        self.batch_size = int(batch_size)
+        self.loss_fn = loss_fn
+        self._starts = jax.random.randint(
+            jax.random.PRNGKey(seed),
+            (self.OFFSET_BLOCK,),
+            0,
+            shard_size - batch_size + 1,
+        )
+        self._loss_grad = jax.grad(loss_fn)
+        self._jit_grad = jax.jit(self.device_grad)
+        self.grad_calls = 0
+
+    def client_batch(self, client_id, server_step) -> dict:
+        start = self._starts[server_step % self.OFFSET_BLOCK]
+        B = self.batch_size
+
+        def window(a):
+            starts = (client_id, start) + (0,) * (a.ndim - 2)
+            sizes = (1, B) + a.shape[2:]
+            return jax.lax.dynamic_slice(a, starts, sizes)[0]
+
+        return {k: window(v) for k, v in self.shards.items()}
+
+    def device_grad(self, client_id, params, server_step):
+        return self._loss_grad(params, self.client_batch(client_id, server_step))
+
+    def grad(self, client_id, params, server_step):
+        # per-event Python loop entry: same jitted computation, concrete ids
+        self.grad_calls += 1
+        return self._jit_grad(jnp.int32(client_id), params, jnp.int32(server_step))
+
+
 # ------------------------------------------------------------------ #
 def sampling_for(flc: FLConfig, mu: np.ndarray, constants: BoundConstants | None = None) -> np.ndarray:
     """Sampling probabilities per the configured policy."""
@@ -193,22 +257,126 @@ def _accuracy_fn(model: MLPClassifier, data: FederatedClassification, batch: int
     return acc
 
 
-def _cached_fl_setup(data: FederatedClassification, seed: int):
-    """(model, device clients, eval fn) memoized on the dataset object.
+@dataclass
+class TaskSetup:
+    """What a task hands the engine: initial params, a device gradient
+    source (traceable ``device_grad`` + host ``grad``), and a jitted eval
+    fn returning a device scalar (accuracy for classification, loss for
+    LM)."""
+
+    params: Any
+    clients: Any
+    eval_fn: Callable
+    model: Any = None
+
+
+@dataclass
+class ClassificationTask:
+    """The paper's §5 task: an MLP over `FederatedClassification` shards.
+
+    This is the default when no task is passed — `run_experiment` /
+    `run_matrix` behave exactly as before the task abstraction existed.
+    """
+
+    batch_size: int = 128
+    shard_size: int = 1024
+    hidden: int = 128
+
+    def cache_key(self):
+        return ("classification", self.batch_size, self.shard_size, self.hidden)
+
+    def build(self, data: FederatedClassification, seed: int, n_clients: int) -> TaskSetup:
+        if data is None:
+            raise ValueError("ClassificationTask requires a dataset")
+        model = MLPClassifier(data.dim, data.num_classes, hidden=self.hidden, seed=seed)
+        clients = DeviceFLClients(
+            data, model, batch_size=self.batch_size, shard_size=self.shard_size,
+            seed=seed,
+        )
+        return TaskSetup(
+            params=model.init_params,
+            clients=clients,
+            eval_fn=_accuracy_fn(model, data),
+            model=model,
+        )
+
+
+@dataclass
+class LMTask:
+    """Async-LM pre-training task: ``api.loss_fn`` over a real ModelConfig.
+
+    Each client holds a fixed non-iid shard materialized from its own
+    `SyntheticLMStream` (seed ``seed*1000 + i`` — the same per-client
+    streams as the historical Python LM loop), stacked to device-resident
+    ``(n, m, S)`` token/label arrays for the compiled engine.  The eval
+    metric is the loss on a held-out stream (seed 9999), as a jitted device
+    scalar, so it works both as a host callback and inside the scan.
+
+    With ``cfg.use_pallas`` the gradient runs through the Pallas
+    flash-attention / SSD / grouped-matmul kernels, whose backward passes
+    are the jnp-reference VJPs (`repro.kernels.flash_attention` et al.).
+    """
+
+    cfg: Any                      # repro.configs.base.ModelConfig (hashable)
+    batch_size: int = 4
+    seq_len: int = 64
+    shard_size: int = 256
+    eval_batch: int = 16
+
+    def cache_key(self):
+        return ("lm", self.cfg, self.batch_size, self.seq_len,
+                self.shard_size, self.eval_batch)
+
+    def build(self, data, seed: int, n_clients: int) -> TaskSetup:
+        from repro.data.pipeline import SyntheticLMStream
+        from repro.models import api
+        from repro.models.module import init_params
+
+        cfg = self.cfg
+        toks = np.empty((n_clients, self.shard_size, self.seq_len), np.int32)
+        labs = np.empty_like(toks)
+        for i in range(n_clients):
+            stream = SyntheticLMStream(cfg.vocab_size, self.seq_len,
+                                       seed=seed * 1000 + i)
+            b = stream.batch(self.shard_size)
+            toks[i], labs[i] = b["tokens"], b["labels"]
+
+        def loss(params, batch):
+            return api.loss_fn(params, batch, cfg)[0]
+
+        clients = DeviceTaskClients(
+            loss, {"tokens": toks, "labels": labs},
+            batch_size=self.batch_size, seed=seed,
+        )
+        params0 = init_params(api.model_meta(cfg), jax.random.PRNGKey(seed))
+        ev_stream = SyntheticLMStream(cfg.vocab_size, self.seq_len, seed=9999)
+        ev = {k: jnp.asarray(v) for k, v in ev_stream.batch(self.eval_batch).items()}
+        eval_fn = jax.jit(lambda params: loss(params, ev))
+        return TaskSetup(params=params0, clients=clients, eval_fn=eval_fn)
+
+
+def _cached_fl_setup(data: FederatedClassification | None, seed: int,
+                     task=None, n_clients: int | None = None) -> TaskSetup:
+    """Task setup (params, device clients, eval fn) memoized per (seed, task).
 
     The compiled-engine memoization (`jit_runner` / `jit_fused_runner`) keys
     on the gradient-source and eval-fn *objects*; rebuilding them per
-    `run_matrix` call would defeat it.  Caching them on ``data`` lets sweeps
+    `run_matrix` call would defeat it.  Caching them on the dataset (or,
+    for dataset-free tasks like `LMTask`, on the task object) lets sweeps
     (e.g. over eval cadence, eta or sampling policies) reuse one compiled
-    program — and the cache dies with the dataset instead of pinning device
-    shards globally.
+    program — and the cache dies with its owner instead of pinning device
+    shards globally.  The key includes ``task.cache_key()`` — the dataset
+    alone is NOT enough: two different tasks (or model configs) over the
+    same data must not silently share one model.
     """
-    cache = data.__dict__.setdefault("_fl_setup_cache", {})
-    if seed not in cache:
-        model = MLPClassifier(data.dim, data.num_classes, seed=seed)
-        clients = DeviceFLClients(data, model, seed=seed)
-        cache[seed] = (model, clients, _accuracy_fn(model, data))
-    return cache[seed]
+    task = task if task is not None else ClassificationTask()
+    owner = data if data is not None else task
+    cache = owner.__dict__.setdefault("_fl_setup_cache", {})
+    key = (seed, task.cache_key())
+    if key not in cache:
+        n = n_clients if n_clients is not None else getattr(data, "n_clients", None)
+        cache[key] = task.build(data, seed, n)
+    return cache[key]
 
 
 def run_experiment(
@@ -218,6 +386,7 @@ def run_experiment(
     eval_every: int = 10,
     data: FederatedClassification | None = None,
     engine: str | None = None,
+    task=None,
     faults=None,
     guard=None,
     ckpt_dir: str | None = None,
@@ -225,6 +394,12 @@ def run_experiment(
     resume: bool = False,
 ) -> FLRun:
     """One training run of {gen_async, async_sgd, fedbuff, fedavg, favano}.
+
+    ``task`` picks the model/workload (default `ClassificationTask` — the
+    paper's MLP): any object with ``cache_key()`` and ``build(data, seed,
+    n_clients) -> TaskSetup`` plugs in, e.g. `LMTask` for async LM
+    pre-training of the real transformer/Mamba2 configs through the same
+    queueing engine (``eval_acc`` then carries eval *loss*).
 
     ``engine`` (default: ``flc.engine``) picks the server loop for the
     asynchronous methods: "python" is the per-event reference loop, "scan"
@@ -254,7 +429,9 @@ def run_experiment(
         engine = flc.engine if engine is None else engine
     if engine not in ("python", "scan"):
         raise ValueError(engine)
-    data = data or FederatedClassification(n_clients=flc.n_clients, seed=flc.seed)
+    classification = task is None or isinstance(task, ClassificationTask)
+    if classification:
+        data = data or FederatedClassification(n_clients=flc.n_clients, seed=flc.seed)
     mu = make_client_speeds(flc.n_clients, flc.frac_fast, flc.speed_ratio, seed=flc.seed)
 
     async_method = method in ("gen_async", "async_sgd", "fedbuff")
@@ -263,13 +440,17 @@ def run_experiment(
         raise ValueError(
             "adaptive sampling requires engine='scan' with stream='device'"
         )
-    clients: FLClients | DeviceFLClients
-    if use_scan:
-        model, clients, acc_fn = _cached_fl_setup(data, flc.seed)
+    if use_scan or not classification:
+        # device-resident task setup; the Python loop for non-classification
+        # tasks drives the SAME jitted gradient via the host `grad` entry
+        setup = _cached_fl_setup(data, flc.seed, task, n_clients=flc.n_clients)
+        w0, clients, acc_fn = setup.params, setup.clients, setup.eval_fn
     else:
+        # per-event Python loop for classification: streaming host batches
         model = MLPClassifier(data.dim, data.num_classes, seed=flc.seed)
         clients = FLClients(data, model)
         acc_fn = _accuracy_fn(model, data)
+        w0 = model.init_params
 
     base = ServerConfig(
         n=flc.n_clients,
@@ -298,19 +479,19 @@ def run_experiment(
     if method == "gen_async":
         p = sampling_for(flc, mu)
         cfg = replace(base, p=p, weighting="importance")
-        w, tr = run_generalized_async_sgd(model.init_params, clients, cfg, eval_fn=acc_fn)
+        w, tr = run_generalized_async_sgd(w0, clients, cfg, eval_fn=acc_fn)
     elif method == "async_sgd":
         cfg = replace(base, weighting="plain")
-        w, tr = run_generalized_async_sgd(model.init_params, clients, cfg, eval_fn=acc_fn)
+        w, tr = run_generalized_async_sgd(w0, clients, cfg, eval_fn=acc_fn)
     elif method == "fedbuff":
         cfg = replace(base, weighting="plain")
-        w, tr = run_fedbuff(model.init_params, clients, cfg, Z=flc.fedbuff_Z, eval_fn=acc_fn)
+        w, tr = run_fedbuff(w0, clients, cfg, Z=flc.fedbuff_Z, eval_fn=acc_fn)
     elif method == "fedavg":
         cfg = replace(base, weighting="plain")
-        w, tr = run_fedavg(model.init_params, clients, cfg, eval_fn=acc_fn)
+        w, tr = run_fedavg(w0, clients, cfg, eval_fn=acc_fn)
     elif method == "favano":
         cfg = replace(base, weighting="plain")
-        w, tr = run_favano(model.init_params, clients, cfg,
+        w, tr = run_favano(w0, clients, cfg,
                            period=1.0 / float(np.median(mu)), eval_fn=acc_fn)
     else:
         raise ValueError(method)
@@ -371,8 +552,13 @@ def run_matrix(
     block_size: int | str | None = None,
     devices: int | None = None,
     segmentation: str | None = None,
+    task=None,
 ) -> MatrixResult:
     """Run the whole scenario grid in ONE compiled call.
+
+    ``task`` picks the model/workload exactly as in `run_experiment`
+    (default: the paper's classification MLP; `LMTask` trains the real LM
+    configs, with ``eval_acc``/``final_acc`` then carrying eval loss).
 
     ``stream`` (default ``flc.stream``) picks the event source:
 
@@ -419,8 +605,10 @@ def run_matrix(
     segmentation = flc.segmentation if segmentation is None else segmentation
     speed_ratios = (flc.speed_ratio,) if speed_ratios is None else tuple(speed_ratios)
     seeds, policies = tuple(seeds), tuple(policies)
-    data = data or FederatedClassification(n_clients=flc.n_clients, seed=flc.seed)
-    model, clients, acc_fn = _cached_fl_setup(data, flc.seed)
+    if task is None or isinstance(task, ClassificationTask):
+        data = data or FederatedClassification(n_clients=flc.n_clients, seed=flc.seed)
+    setup = _cached_fl_setup(data, flc.seed, task, n_clients=flc.n_clients)
+    clients, acc_fn = setup.clients, setup.eval_fn
 
     n, C, T = flc.n_clients, flc.concurrency, flc.server_steps
     S, P, H = len(seeds), len(policies), len(speed_ratios)
@@ -432,7 +620,7 @@ def run_matrix(
     for pi, pol in enumerate(policies):
         for hi in range(H):
             p_vectors[pi, hi] = sampling_for(replace(flc, sampling=pol), mus[hi])
-    w0 = model.init_params
+    w0 = setup.params
     extras: dict = {"stream": stream}
 
     if stream == "device":

@@ -1,0 +1,96 @@
+"""Cached tile autotuning for the blocked-update Pallas kernels.
+
+`block_prefix_update` / `block_scatter_rows` stream (R, P) ring-buffer
+column tiles; the best tile width depends on the backend, the packed
+parameter length P and the micro-block size E (wider tiles amortize grid
+overhead, narrower tiles fit more snapshot rows per VMEM residency).  The
+sweep lives in ``benchmarks/kernel_micro.py`` (`--sweep-tiles`); this
+module only stores and serves its results:
+
+    table[(kernel, backend, P, E)] = best tile width
+
+The table persists as JSON next to the benchmark outputs
+(``benchmarks/autotune_kernels.json``, override with the
+``REPRO_AUTOTUNE_TABLE`` env var) and is consulted by the
+`repro.kernels.ops` wrappers — and therefore by the blocked scan engine,
+whose ``update="pallas"`` path calls the kernels through ops.  A miss
+returns ``None``, which the kernels map to the full ``BLOCK_TILE`` —
+exactly the pre-autotune behaviour, so shipping no table changes nothing.
+
+Tiles must divide ``BLOCK_TILE`` (1024): the engine pads the packed vector
+to a BLOCK_TILE multiple once at init, so every divisor tiles it evenly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+TILE_CANDIDATES = (128, 256, 512, 1024)
+
+_DEFAULT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))),
+    "benchmarks",
+    "autotune_kernels.json",
+)
+
+_lock = threading.Lock()
+_cache: dict | None = None
+_cache_path: str | None = None
+
+
+def table_path() -> str:
+    return os.environ.get("REPRO_AUTOTUNE_TABLE", _DEFAULT_PATH)
+
+
+def _key(kernel: str, backend: str, P: int, E: int) -> str:
+    return f"{kernel}|{backend}|P={int(P)}|E={int(E)}"
+
+
+def load_table(path: str | None = None) -> dict:
+    """Load (and memoize) the autotune table; {} when absent/unreadable."""
+    global _cache, _cache_path
+    path = path or table_path()
+    with _lock:
+        if _cache is not None and _cache_path == path:
+            return _cache
+        try:
+            with open(path) as f:
+                table = json.load(f)
+        except (OSError, ValueError):
+            table = {}
+        _cache, _cache_path = table, path
+        return table
+
+
+def save_table(table: dict, path: str | None = None) -> str:
+    """Persist the table and refresh the in-process cache."""
+    global _cache, _cache_path
+    path = path or table_path()
+    with _lock:
+        with open(path, "w") as f:
+            json.dump(table, f, indent=2, sort_keys=True)
+            f.write("\n")
+        _cache, _cache_path = dict(table), path
+    return path
+
+
+def lookup(kernel: str, backend: str, P: int, E: int) -> int | None:
+    """Best tile for (kernel, backend, P, E), or None (=> BLOCK_TILE)."""
+    entry = load_table().get(_key(kernel, backend, P, E))
+    if entry is None:
+        return None
+    tile = int(entry["tile"] if isinstance(entry, dict) else entry)
+    return tile if tile in TILE_CANDIDATES else None
+
+
+def record(kernel: str, backend: str, P: int, E: int, tile: int,
+           us: float | None = None, path: str | None = None) -> None:
+    """Record one sweep winner and persist the updated table."""
+    table = dict(load_table(path))
+    entry: dict = {"tile": int(tile)}
+    if us is not None:
+        entry["us"] = round(float(us), 3)
+    table[_key(kernel, backend, P, E)] = entry
+    save_table(table, path)

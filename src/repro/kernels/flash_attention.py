@@ -6,8 +6,10 @@ Online-softmax flash attention tiled for TPU VMEM:
 GQA is expressed in the K/V BlockSpec index maps (q head h reads kv head
 h // group).  Sliding window masks blocks outside [q-window+1, q].
 
-The backward pass falls back to the jnp reference via custom_vjp — the
-kernel targets the serving/prefill hot path; training uses XLA attention.
+The backward pass falls back to the jnp reference via custom_vjp
+(`_fa_bwd`): the kernel computes the primal on the training hot path too,
+and gradients come from `jax.vjp` of `flash_attention_ref` — exact, since
+the reference and the kernel implement the same fp32 masked softmax.
 """
 from __future__ import annotations
 
@@ -66,19 +68,16 @@ def _fa_kernel(
         o_ref[0, ...] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret")
-)
-def flash_attention(
+def _fa_impl(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
-    causal: bool = True,
-    window: int = 0,
-    q_offset: int = 0,
-    bq: int = DEFAULT_BQ,
-    bk: int = DEFAULT_BK,
-    interpret: bool = True,
+    causal: bool,
+    window: int,
+    q_offset: int,
+    bq: int,
+    bk: int,
+    interpret: bool,
 ) -> jax.Array:
     """q: (B,S,H,D); k,v: (B,T,K,D) with H % K == 0.  Returns (B,S,H,D)."""
     B, S, H, D = q.shape
@@ -128,3 +127,53 @@ def flash_attention(
         interpret=interpret,
     )(qh, kh, vh)
     return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _fa_vjp(q, k, v, causal, window, q_offset, bq, bk, interpret):
+    return _fa_impl(q, k, v, causal, window, q_offset, bq, bk, interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, q_offset, bq, bk, interpret):
+    out = _fa_impl(q, k, v, causal, window, q_offset, bq, bk, interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, q_offset, bq, bk, interpret, res, g):
+    from .ref import flash_attention_ref
+
+    q, k, v = res
+    _, pullback = jax.vjp(
+        lambda q_, k_, v_: flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window, q_offset=q_offset
+        ),
+        q, k, v,
+    )
+    return pullback(g)
+
+
+_fa_vjp.defvjp(_fa_fwd, _fa_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Differentiable wrapper: Pallas kernel forward, jnp-reference VJP.
+
+    The backward recomputes attention with `flash_attention_ref` under
+    `jax.vjp` from the saved (q, k, v) residuals — exact (same fp32 masked
+    softmax), memory-light (no attention matrix saved), and it keeps the
+    training hot path on the fused kernel for the primal.
+    """
+    return _fa_vjp(q, k, v, causal, window, q_offset, bq, bk, interpret)

@@ -37,14 +37,13 @@ def _gmm_kernel(x_ref, w_ref, o_ref, acc, *, nd: int):
         o_ref[0, ...] = acc[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
-def moe_gmm(
+def _gmm_impl(
     x: jax.Array,  # (E, C, D)
     w: jax.Array,  # (E, D, F)
-    bc: int = 128,
-    bf: int = 128,
-    bd: int = 128,
-    interpret: bool = True,
+    bc: int,
+    bf: int,
+    bd: int,
+    interpret: bool,
 ) -> jax.Array:
     E, C, D = x.shape
     F = w.shape[-1]
@@ -65,3 +64,42 @@ def moe_gmm(
         interpret=interpret,
     )(x, w)
     return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _gmm_vjp(x, w, bc, bf, bd, interpret):
+    return _gmm_impl(x, w, bc, bf, bd, interpret)
+
+
+def _gmm_fwd(x, w, bc, bf, bd, interpret):
+    return _gmm_impl(x, w, bc, bf, bd, interpret), (x, w)
+
+
+def _gmm_bwd(bc, bf, bd, interpret, res, g):
+    from .ref import moe_gmm_ref
+
+    x, w = res
+    _, pullback = jax.vjp(moe_gmm_ref, x, w)
+    return pullback(g)
+
+
+_gmm_vjp.defvjp(_gmm_fwd, _gmm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
+def moe_gmm(
+    x: jax.Array,  # (E, C, D)
+    w: jax.Array,  # (E, D, F)
+    bc: int = 128,
+    bf: int = 128,
+    bd: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Differentiable wrapper: Pallas kernel forward, jnp-reference VJP.
+
+    The backward differentiates `moe_gmm_ref` (the fp32-accumulating
+    einsum) under `jax.vjp` from the saved (x, w) residuals — the two
+    transposed GEMMs of the grouped-matmul backward, so the kernel sits
+    directly on the expert-FFN training hot path.
+    """
+    return _gmm_vjp(x, w, bc, bf, bd, interpret)

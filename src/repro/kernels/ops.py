@@ -9,14 +9,16 @@ from __future__ import annotations
 
 import jax
 
-from . import ref
+from . import autotune, ref
 from .flash_attention import flash_attention as _flash
 from .moe_gmm import moe_gmm as _gmm
 from .ssd_scan import ssd_scan as _ssd
+from .weighted_update import block_prefix_update as _bprefix
+from .weighted_update import block_scatter_rows as _bscatter
 from .weighted_update import weighted_update as _wupd
 
 __all__ = ["on_tpu", "flash_attention", "ssd_scan", "moe_gmm", "weighted_update",
-           "weighted_update_tree"]
+           "weighted_update_tree", "block_prefix_update", "block_scatter_rows"]
 
 
 def on_tpu() -> bool:
@@ -47,6 +49,30 @@ def moe_gmm(x, w, bc=128, bf=128, bd=128):
 
 def weighted_update(w, g, scale, m=None, momentum=0.0):
     return _wupd(w, g, scale, m=m, momentum=momentum, interpret=_interp())
+
+
+def block_prefix_update(snaps, w, D, slots, interpret=None):
+    """Blocked server update with the autotuned column tile (if recorded).
+
+    The tile comes from the cached sweep table (`repro.kernels.autotune`)
+    keyed (backend, P, E); a miss keeps the full BLOCK_TILE — identical to
+    calling the kernel directly.  This is the hook the blocked scan engine
+    uses (``update="pallas"``, block_size > 1).
+    """
+    tile = autotune.lookup(
+        "block_prefix_update", jax.default_backend(), snaps.shape[1], D.shape[0]
+    )
+    interp = _interp() if interpret is None else interpret
+    return _bprefix(snaps, w, D, slots, interpret=interp, tile=tile)
+
+
+def block_scatter_rows(snaps, w, W, slots, interpret=None):
+    """Lane-partitioned row scatter with the autotuned column tile."""
+    tile = autotune.lookup(
+        "block_scatter_rows", jax.default_backend(), snaps.shape[1], W.shape[0]
+    )
+    interp = _interp() if interpret is None else interpret
+    return _bscatter(snaps, w, W, slots, interpret=interp, tile=tile)
 
 
 def weighted_update_tree(params, grads, scale, momenta=None, momentum=0.0):

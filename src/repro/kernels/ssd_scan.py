@@ -60,19 +60,15 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state, *, nc:
         st_ref[0, ...] = new_state
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(
+def _ssd_impl(
     x: jax.Array,    # (B, S, H, P)
     dt: jax.Array,   # (B, S, H) fp32 post-softplus
     A: jax.Array,    # (H,) fp32 negative
     Bm: jax.Array,   # (B, S, N)
     Cm: jax.Array,   # (B, S, N)
-    chunk: int = 64,
-    init_state=None,  # unsupported in the kernel path (prefill starts at 0)
-    interpret: bool = True,
+    chunk: int,
+    interpret: bool,
 ) -> tuple[jax.Array, jax.Array]:
-    if init_state is not None:
-        raise NotImplementedError("kernel path starts from zero state")
     B, S, H, P = x.shape
     N = Bm.shape[-1]
     Q = min(chunk, S)
@@ -110,3 +106,49 @@ def ssd_scan(
     y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
     st = st.reshape(B, H, N, P)
     return y, st
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd_vjp(x, dt, A, Bm, Cm, chunk, interpret):
+    return _ssd_impl(x, dt, A, Bm, Cm, chunk, interpret)
+
+
+def _ssd_fwd(x, dt, A, Bm, Cm, chunk, interpret):
+    out = _ssd_impl(x, dt, A, Bm, Cm, chunk, interpret)
+    return out, (x, dt, A, Bm, Cm)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    from .ref import ssd_scan_ref
+
+    x, dt, A, Bm, Cm = res
+    _, pullback = jax.vjp(
+        lambda x_, dt_, A_, Bm_, Cm_: ssd_scan_ref(x_, dt_, A_, Bm_, Cm_, chunk),
+        x, dt, A, Bm, Cm,
+    )
+    return pullback(g)
+
+
+_ssd_vjp.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H) fp32 post-softplus
+    A: jax.Array,    # (H,) fp32 negative
+    Bm: jax.Array,   # (B, S, N)
+    Cm: jax.Array,   # (B, S, N)
+    chunk: int = 64,
+    init_state=None,  # unsupported in the kernel path (prefill starts at 0)
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Differentiable wrapper: Pallas kernel forward, jnp-reference VJP.
+
+    The backward recomputes the chunked SSD scan with `ssd_scan_ref` under
+    `jax.vjp` from the saved inputs — both (y, state) outputs accept
+    cotangents, so the kernel sits directly on the training hot path.
+    """
+    if init_state is not None:
+        raise NotImplementedError("kernel path starts from zero state")
+    return _ssd_vjp(x, dt, A, Bm, Cm, chunk, interpret)

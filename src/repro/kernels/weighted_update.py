@@ -137,26 +137,32 @@ def _block_kernel(slots_ref, w_ref, d_ref, _snaps_ref, ow_ref, osnaps_ref, *, E)
     ow_ref[...] = (w - acc).astype(ow_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
 def block_prefix_update(
     snaps: jax.Array,    # (R, P) flat-packed snapshot ring buffer (R = C + 1)
     w: jax.Array,        # (P,) current server weights (compute dtype)
     D: jax.Array,        # (E, P) per-event scaled update deltas, 0 on padding
     slots: jax.Array,    # (E,) int32 ring slot per event (C = trash row)
     interpret: bool = True,
+    tile: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Apply one conflict-free event micro-block to (snaps, w).
 
     Requires ``P % BLOCK_TILE == 0`` — the blocked engine pads the packed
     parameter vector once at init (`engine_scan._snapshot_codec`), so the
-    scan-time hot path never re-pads.  Returns ``(snaps', w')``.
+    scan-time hot path never re-pads.  ``tile`` overrides the column tile
+    width (must divide ``BLOCK_TILE``; the autotuner sweeps it — see
+    `repro.kernels.autotune`).  Returns ``(snaps', w')``.
     """
     R, P = snaps.shape
     E = D.shape[0]
+    TILE = BLOCK_TILE if tile is None else int(tile)
+    if BLOCK_TILE % TILE:
+        raise ValueError(f"tile={TILE} must divide BLOCK_TILE={BLOCK_TILE}")
     if P % BLOCK_TILE:
         raise ValueError(f"P={P} must be a multiple of BLOCK_TILE={BLOCK_TILE}")
-    grid = (P // BLOCK_TILE,)
-    tile = lambda rows: pl.BlockSpec((rows, BLOCK_TILE), lambda i: (0, i))
+    grid = (P // TILE,)
+    tile = lambda rows: pl.BlockSpec((rows, TILE), lambda i: (0, i))
     ow, osnaps = pl.pallas_call(
         functools.partial(_block_kernel, E=E),
         grid=grid,
@@ -192,13 +198,14 @@ def _scatter_kernel(slots_ref, W_ref, _snaps_ref, ow_ref, osnaps_ref, *, E):
     ow_ref[...] = W_ref[E - 1, :][None, :].astype(ow_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
 def block_scatter_rows(
     snaps: jax.Array,    # (R, P) flat-packed snapshot ring buffer (R = C + 1)
     w: jax.Array,        # (P,) current server weights (dtype reference only)
     W: jax.Array,        # (E, P) precomputed intermediate weight rows (fp32)
     slots: jax.Array,    # (E,) int32 ring slot per event (C = trash row)
     interpret: bool = True,
+    tile: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Scatter one micro-block's precomputed iterates into (snaps, w).
 
@@ -212,10 +219,13 @@ def block_scatter_rows(
     """
     R, P = snaps.shape
     E = W.shape[0]
+    TILE = BLOCK_TILE if tile is None else int(tile)
+    if BLOCK_TILE % TILE:
+        raise ValueError(f"tile={TILE} must divide BLOCK_TILE={BLOCK_TILE}")
     if P % BLOCK_TILE:
         raise ValueError(f"P={P} must be a multiple of BLOCK_TILE={BLOCK_TILE}")
-    grid = (P // BLOCK_TILE,)
-    tile = lambda rows: pl.BlockSpec((rows, BLOCK_TILE), lambda i: (0, i))
+    grid = (P // TILE,)
+    tile = lambda rows: pl.BlockSpec((rows, TILE), lambda i: (0, i))
     ow, osnaps = pl.pallas_call(
         functools.partial(_scatter_kernel, E=E),
         grid=grid,

@@ -8,8 +8,15 @@ Two modes:
     clients are data-parallel groups with heterogeneous speeds; the server
     applies importance-weighted updates (Alg. 1 line 10).
 
+    `--engine` picks the LM server loop: "python" is the per-event
+    reference loop (the parity oracle), "scan" the compiled device-resident
+    engine (host-replayed events; supports `--block-size` micro-blocking),
+    "fused" the device-stream engine (events generated inside the one XLA
+    program).  All three consume the same `LMTask` shards, so
+    scan == python to float tolerance on any config.
+
     PYTHONPATH=src python -m repro.launch.train --mode fl --steps 400
-    PYTHONPATH=src python -m repro.launch.train --mode lm --arch granite-3-2b
+    PYTHONPATH=src python -m repro.launch.train --mode lm --engine scan --block-size 8
 """
 from __future__ import annotations
 
@@ -23,15 +30,21 @@ import numpy as np
 from repro.ckpt import save
 from repro.configs import get_config, smoke_config
 from repro.configs.base import FLConfig
-from repro.core import ServerConfig, run_generalized_async_sgd
-from repro.data.pipeline import SyntheticLMStream, make_client_speeds
-from repro.fl import run_experiment, sampling_for
+from repro.data.pipeline import SyntheticLMStream
+from repro.fl import LMTask, run_experiment
 from repro.models import api
-from repro.models.module import init_params
 
 
 class LMClients:
-    """GradientSource: each client draws from its own synthetic LM stream."""
+    """GradientSource: each client draws from its own synthetic LM stream.
+
+    The legacy streaming source of the original per-event Python loop: each
+    `grad` call consumes fresh host RNG state, so runs are NOT replayable
+    against the compiled engine.  `LMTask` (fixed per-client shards,
+    identical minibatches on every path) supersedes it for anything that
+    needs parity; this stays for host-streaming experiments whose datasets
+    don't fit device memory.
+    """
 
     def __init__(self, cfg, n_clients: int, batch: int, seq: int, seed: int = 0):
         self.cfg = cfg
@@ -42,40 +55,48 @@ class LMClients:
         self._grad = jax.jit(
             lambda p, b: jax.grad(lambda pp: api.loss_fn(pp, b, cfg)[0])(p)
         )
+        self.grad_calls = 0
 
     def grad(self, client_id: int, params, server_step: int):
         b = self.streams[client_id].batch(self.batch)
+        self.grad_calls += 1
         return self._grad(params, {k: jnp.asarray(v) for k, v in b.items()})
 
 
-def run_lm(args) -> None:
+def lm_config(args):
     cfg = smoke_config(args.arch) if args.preset == "small" else get_config(args.arch)
     if args.preset == "100m":
         cfg = cfg.replace(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
                           head_dim=64, d_ff=3072, vocab_size=32768, dtype="float32",
                           remat="none")
-    n, C = args.clients, args.concurrency
-    mu = make_client_speeds(n, 0.5, args.speed_ratio, seed=args.seed)
-    flc = FLConfig(n_clients=n, concurrency=C, server_steps=args.steps,
-                   sampling=args.sampling, speed_ratio=args.speed_ratio, seed=args.seed)
-    p = sampling_for(flc, mu)
-    clients = LMClients(cfg, n, args.batch, args.seq, seed=args.seed)
-    params = init_params(api.model_meta(cfg), jax.random.PRNGKey(args.seed))
-    eval_stream = SyntheticLMStream(cfg.vocab_size, args.seq, seed=9999)
-    eval_batch = {k: jnp.asarray(v) for k, v in eval_stream.batch(args.batch).items()}
-    loss_j = jax.jit(lambda pp: api.loss_fn(pp, eval_batch, cfg)[0])
+    return cfg
 
-    scfg = ServerConfig(n=n, C=C, T=args.steps, eta=args.lr, p=p, mu=mu,
-                        seed=args.seed, eval_every=args.eval_every)
+
+def run_lm(args) -> None:
+    cfg = lm_config(args)
+    n, C = args.clients, args.concurrency
+    engine = "python" if args.engine == "python" else "scan"
+    stream = "device" if args.engine == "fused" else "host"
+    task = LMTask(cfg=cfg, batch_size=args.batch, seq_len=args.seq,
+                  shard_size=args.shard_size)
+    flc = FLConfig(n_clients=n, concurrency=C, server_steps=args.steps,
+                   sampling=args.sampling, speed_ratio=args.speed_ratio,
+                   seed=args.seed, engine=engine, stream=stream,
+                   block_size=args.block_size)
+
     t0 = time.time()
-    w, tr = run_generalized_async_sgd(params, clients, scfg, eval_fn=lambda pp: float(loss_j(pp)))
-    print(f"# lm training done in {time.time()-t0:.1f}s; grad calls offloaded to {n} clients")
-    for s, v in zip(tr.eval_steps, tr.eval_values):
+    r = run_experiment(flc, "gen_async", eta=args.lr,
+                       eval_every=args.eval_every, engine=engine, task=task)
+    print(f"# lm training done in {time.time()-t0:.1f}s "
+          f"(engine={args.engine}, block_size={args.block_size}); "
+          f"grad calls offloaded to {n} clients")
+    for s, v in zip(r.eval_steps, r.eval_acc):
         print(f"step {s:6d} eval_loss {v:.4f}")
-    delays = np.array([np.mean(d) if d else np.nan for d in tr.delays])
-    print(f"mean delay fast={np.nanmean(delays[mu>mu.min()]):.1f} slow={np.nanmean(delays[mu==mu.min()]):.1f} steps")
+    if r.mean_delays is not None:
+        print(f"mean delay overall {np.nanmean(r.mean_delays):.1f} steps")
     if args.ckpt_dir:
-        save(args.ckpt_dir, args.steps, w, metadata={"arch": args.arch, "mode": "lm"})
+        save(args.ckpt_dir, args.steps, r.final_params,
+             metadata={"arch": args.arch, "mode": "lm"})
         print(f"checkpoint saved to {args.ckpt_dir}")
 
 
@@ -100,11 +121,17 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--shard-size", type=int, default=256,
+                    help="per-client LM dataset rows (device-resident)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--speed-ratio", type=float, default=10.0)
     ap.add_argument("--sampling", default="optimal",
                     choices=["uniform", "optimal", "physical_time"])
     ap.add_argument("--methods", default="gen_async,async_sgd,fedbuff")
+    ap.add_argument("--engine", choices=["python", "scan", "fused"],
+                    default="scan", help="LM server loop (fused = device stream)")
+    ap.add_argument("--block-size", type=int, default=1,
+                    help="micro-block size E for the blocked scan engine")
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")

@@ -205,7 +205,8 @@ class TestFLScanEngine:
         for ev in (30, 20):
             run_matrix(flc, seeds=(0,), policies=("uniform",),
                        speed_ratios=(1.0,), eval_every=ev, data=data)
-        (_, clients, _), = data.__dict__["_fl_setup_cache"].values()
+        (setup,) = data.__dict__["_fl_setup_cache"].values()
+        clients = setup.clients
         host_keys = [k for k in clients.__dict__["_scan_runner_cache"]
                      if k[0] == "host"]
         assert len(host_keys) == 1  # one runner across both cadences
