@@ -514,6 +514,153 @@ def run_faults(quick: bool) -> dict:
 
 
 # --------------------------------------------------------------------- #
+# serving plane: overhead of the merged open-queue inference stream,
+# overload shedding, and staleness SLO -> BENCH_serve.json
+# --------------------------------------------------------------------- #
+def run_serve_bench(quick: bool) -> dict:
+    from repro.core import JacksonNetwork, ServingConfig
+    from repro.core.serving import hist_quantile
+    from repro.data.pipeline import make_client_speeds as _speeds
+
+    n, C, T = (32, 8, 1500) if quick else (128, 32, 8000)
+    b = 16
+    data = FederatedClassification(n_clients=n, seed=0)
+    mu = _speeds(n, 0.5, 10.0, seed=0)
+    # size the serving plane relative to the *training* event rate so the
+    # load labels (moderate / 2x overload) mean the same thing at every n
+    lam_train = JacksonNetwork(mu=mu, p=np.full(n, 1 / n), C=C).throughput()
+    nu = 0.4 * lam_train
+    moderate = ServingConfig(
+        arrival_rate=0.5 * nu, serve_rate=nu, queue_cap=8,
+        deadline=4.0 / nu, max_retries=2,
+        backoff_base=0.5 / nu, backoff_cap=4.0 / nu,
+    )
+    overload = replace(moderate, arrival_rate=2.0 * nu)
+
+    def make_runner(h):
+        model = MLPClassifier(data.dim, data.num_classes, hidden=h, seed=0)
+        dev = DeviceFLClients(data, model, batch_size=b, shard_size=512,
+                              seed=0)
+        return model, dev
+
+    def cfg_for(serving, T_, extras=False):
+        return ServerConfig(
+            n=n, C=C, T=T_, eta=0.05, mu=mu, seed=0, engine="scan",
+            stream="device", sparse=False, collect_extras=extras,
+            serving=serving,
+        )
+
+    def serve_fields(sv: ServingConfig) -> dict:
+        """Traffic + policy labels every row must carry."""
+        return dict(
+            arrival_rate=float(sv.arrival_rate),
+            serve_rate=float(sv.serve_rate),
+            queue_cap=int(sv.queue_cap),        # admission threshold
+            bucket_rate=float(sv.bucket_rate),
+            deadline=float(sv.deadline),
+            max_retries=int(sv.max_retries),    # retry policy
+            backoff_base=float(sv.backoff_base),
+            backoff_cap=float(sv.backoff_cap),
+        )
+
+    results = []
+
+    # --- overhead ladders: no-serving baseline -> moderate live traffic.
+    # Two model sizes: `rep` is a representative FL workload (the <= 5%
+    # acceptance gate row); `dispatch` shrinks the gradient until the scan
+    # machinery dominates — the serve plane's worst case, reported for
+    # transparency (its per-step cost is a few fixed microseconds, so the
+    # percentage is inflated exactly when the model is unrealistically
+    # tiny). Interleaved warm reps so host load drift hits both arms.
+    def ladder(tag, h, T_, gate):
+        model, dev = make_runner(h)
+        once = lambda c: run_generalized_async_sgd(model.init_params, dev, c)
+        base_cfg = cfg_for(None, T_)
+        mod_cfg = cfg_for(moderate, T_)
+        base_cold = _best(lambda: once(base_cfg), 1)
+        mod_cold = _best(lambda: once(mod_cfg), 1)
+        base_warm = mod_warm = float("inf")
+        for _ in range(2 if quick else 6):
+            base_warm = min(base_warm, _best(lambda: once(base_cfg), 1))
+            mod_warm = min(mod_warm, _best(lambda: once(mod_cfg), 1))
+        pct = 100.0 * (mod_warm / base_warm - 1.0)
+        results.append(_row(
+            f"fused_baseline_{tag}(n={n},C={C},T={T_},h={h},b={b})",
+            cold_s=base_cold, warm_s=base_warm, overhead_pct=0.0,
+            note="per-event fused device stream, no serving "
+            f"(overhead reference for the {tag} ladder)",
+        ))
+        results.append(_row(
+            f"serving_moderate_{tag}(n={n},C={C},T={T_},h={h},b={b})",
+            cold_s=mod_cold, warm_s=mod_warm, overhead_pct=pct,
+            **serve_fields(moderate),
+            note="open stream merged into the event race at rho=0.5 "
+            "(arrival = half the serve rate); overhead vs no-serving "
+            "baseline on one host"
+            + (" — acceptance gate is <= 5%" if gate else
+               "; dispatch-bound worst case (gradient cost shrunk until "
+               "the scan machinery dominates), not the gate row"),
+        ))
+        print(f"[{tag}] baseline : {base_warm:7.3f}s")
+        print(f"[{tag}] moderate : {mod_warm:7.3f}s  ({pct:+.1f}%)")
+        return pct
+
+    ladder("rep", 128, T // 2, gate=True)
+    ladder("dispatch", 32, T, gate=False)
+
+    # --- moderate-load + 2x overload counters (collect_extras on) ------- #
+    model, dev = make_runner(32)
+    once = lambda c: run_generalized_async_sgd(model.init_params, dev, c)
+    for tag, sv in (("moderate", moderate), ("overload_2x", overload)):
+        _, tr = once(cfg_for(sv, T, extras=True))
+        ex = tr.extras
+        arr = int(ex["serve_arrivals"])
+        acct = (int(ex["serve_served"]) + int(ex["serve_shed"])
+                + int(ex["serve_timed_out"]) + int(ex["serve_pending"]))
+        assert arr == acct, f"conservation broke: {arr} != {acct}"
+        assert int(ex["serve_qdepth_max"]) <= sv.R, "queue depth unbounded"
+        served = max(int(ex["serve_served"]), 1)
+        results.append(_row(
+            f"serving_{tag}_counters(n={n},C={C},T={T})",
+            arrivals=arr,
+            served=int(ex["serve_served"]),
+            shed=int(ex["serve_shed"]),
+            timed_out=int(ex["serve_timed_out"]) + int(ex["serve_pending"]),
+            retried=int(ex["serve_retried"]),
+            shed_frac=round(int(ex["serve_shed"]) / max(arr, 1), 4),
+            qdepth_max=int(ex["serve_qdepth_max"]),
+            sojourn_mean=float(ex["serve_sojourn_sum"]) / served,
+            sojourn_p99=hist_quantile(ex["serve_sojourn_hist"], 0.99),
+            staleness_p50=hist_quantile(ex["serve_stale_hist"], 0.50, lo=0),
+            staleness_p99=hist_quantile(ex["serve_stale_hist"], 0.99, lo=0),
+            **serve_fields(sv),
+            note=("conservation checked exact (served+shed+timed_out=="
+                  "arrivals); shed_frac is the honest loss rate on this "
+                  "1-host CPU run, not an idealized projection"
+                  + ("; 2x overload: arrivals at twice the serve rate"
+                     if tag == "overload_2x" else "")),
+        ))
+        print(f"{tag:12s}: arrivals={arr} shed={int(ex['serve_shed'])} "
+              f"({100 * int(ex['serve_shed']) / max(arr, 1):.1f}%) "
+              f"p99_staleness={hist_quantile(ex['serve_stale_hist'], 0.99, lo=0):.0f} steps")
+
+    return {
+        "bench": "serve",
+        "quick": quick,
+        "devices": _devices(),
+        "dtype": DTYPE,
+        "cpu_count": os.cpu_count(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "results": results,
+        "note": "merged open/closed event race (repro.core.serving): "
+        "serving rows carry their full traffic + admission + retry policy; "
+        "staleness quantiles are in server steps behind the known-good "
+        "snapshot; guard-never-served and bitwise ckpt properties are "
+        "locked by tests/test_serving.py, not timed here",
+    }
+
+
+# --------------------------------------------------------------------- #
 # real-model LM benchmark: compiled scan/blocked engine vs the per-event
 # Python LM loop on the same LMTask shards -> BENCH_lm.json
 # --------------------------------------------------------------------- #
@@ -899,16 +1046,22 @@ def main() -> None:
                     help="benchmark the real-model path: compiled scan / "
                     "blocked engine vs the per-event Python LM loop on "
                     "identical LMTask shards (writes BENCH_lm.json)")
+    ap.add_argument("--serve", action="store_true",
+                    help="benchmark the serving plane: merged open-queue "
+                    "overhead vs the no-serving baseline, 2x-overload "
+                    "shedding, and staleness SLO (writes BENCH_serve.json)")
     ap.add_argument("--out", default=None, help="output JSON path")
     args = ap.parse_args()
-    if sum((args.stream, args.block, args.faults, args.scale, args.lm)) > 1:
-        ap.error("--stream, --block, --faults, --scale and --lm are mutually "
-                 "exclusive")
+    if sum((args.stream, args.block, args.faults, args.scale, args.lm,
+            args.serve)) > 1:
+        ap.error("--stream, --block, --faults, --scale, --lm and --serve "
+                 "are mutually exclusive")
     name = ("BENCH_stream.json" if args.stream
             else "BENCH_block.json" if args.block
             else "BENCH_faults.json" if args.faults
             else "BENCH_scale.json" if args.scale
             else "BENCH_lm.json" if args.lm
+            else "BENCH_serve.json" if args.serve
             else "BENCH_engine.json")
     out = args.out or str(Path(__file__).resolve().parent.parent / name)
     payload = (run_stream(args.quick) if args.stream
@@ -916,6 +1069,7 @@ def main() -> None:
                else run_faults(args.quick) if args.faults
                else run_scale(args.quick) if args.scale
                else run_lm_bench(args.quick) if args.lm
+               else run_serve_bench(args.quick) if args.serve
                else run(args.quick))
     Path(out).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"\nwrote {out}")

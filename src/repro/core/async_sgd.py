@@ -154,6 +154,12 @@ class ServerConfig:
     ckpt_every: int = 0          # checkpoint cadence in CS steps
     resume: bool = False         # resume from the latest checkpoint in
                                  # ckpt_dir (config-fingerprint validated)
+    serving: Any | None = None   # serving.ServingConfig: merge an open Poisson
+                                 # inference stream into the device-stream
+                                 # event race — requests are served from the
+                                 # snapshot ring (last known-good iterate)
+                                 # without blocking the update scan; serve_*
+                                 # counters land in TraceRecord.extras
 
 
 @dataclass
@@ -363,6 +369,12 @@ def _run_scan(
     ckpt_on = cfg.ckpt_dir is not None
     if ckpt_on and cfg.ckpt_every <= 0:
         raise ValueError("ckpt_dir requires ckpt_every > 0")
+    serving = cfg.serving if (cfg.serving is not None and cfg.serving.enabled) else None
+    if serving is not None and cfg.stream != "device":
+        raise ValueError(
+            "serving requires stream='device' (the open arrival stream is "
+            "merged into the on-device event race)"
+        )
     if fedbuff_Z and (faults is not None or guard_stale):
         raise ValueError(
             "fault injection / staleness cutoff compose with Algorithm 1, "
@@ -387,7 +399,12 @@ def _run_scan(
                 "(the on-device race relies on memorylessness)"
             )
         classes = class_mu = class_p = None
-        if cfg.sparse is True or cfg.sparse == "auto":
+        if cfg.sparse is True and serving is not None:
+            raise ValueError(
+                "serving composes with the dense stream only (the serve "
+                "read path indexes the dense snapshot ring)"
+            )
+        if (cfg.sparse is True or cfg.sparse == "auto") and serving is None:
             classes, class_mu, class_p = _resolve_sparse(
                 cfg, mu, p, block_size, ckpt_on
             )
@@ -421,7 +438,7 @@ def _run_scan(
                 adaptive=cfg.adaptive, refresh_every=cfg.refresh_every,
                 ctrl_lr=cfg.ctrl_lr, ctrl_iters=cfg.ctrl_iters,
                 block_size=int(block_size), snapshot_dtype=cfg.snapshot_dtype,
-                fault=faults, guard=guard, resume=cfg.resume,
+                fault=faults, guard=guard, serving=serving, resume=cfg.resume,
             )
             w = jax.block_until_ready(w)
             # the chunked driver keeps no per-step clock (only the final t)
@@ -459,6 +476,7 @@ def _run_scan(
             fault=faults,
             guard=guard,
             classes=classes,
+            serving=serving,
         )
         run_mu = mu if classes is None else class_mu
         run_p = p if classes is None else class_p
@@ -480,6 +498,9 @@ def _run_scan(
         trace.extras = {"p_final": np.asarray(extras["p_final"], np.float64)}
         for name in ("guard_rejects", "stale_drops", "kind_count", "avail_time"):
             if name in extras:
+                trace.extras[name] = np.asarray(extras[name])
+        for name in extras:
+            if name.startswith("serve_"):
                 trace.extras[name] = np.asarray(extras[name])
         if "occ_mean" in extras:
             trace.mean_queue_lengths = np.asarray(extras["occ_mean"], np.float64)

@@ -157,15 +157,27 @@ class _AsyncSaver:
 
     def put(self, step: int, carry, evals_buf: np.ndarray) -> None:
         if self._err is not None:
+            # fail loudly at the *next* save after a write error (full
+            # disk, permissions): reap the worker first so the failure
+            # doesn't leak a thread blocked on the queue
+            self.abort()
             raise self._err
         # snapshot the (host-mutable) eval buffer; the carry's jax arrays
         # are immutable and safe to hand across threads as-is
         self._q.put((step, {"carry": carry, "evals": evals_buf.copy(),
                             "cursor": np.int64(step)}))
 
+    def abort(self) -> None:
+        """Reap the worker without raising — error-path cleanup.  Safe to
+        call repeatedly and after `close` (no-op once the worker exited);
+        the drivers call it in a ``finally`` so an exception anywhere in
+        the chunk loop never leaks the writer thread."""
+        if self._worker.is_alive():
+            self._q.put(None)
+            self._worker.join()
+
     def close(self) -> None:
-        self._q.put(None)
-        self._worker.join()
+        self.abort()
         if self._err is not None:
             raise self._err
 
@@ -240,6 +252,7 @@ def run_checkpointed(
     snapshot_dtype=None,
     fault: FaultConfig | None = None,
     guard: GuardConfig | None = None,
+    serving=None,
     resume: bool = False,
     keep: int = 3,
 ):
@@ -268,6 +281,13 @@ def run_checkpointed(
     if adaptive and refresh_every <= 0:
         raise ValueError("adaptive=True requires refresh_every > 0")
     E = max(int(block_size), 1)
+    serving_on = serving is not None and serving.enabled
+    if serving_on:
+        from . import serving as sp
+
+        serving.validate()
+        if E > 1:
+            raise ValueError("serving= requires block_size=1")
     importance = weighting == "importance"
     need_stats = True  # stats ride in the checkpoint either way
     L = _chunk_layout(T, ckpt_every, eval_every if eval_fn else 0,
@@ -306,6 +326,10 @@ def run_checkpointed(
     else:
         slot_scale0 = jnp.broadcast_to(eta, (C,))
     carry0 = (ucarry0, sstate0, stats0, slot_scale0, p0, jnp.cumsum(p0))
+    if serving_on:
+        # serving state/counters ride inside the checkpointed carry, so
+        # kill-and-resume of the serve plane is bitwise for free
+        carry0 = carry0 + (sp.serve_init(serving), sp.serve_stats_init())
 
     # the jitted chunk is memoized on the gradient source (same idiom as
     # jit_runner/jit_fused_runner): mu/eta/fault-rates are call-time
@@ -323,7 +347,8 @@ def run_checkpointed(
         if adaptive else None,
         float(ctrl_lr), int(ctrl_iters), eval_fn, unroll,
         str(snapshot_dtype), faulty,
-        None if guard is None else guard.cache_key(), w0_sig,
+        None if guard is None else guard.cache_key(),
+        None if not serving_on else serving.cache_key(), w0_sig,
     )
     if memo_key in cache:
         jchunk = cache[memo_key]
@@ -332,10 +357,14 @@ def run_checkpointed(
             grad_fn, n, C, E, update_step, pack, unpack, enc, 0, guard,
             importance=importance, faulty=faulty, guard_stale=guard_stale,
             need_stats=need_stats, axis=None, lane_devices=1, unroll=unroll,
+            serving=serving,
         )
 
         def chunk(carry, mu_, eta_, fr_, kr, ke, kd, c, k0, Lc, do_eval):
-            ucarry, sstate, stats, slot_scale, p, cdf = carry
+            if serving_on:
+                ucarry, sstate, stats, slot_scale, p, cdf, sv, svs = carry
+            else:
+                ucarry, sstate, stats, slot_scale, p, cdf = carry
             advance = make_adv(mu_, eta_, fr_)
             ur = jax.random.uniform(jax.random.fold_in(kr, c), (Lc,))
             ue = jax.random.uniform(jax.random.fold_in(ke, c), (Lc,))
@@ -343,9 +372,15 @@ def run_checkpointed(
             Kc = jnp.minimum(
                 jnp.searchsorted(cdf, ud, side="right"), n - 1
             ).astype(jnp.int32)
-            ucarry, sstate, stats, slot_scale, _ = advance(
-                ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0
-            )
+            if serving_on:
+                ucarry, sstate, stats, slot_scale, _, sv, svs = advance(
+                    ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0,
+                    None, sv, svs,
+                )
+            else:
+                ucarry, sstate, stats, slot_scale, _ = advance(
+                    ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0
+                )
             if adaptive:
                 p = sd.ctrl_refresh(
                     p, stats.comp, stats.busy_t, bound, lr=ctrl_lr,
@@ -356,7 +391,10 @@ def run_checkpointed(
                 jnp.asarray(eval_fn(to_tree(ucarry[0])), jnp.float32)
                 if do_eval else jnp.float32(0.0)
             )
-            return (ucarry, sstate, stats, slot_scale, p, cdf), ev
+            out = (ucarry, sstate, stats, slot_scale, p, cdf)
+            if serving_on:
+                out = out + (sv, svs)
+            return out, ev
 
         jchunk = jax.jit(chunk, static_argnames=("Lc", "do_eval"))
         cache[memo_key] = jchunk
@@ -368,6 +406,7 @@ def run_checkpointed(
         snapshot_dtype=str(snapshot_dtype),
         fault=None if fault is None else fault.cache_key(),
         guard=None if guard is None else guard.cache_key(),
+        serving=None if not serving_on else serving.cache_key(),
         key=_key_fingerprint(key), eta=float(np.asarray(eta)),
         mu=_array_digest(mu), p0=_array_digest(p0),
         ctrl=(float(ctrl_lr), int(ctrl_iters)),
@@ -384,27 +423,34 @@ def run_checkpointed(
         cursor0 = int(state["cursor"])
 
     saver = _AsyncSaver(ckpt_dir, fingerprint, keep)
-    for c in range(cursor0 // L, n_chunks):
-        do_eval = eval_on and ((c + 1) % eval_stride == 0)
-        carry, ev = jchunk(
-            carry, mu, eta, fr, k_race, k_exp, k_disp, jnp.int32(c),
-            jnp.int32(c * L), Lc=L, do_eval=do_eval,
-        )
-        if do_eval:
-            evals.put((c + 1) // eval_stride - 1, ev)
-        events_done = (c + 1) * L
-        if events_done % ckpt_every == 0 and events_done < T:
-            saver.put(events_done, carry, evals.buf)
-    if tail and cursor0 < T:  # cursor0 == T: resumed post-tail final state
-        carry, _ = jchunk(
-            carry, mu, eta, fr, k_race, k_exp, k_disp, jnp.int32(n_chunks),
-            jnp.int32(n_chunks * L), Lc=tail, do_eval=False,
-        )
-    # final checkpoint: a later resume returns instantly from here
-    saver.put(T, carry, evals.buf)
-    saver.close()
+    try:
+        for c in range(cursor0 // L, n_chunks):
+            do_eval = eval_on and ((c + 1) % eval_stride == 0)
+            carry, ev = jchunk(
+                carry, mu, eta, fr, k_race, k_exp, k_disp, jnp.int32(c),
+                jnp.int32(c * L), Lc=L, do_eval=do_eval,
+            )
+            if do_eval:
+                evals.put((c + 1) // eval_stride - 1, ev)
+            events_done = (c + 1) * L
+            if events_done % ckpt_every == 0 and events_done < T:
+                saver.put(events_done, carry, evals.buf)
+        if tail and cursor0 < T:  # cursor0 == T: resumed post-tail final
+            carry, _ = jchunk(
+                carry, mu, eta, fr, k_race, k_exp, k_disp,
+                jnp.int32(n_chunks), jnp.int32(n_chunks * L), Lc=tail,
+                do_eval=False,
+            )
+        # final checkpoint: a later resume returns instantly from here
+        saver.put(T, carry, evals.buf)
+        saver.close()
+    finally:
+        saver.abort()
 
-    ucarry, sstate, stats, slot_scale, p, cdf = carry
+    if serving_on:
+        ucarry, sstate, stats, slot_scale, p, cdf, sv, svs = carry
+    else:
+        ucarry, sstate, stats, slot_scale, p, cdf = carry
     extras = {
         "p_final": p,
         "comp": stats.comp,
@@ -418,6 +464,25 @@ def run_checkpointed(
     if faulty:
         extras["kind_count"] = stats.kind_count
         extras["avail_time"] = stats.avail_tw
+    if serving_on:
+        extras.update({
+            "serve_arrivals": svs.arrivals,
+            "serve_served": svs.served,
+            "serve_shed": svs.shed,
+            "serve_timed_out": svs.timed_out,
+            "serve_retried": svs.retried,
+            "serve_pending": jnp.sum((sv.stt != 0).astype(jnp.int32)),
+            "serve_sojourn_sum": svs.sojourn - svs.sojourn_c,
+            "serve_sojourn_hist": svs.sojourn_hist,
+            "serve_stale_hist": svs.stale_hist,
+            "serve_qdepth_time": svs.qdepth_tw - svs.qdepth_tw_c,
+            "serve_qdepth_max": svs.qdepth_max,
+            "serve_checksum": svs.checksum - svs.checksum_c,
+            "serve_kg_step": sv.kg_step,
+            "serve_kg_slot": sv.kg_slot,
+            "serve_tokens": sv.tokens,
+            "serve_t_final": sstate.t,
+        })
     return to_tree(ucarry[0]), jnp.asarray(evals.curve()), extras
 
 
@@ -508,25 +573,28 @@ def run_checkpointed_host(
         cursor0 = int(state["cursor"])
 
     saver = _AsyncSaver(ckpt_dir, fingerprint, keep)
-    for c in range(cursor0 // L, n_chunks):
-        lo, hi = c * L, (c + 1) * L
-        do_eval = eval_on and ((c + 1) % eval_stride == 0)
-        carry, ev = jchunk(
-            carry, jnp.asarray(J[lo:hi]), jnp.asarray(slot_h[lo:hi]),
-            jnp.asarray(scale_h[lo:hi]), jnp.int32(lo), do_eval=do_eval,
-        )
-        if do_eval:
-            evals.put((c + 1) // eval_stride - 1, ev)
-        if hi % ckpt_every == 0 and hi < T:
-            saver.put(hi, carry, evals.buf)
-    if tail and cursor0 < T:  # cursor0 == T: resumed post-tail final state
-        lo = n_chunks * L
-        carry, _ = jchunk(
-            carry, jnp.asarray(J[lo:]), jnp.asarray(slot_h[lo:]),
-            jnp.asarray(scale_h[lo:]), jnp.int32(lo), do_eval=False,
-        )
-    saver.put(T, carry, evals.buf)
-    saver.close()
+    try:
+        for c in range(cursor0 // L, n_chunks):
+            lo, hi = c * L, (c + 1) * L
+            do_eval = eval_on and ((c + 1) % eval_stride == 0)
+            carry, ev = jchunk(
+                carry, jnp.asarray(J[lo:hi]), jnp.asarray(slot_h[lo:hi]),
+                jnp.asarray(scale_h[lo:hi]), jnp.int32(lo), do_eval=do_eval,
+            )
+            if do_eval:
+                evals.put((c + 1) // eval_stride - 1, ev)
+            if hi % ckpt_every == 0 and hi < T:
+                saver.put(hi, carry, evals.buf)
+        if tail and cursor0 < T:  # cursor0 == T: resumed post-tail final
+            lo = n_chunks * L
+            carry, _ = jchunk(
+                carry, jnp.asarray(J[lo:]), jnp.asarray(slot_h[lo:]),
+                jnp.asarray(scale_h[lo:]), jnp.int32(lo), do_eval=False,
+            )
+        saver.put(T, carry, evals.buf)
+        saver.close()
+    finally:
+        saver.abort()
     w = to_tree(carry[0])
     ev_curve = jnp.asarray(evals.curve())
     if guard is not None:
@@ -652,26 +720,29 @@ def run_checkpointed_host_blocked(
         cursor0 = int(state["cursor"])
 
     saver = _AsyncSaver(ckpt_dir, fingerprint, keep)
-    for g in range(min(cursor0, total) // group_events, n_chunks):
-        lo, hi = g * chunk_blocks, (g + 1) * chunk_blocks
-        carry, ev = jchunk(
-            carry, jnp.asarray(J[lo:hi]), jnp.asarray(slot_h[lo:hi]),
-            jnp.asarray(scale_h[lo:hi]), jnp.asarray(k_h[lo:hi]),
-            jnp.asarray(mask_h[lo:hi]), do_eval=eval_on,
-        )
-        if eval_on:
-            evals.put(g, ev)
-        events_done = (g + 1) * group_events
-        if events_done % ckpt_every == 0 and events_done < total_all:
-            saver.put(events_done, carry, evals.buf)
-    if Bm < int(J.shape[0]) and cursor0 < total_all:  # tail rows
-        carry, _ = jchunk(
-            carry, jnp.asarray(J[Bm:]), jnp.asarray(slot_h[Bm:]),
-            jnp.asarray(scale_h[Bm:]), jnp.asarray(k_h[Bm:]),
-            jnp.asarray(mask_h[Bm:]), do_eval=False,
-        )
-    saver.put(total_all, carry, evals.buf)
-    saver.close()
+    try:
+        for g in range(min(cursor0, total) // group_events, n_chunks):
+            lo, hi = g * chunk_blocks, (g + 1) * chunk_blocks
+            carry, ev = jchunk(
+                carry, jnp.asarray(J[lo:hi]), jnp.asarray(slot_h[lo:hi]),
+                jnp.asarray(scale_h[lo:hi]), jnp.asarray(k_h[lo:hi]),
+                jnp.asarray(mask_h[lo:hi]), do_eval=eval_on,
+            )
+            if eval_on:
+                evals.put(g, ev)
+            events_done = (g + 1) * group_events
+            if events_done % ckpt_every == 0 and events_done < total_all:
+                saver.put(events_done, carry, evals.buf)
+        if Bm < int(J.shape[0]) and cursor0 < total_all:  # tail rows
+            carry, _ = jchunk(
+                carry, jnp.asarray(J[Bm:]), jnp.asarray(slot_h[Bm:]),
+                jnp.asarray(scale_h[Bm:]), jnp.asarray(k_h[Bm:]),
+                jnp.asarray(mask_h[Bm:]), do_eval=False,
+            )
+        saver.put(total_all, carry, evals.buf)
+        saver.close()
+    finally:
+        saver.abort()
     w = to_tree(carry[0])
     ev_curve = jnp.asarray(evals.curve())
     if guard is not None:

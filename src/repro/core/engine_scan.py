@@ -958,7 +958,7 @@ def _make_host_block_runner(
 def _make_fused_advance(
     grad_fn, n, C, E, update_step, pack, unpack, enc, fedbuff_Z, guard, *,
     importance, faulty, guard_stale, need_stats, axis, lane_devices, unroll,
-    classes=None,
+    classes=None, serving=None,
 ):
     """The chunk-advance core of the fused engine, shared with `engine_ckpt`.
 
@@ -988,12 +988,53 @@ def _make_fused_advance(
         raise ValueError("the sparse stream supports block_size=1 only")
     spec = classes.device() if sparse else None
     m_cls = classes.m if sparse else 0
+    serving_on = serving is not None and serving.enabled
+    if serving_on:
+        from . import serving as sp
+
+        if sparse:
+            raise ValueError("serving= requires the dense stream (classes=None)")
+        if E > 1:
+            raise ValueError("serving= requires block_size=1")
+        if fedbuff_Z:
+            raise ValueError("serving= composes with Algorithm 1, not FedBuff")
+        serving.validate()
 
     def build(mu, eta, fr):
         def event_body(c, x):
-            """One fused CS step (stream advance + algorithm update)."""
-            ucarry, sstate, stats, slot_scale, p = c
-            if sparse:
+            """One fused CS step (stream advance + algorithm update).
+
+            With ``serving`` the step first races the closed network
+            against the open serving stream (`merged_stream_step`), then
+            runs BOTH halves unconditionally in the masked style: a serve
+            event carries ``j = n``, ``slot = C`` and a zeroed scale, so
+            the gradient it computes is discarded by the masked axpy and
+            every scatter drops — exactly the fault-masking idiom
+            (`KIND_CRASH` etc.) — while on train events `serve_apply`
+            masks to a no-op via ``live=is_ext``.  No `lax.cond`: routing
+            the (C, P) snapshot ring through a cond output forces XLA to
+            re-materialize the ring every step instead of aliasing it
+            through the scan carry (measured ~1.6x wall), and even a
+            small-state cond pays per-step buffer marshaling that exceeds
+            the masked ops it skips.  The known-good snapshot pointer
+            advances only on *accepted* training updates (nonzero scale
+            and no guard counter movement), so the serving read path can
+            never observe a guard-rejected iterate.
+            """
+            if serving_on:
+                ucarry, sstate, stats, slot_scale, p, sv, sstats = c
+            else:
+                ucarry, sstate, stats, slot_scale, p = c
+            if serving_on:
+                urk, uek, kn, k = x
+                occ_pre = sstate.occ
+                if faulty:
+                    avail_pre = sstate.avail
+                r_ext = sv.cdf[-1]  # rate cache refreshed in serve_apply
+                sstate, ev, is_ext, u_ext = sd.merged_stream_step(
+                    sstate, mu, r_ext, (urk, uek, kn), fr
+                )
+            elif sparse:
                 if faulty:
                     urk, uek, kn, ubk, k = x
                 else:
@@ -1023,10 +1064,33 @@ def _make_fused_advance(
             # flips carry slot C: the (C,) gather clamps but the scale is
             # masked to 0, and every scatter below drops out of bounds
             scale = slot_scale[ev.slot] if importance else eta
-            if faulty:
+            if faulty or serving_on:
                 scale = jnp.where(ev.kind == KIND_COMPLETE, scale, 0.0)
             stale = (k - stats.slot_step[ev.slot]) if guard_stale else None
-            ucarry = update_step(ucarry, ev.j, ev.slot, scale, k, stale)
+            if serving_on:
+                # pre-event depth persists over dt: integrate it before
+                # the transition, on every (train or serve) event
+                sstats = sp.serve_time_step(sstats, sv, ev.dt)
+                gcnt_pre = ucarry[3]
+                ucarry = update_step(ucarry, ev.j, ev.slot, scale, k, stale)
+                # unguarded runs never move gcnt: skip the per-step compare
+                accepted = scale != 0.0
+                if guard is not None:
+                    accepted &= jnp.all(ucarry[3] == gcnt_pre)
+                sv = sv._replace(
+                    kg_slot=jnp.where(accepted, ev.slot, sv.kg_slot),
+                    kg_step=jnp.where(accepted, jnp.int32(k) + 1, sv.kg_step),
+                )
+                # unconditional masked call (live=is_ext): a lax.cond
+                # here would marshal the ~25 serve-state buffers through
+                # the conditional every step, which costs more than the
+                # masked small ops themselves
+                sv, sstats = sp.serve_apply(
+                    serving, sv, sstats, u_ext, ev.t, k, ucarry[1],
+                    live=is_ext,
+                )
+            else:
+                ucarry = update_step(ucarry, ev.j, ev.slot, scale, k, stale)
             if need_stats:
                 if sparse:
                     cls_j = spec.inv_cls[ev.j]
@@ -1048,7 +1112,16 @@ def _make_fused_advance(
                     stats = sd.stats_step(stats, ev, occ_pre, sstate.occ, k)
             if importance:
                 pk = p[spec.inv_cls[ev.k]] if sparse else p[ev.k]
-                slot_scale = slot_scale.at[ev.slot].set(eta / (n * pk))
+                if serving_on:
+                    # serve events carry slot C: no re-dispatch, the
+                    # importance-scale scatter must drop, not overwrite
+                    slot_scale = slot_scale.at[ev.slot].set(
+                        eta / (n * pk), mode="drop"
+                    )
+                else:
+                    slot_scale = slot_scale.at[ev.slot].set(eta / (n * pk))
+            if serving_on:
+                return (ucarry, sstate, stats, slot_scale, p, sv, sstats), ev.t
             return (ucarry, sstate, stats, slot_scale, p), ev.t
 
         def window_body(c, x):
@@ -1144,9 +1217,17 @@ def _make_fused_advance(
             return (ucarry, sstate, stats, slot_scale, p), tv
 
         def advance(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0,
-                    ub=None):
-            """Fused CS steps over one chunk: E-event windows + remainder."""
-            c = (ucarry, sstate, stats, slot_scale, p)
+                    ub=None, sv=None, sstats=None):
+            """Fused CS steps over one chunk: E-event windows + remainder.
+
+            With serving the carry widens by ``(sv, sstats)`` — the serve
+            table + counters ride the scan (and the checkpoint) like any
+            other state — and the return gains the updated pair.
+            """
+            if serving_on:
+                c = (ucarry, sstate, stats, slot_scale, p, sv, sstats)
+            else:
+                c = (ucarry, sstate, stats, slot_scale, p)
             Lc = Kc.shape[0]
             ks = k0 + jnp.arange(Lc, dtype=jnp.int32)
             nW = Lc // E if E > 1 else 0
@@ -1166,8 +1247,11 @@ def _make_fused_advance(
                     xse = (ur[Wc:], ue[Wc:], Kc[Wc:], ks[Wc:])
                 c, tse = jax.lax.scan(event_body, c, xse, unroll=unroll)
                 ts_parts.append(tse)
-            ucarry, sstate, stats, slot_scale, p = c
             ts = ts_parts[0] if len(ts_parts) == 1 else jnp.concatenate(ts_parts)
+            if serving_on:
+                ucarry, sstate, stats, slot_scale, p, sv, sstats = c
+                return ucarry, sstate, stats, slot_scale, ts, sv, sstats
+            ucarry, sstate, stats, slot_scale, p = c
             return ucarry, sstate, stats, slot_scale, ts
 
         return advance
@@ -1201,6 +1285,7 @@ def make_fused_runner(
     fault: FaultConfig | None = None,
     guard: GuardConfig | None = None,
     classes=None,
+    serving=None,
 ):
     """Build the fused engine: `stream_device.stream_step` ∘ `update_step`.
 
@@ -1262,6 +1347,21 @@ def make_fused_runner(
     Requires ``block_size=1`` and ``lane_devices=1``; dispatch draws use
     the O(log m) class tree + within-class uniform member draw, exact in
     law versus the dense path by exchangeability within a class.
+
+    ``serving`` (a `serving.ServingConfig`) merges an **open** Poisson
+    inference stream into the event race: requests are admitted through a
+    token bucket + queue-depth threshold, served FIFO from the snapshot
+    ring at the known-good (last-accepted-update) row, deadline-timed-out
+    with capped jittered exponential-backoff retries, and shed under
+    overload — the resilient serving plane of `core.serving`.  Requires
+    ``block_size=1``, the dense stream, flat-packed parameters and no
+    FedBuff; composes with faults, guards and the adaptive controller.
+    Serve events skip the gradient entirely (a `lax.cond` branch,
+    un-vmapped) and are invisible to the training-side scatters (slot C /
+    client n, the flip masking pattern); the Palm accumulator ``occ_sum``
+    does sample at serve epochs too, which is still unbiased for the
+    time-average by PASTA.  ``extras`` gains the ``serve_*`` counters,
+    histograms and the final serve state.
     """
     import jax
     import jax.numpy as jnp
@@ -1319,6 +1419,23 @@ def make_fused_runner(
         raise ValueError(
             "the staleness cutoff requires the per-event update (fedbuff_Z=0)"
         )
+    serving_on = serving is not None and serving.enabled
+    if serving_on:
+        from . import serving as sp
+
+        serving.validate()
+        if E > 1:
+            raise ValueError("serving= requires block_size=1")
+        if fedbuff_Z:
+            raise ValueError("serving= composes with Algorithm 1, not FedBuff")
+        if sparse:
+            raise ValueError(
+                "serving= requires the dense stream (classes=None)"
+            )
+        if lane_devices > 1:
+            raise ValueError("serving= requires lane_devices=1")
+        if update_fn is not None:
+            raise ValueError("serving= requires the default update w - scale*g")
     # the staleness cutoff reads StatsState.slot_step, so stats must run
     need_stats = collect_extras or adaptive or guard_stale
 
@@ -1342,6 +1459,11 @@ def make_fused_runner(
             raise ValueError(
                 "block_size > 1 requires all-float parameters "
                 "(flat-packed snapshot storage)"
+            )
+        if serving_on and not flat_mode:
+            raise ValueError(
+                "serving= requires all-float parameters (the serving read "
+                "path gathers flat-packed snapshot rows)"
             )
         update_step = _make_update_step(
             grad_fn, fedbuff_Z, update_fn, pack, unpack, flat_mode, enc, guard
@@ -1390,8 +1512,10 @@ def make_fused_runner(
             grad_fn, n, C, E, update_step, pack, unpack, enc, fedbuff_Z, guard,
             importance=importance, faulty=faulty, guard_stale=guard_stale,
             need_stats=need_stats, axis=axis, lane_devices=lane_devices,
-            unroll=unroll, classes=classes,
+            unroll=unroll, classes=classes, serving=serving,
         )(mu, eta, fr)
+        sv0 = sp.serve_init(serving) if serving_on else None
+        sstats0 = sp.serve_stats_init() if serving_on else None
 
         if sparse:
             # O(log m) class draw + uniform member — flat in n
@@ -1408,7 +1532,11 @@ def make_fused_runner(
                 )(u).astype(jnp.int32)
 
         def chunk_step(carry, xs):
-            ucarry, sstate, stats, slot_scale, p = carry
+            if serving_on:
+                ucarry, sstate, stats, slot_scale, p, sv, sstats = carry
+            else:
+                ucarry, sstate, stats, slot_scale, p = carry
+                sv = sstats = None
             if sparse and faulty:
                 ur, ue, ud, um, ub, k0 = xs
             elif sparse:
@@ -1418,9 +1546,15 @@ def make_fused_runner(
                 ur, ue, ud, k0 = xs
                 um = ub = None
             Kc = sample_dispatch(p, ud, um)
-            ucarry, sstate, stats, slot_scale, ts = advance(
-                ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0, ub
-            )
+            if serving_on:
+                ucarry, sstate, stats, slot_scale, ts, sv, sstats = advance(
+                    ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0, ub,
+                    sv, sstats,
+                )
+            else:
+                ucarry, sstate, stats, slot_scale, ts = advance(
+                    ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0, ub
+                )
             if adaptive:
                 p = sd.ctrl_refresh(
                     p, stats.comp, stats.busy_t, bound, lr=ctrl_lr,
@@ -1444,9 +1578,13 @@ def make_fused_runner(
                     ucarry[0],
                 )
             ys = (ts, ev_val, p) if collect_extras else (ev_val,)
+            if serving_on:
+                return (ucarry, sstate, stats, slot_scale, p, sv, sstats), ys
             return (ucarry, sstate, stats, slot_scale, p), ys
 
         carry = (ucarry, sstate, stats, slot_scale0, p0)
+        if serving_on:
+            carry = carry + (sv0, sstats0)
         resh = lambda a: a[:Tc].reshape(n_chunks, L)
         xs = (resh(u_race), resh(u_exp), resh(u_disp))
         if sparse:
@@ -1460,27 +1598,60 @@ def make_fused_runner(
             ts = ts.reshape(Tc)
         else:
             (evals,) = ys
-        ucarry, sstate, stats, slot_scale, p = carry
+        if serving_on:
+            ucarry, sstate, stats, slot_scale, p, sv, sstats = carry
+        else:
+            ucarry, sstate, stats, slot_scale, p = carry
+            sv = sstats = None
         if Tc < T:  # tail events past the last chunk boundary
             Kc = sample_dispatch(
                 p, u_disp[Tc:], u_mem[Tc:] if sparse else None
             )
-            ucarry, sstate, stats, slot_scale, ts_tail = advance(
-                ucarry, sstate, stats, slot_scale, p,
-                u_race[Tc:], u_exp[Tc:], Kc, Tc,
-                u_bit[Tc:] if sparse and faulty else None,
-            )
+            if serving_on:
+                (ucarry, sstate, stats, slot_scale, ts_tail, sv,
+                 sstats) = advance(
+                    ucarry, sstate, stats, slot_scale, p,
+                    u_race[Tc:], u_exp[Tc:], Kc, Tc, None, sv, sstats,
+                )
+            else:
+                ucarry, sstate, stats, slot_scale, ts_tail = advance(
+                    ucarry, sstate, stats, slot_scale, p,
+                    u_race[Tc:], u_exp[Tc:], Kc, Tc,
+                    u_bit[Tc:] if sparse and faulty else None,
+                )
             if collect_extras:
                 ts = jnp.concatenate([ts, ts_tail])
         if eval_on:
             evals = evals[eval_stride - 1 :: eval_stride]
         else:
             evals = jnp.zeros((0,))
+        def _serve_extras():
+            return {
+                "serve_arrivals": sstats.arrivals,
+                "serve_served": sstats.served,
+                "serve_shed": sstats.shed,
+                "serve_timed_out": sstats.timed_out,
+                "serve_retried": sstats.retried,
+                "serve_pending": jnp.sum((sv.stt != 0).astype(jnp.int32)),
+                "serve_sojourn_sum": sstats.sojourn - sstats.sojourn_c,
+                "serve_sojourn_hist": sstats.sojourn_hist,
+                "serve_stale_hist": sstats.stale_hist,
+                "serve_qdepth_time": sstats.qdepth_tw - sstats.qdepth_tw_c,
+                "serve_qdepth_max": sstats.qdepth_max,
+                "serve_checksum": sstats.checksum - sstats.checksum_c,
+                "serve_kg_step": sv.kg_step,
+                "serve_kg_slot": sv.kg_slot,
+                "serve_tokens": sv.tokens,
+                "serve_t_final": sstate.t,
+            }
+
         if not collect_extras:
             extras = {"p_final": p}
             if guard is not None:
                 extras["guard_rejects"] = ucarry[3][0]
                 extras["stale_drops"] = ucarry[3][1]
+            if serving_on:
+                extras.update(_serve_extras())
             return to_tree(ucarry[0]), evals, extras
         extras = {
             "t": ts,
@@ -1501,6 +1672,8 @@ def make_fused_runner(
         if sparse:
             # class-level extras: consumers expand per class via the counts
             extras["class_counts"] = jnp.asarray(classes.counts, jnp.int32)
+        if serving_on:
+            extras.update(_serve_extras())
         return to_tree(ucarry[0]), evals, extras
 
     if not wrap_lanes:
@@ -1753,7 +1926,7 @@ def jit_fused_runner(
     def _kw_entry(k, v):
         if k == "bound":
             return (k, None if v is None else (v.A, v.L, v.B, v.C, v.T, v.rho))
-        if k in ("fault", "guard"):
+        if k in ("fault", "guard", "serving"):
             return (k, None if v is None else v.cache_key())
         if k == "classes":
             return (k, None if v is None else v.cache_key())

@@ -35,6 +35,9 @@ import numpy as np
 
 __all__ = [
     "JacksonNetwork",
+    "MixedServingResult",
+    "mixed_serving_analysis",
+    "serving_slo",
     "buzen_normalizing_constants",
     "buzen_add_node",
     "buzen_remove_node",
@@ -624,3 +627,118 @@ def three_cluster_delay_bounds(
     m_slow = lam / mu_s * (C * (n / (n - n_m)) / n - 1.0 / ratio_m)
     # note: with equal thirds (n-n_m)=n/3 the paper writes 3C/n - 1/ratio.
     return float(m_fast), float(m_med), float(m_slow)
+
+
+# --------------------------------------------------------------------------- #
+# mixed open/closed analysis: serving plane coupled to the training network
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class MixedServingResult:
+    """Stationary quantities of the open serving queue beside the closed network.
+
+    All rates are in the physical (unrescaled) units of ``mu``.
+    """
+
+    lambda_train: float      # closed-network CS step throughput Lambda(C)
+    serve_rate_eff: float    # nu_eff: serve rate after training interference
+    rho: float               # offered load lambda_arr / nu_eff
+    block_prob: float        # P(shed): arrival finds the M/M/1/K queue full
+    admit_rate: float        # lambda_arr * (1 - block_prob)
+    mean_queue: float        # E[Q] including the request in service
+    mean_sojourn: float      # W = E[Q] / admit_rate (Little's law)
+    p99_sojourn: float       # FCFS tail estimate ln(100) * W
+    utilization: float       # P(server busy) = 1 - pi_0
+
+
+def serving_slo(
+    lambda_train: float,
+    *,
+    arrival_rate: float,
+    serve_rate: float,
+    queue_cap: int,
+    update_capacity: float | None = None,
+) -> MixedServingResult:
+    """M/M/1/K serving-plane factor at a given training throughput.
+
+    ``update_capacity`` models the *host* coupling that the merged CTMC
+    abstracts away: the serve loop shares one host with the update scan, so
+    each training step at throughput ``lambda_train`` steals
+    1/update_capacity of the wall clock and the effective serve rate shrinks
+    to
+
+        nu_eff = serve_rate * max(1 - lambda_train/update_capacity, 0.05).
+
+    With ``update_capacity=None`` the planes are independent and
+    ``nu_eff = serve_rate`` — the exact law of the simulated merged chain.
+    The p99 estimate is the FCFS exponential-tail approximation
+    ``ln(100) * W``.
+    """
+    if arrival_rate <= 0 or serve_rate <= 0:
+        raise ValueError("arrival_rate and serve_rate must be positive")
+    if queue_cap < 1:
+        raise ValueError("queue_cap must be >= 1")
+    if update_capacity is not None:
+        frac = max(1.0 - float(lambda_train) / float(update_capacity), 0.05)
+        nu_eff = serve_rate * frac
+    else:
+        nu_eff = float(serve_rate)
+    K = int(queue_cap)
+    rho = arrival_rate / nu_eff
+    if abs(rho - 1.0) < 1e-12:
+        block = 1.0 / (K + 1)
+        mean_q = K / 2.0
+        pi0 = 1.0 / (K + 1)
+    else:
+        block = (1.0 - rho) * rho**K / (1.0 - rho ** (K + 1))
+        mean_q = rho / (1.0 - rho) - (K + 1) * rho ** (K + 1) / (
+            1.0 - rho ** (K + 1)
+        )
+        pi0 = (1.0 - rho) / (1.0 - rho ** (K + 1))
+    admit = arrival_rate * (1.0 - block)
+    W = mean_q / admit if admit > 0 else math.inf
+    return MixedServingResult(
+        lambda_train=float(lambda_train),
+        serve_rate_eff=float(nu_eff),
+        rho=float(rho),
+        block_prob=float(block),
+        admit_rate=float(admit),
+        mean_queue=float(mean_q),
+        mean_sojourn=float(W),
+        p99_sojourn=float(math.log(100.0) * W),
+        utilization=float(1.0 - pi0),
+    )
+
+
+def mixed_serving_analysis(
+    mu: np.ndarray,
+    p: np.ndarray,
+    C: int,
+    *,
+    arrival_rate: float,
+    serve_rate: float,
+    queue_cap: int,
+    update_capacity: float | None = None,
+) -> MixedServingResult:
+    """Product-form analysis of the merged open/closed network.
+
+    The engine merges an open Poisson(``arrival_rate``) inference stream into
+    the closed Jackson network's event race (`repro.core.serving`).  In the
+    merged CTMC the serving clocks are independent of the training state, so
+    the stationary law factorizes: closed product-form marginal (Prop. 2)
+    x an M/M/1/K marginal with K = ``queue_cap`` for the serve queue.  This
+    evaluates the closed factor with Buzen's algorithm and composes it with
+    the open factor via `serving_slo` (which also carries the optional
+    ``update_capacity`` host-interference model).
+    `repro.core.sampling.optimize_tradeoff` drives this to trade training
+    throughput against the serving SLO.
+    """
+    net = JacksonNetwork(mu=np.asarray(mu, float), p=np.asarray(p, float), C=C)
+    return serving_slo(
+        net.throughput(),
+        arrival_rate=arrival_rate,
+        serve_rate=serve_rate,
+        queue_cap=queue_cap,
+        update_capacity=update_capacity,
+    )

@@ -92,6 +92,7 @@ __all__ = [
     "KIND_CRASH",
     "KIND_TIMEOUT",
     "KIND_FLIP",
+    "KIND_SERVE",
 ]
 
 #: event kind tags shared by the host simulator, the device stream and the
@@ -102,6 +103,14 @@ KIND_COMPLETE = 0
 KIND_CRASH = 1
 KIND_TIMEOUT = 2
 KIND_FLIP = 3
+#: open-queue serving event (core.serving): an inference-plane arrival /
+#: completion / deadline / retry-release interleaved into the merged race.
+#: Serve events carry ``j = n`` and ``slot = C`` so every training-side
+#: gather clamps harmlessly and every scatter drops out of bounds — the
+#: same masking pattern as KIND_FLIP.  The serving sub-kind (arrival vs
+#: completion vs timeout vs release) is resolved inside
+#: `serving.serve_apply`, not in the event tag.
+KIND_SERVE = 4
 
 #: shared RNG pre-draw block size — every entry point uses the same default so
 #: `simulate(cfg)`, `simulate_batch(cfg)` and `ClosedNetworkSim(cfg).run(T)`

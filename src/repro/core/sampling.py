@@ -24,17 +24,24 @@ from dataclasses import dataclass, replace
 
 import numpy as np
 
-from .jackson import JacksonNetwork, batched_expected_delays
+from .jackson import (
+    JacksonNetwork,
+    MixedServingResult,
+    batched_expected_delays,
+    serving_slo,
+)
 from .theory import BoundConstants, eta_max_components, generalized_bound, optimal_eta
 
 __all__ = [
     "SamplingResult",
+    "TradeoffResult",
     "bound_for_p",
     "bound_for_p_batch",
     "bound_value_and_grad",
     "optimize_two_cluster",
     "optimize_general",
     "optimize_physical_time",
+    "optimize_tradeoff",
     "two_cluster_p_vector",
 ]
 
@@ -435,3 +442,117 @@ def optimize_physical_time(
     mu_del = net_u.expected_delays()
     ub = generalized_bound(optimal_eta(u, mu_del, ku), u, mu_del, ku)
     return SamplingResult(p=p_vec, eta=eta, bound=bound, uniform_bound=ub, m=m)
+
+
+@dataclass
+class TradeoffResult:
+    """Optimum of the training-bound / serving-SLO tradeoff."""
+
+    p: np.ndarray
+    eta: float
+    bound: float                 # training bound G at the optimum
+    serving: MixedServingResult  # serving-plane factors at the optimum
+    objective: float             # G + weight * mean_sojourn
+    uniform_objective: float     # same objective at p = 1/n
+
+    @property
+    def relative_improvement(self) -> float:
+        if not np.isfinite(self.uniform_objective) or self.uniform_objective == 0:
+            return 0.0
+        return float(
+            (self.uniform_objective - self.objective) / self.uniform_objective
+        )
+
+
+def _throughput_and_grad(
+    mu: np.ndarray, p: np.ndarray, C: int
+) -> tuple[float, np.ndarray]:
+    """(Lambda(p), dLambda/dp) from the product-form identity.
+
+    Lambda = H_{C-1}/H_C in unrescaled theta units, and
+    d log H_N / d theta_i = E_N[X_i] / theta_i, so with theta_i = p_i/mu_i:
+
+        dLambda/dp_i = Lambda * (E_{C-1}[X_i] - E_C[X_i]) / p_i.
+    """
+    net = JacksonNetwork(mu=mu, p=p, C=C)
+    lam = net.throughput()
+    qC = net.mean_queue_lengths()
+    qCm1 = net.mean_queue_lengths(ntasks=C - 1)
+    return lam, lam * (qCm1 - qC) / p
+
+
+def optimize_tradeoff(
+    mu: np.ndarray,
+    k: BoundConstants,
+    serving,
+    *,
+    weight: float = 1.0,
+    update_capacity: float | None = None,
+    iters: int = 100,
+    lr: float = 0.3,
+) -> TradeoffResult:
+    """Mirror descent on  G(p) + weight * W_serve(Lambda(p)).
+
+    ``serving`` is duck-typed as `repro.core.serving.ServingConfig` — only
+    ``arrival_rate``, ``serve_rate`` and ``queue_cap`` are read.  The serving
+    mean sojourn W couples to p through the training throughput Lambda(p)
+    via the ``update_capacity`` host-interference model (`jackson.serving_slo`):
+    sampling fast clients more raises Lambda, which squeezes the effective
+    serve rate and inflates W.  With ``update_capacity=None`` the penalty is
+    constant in p and the optimum coincides with `optimize_general`.
+
+    The gradient composes the analytic bound gradient
+    (`bound_value_and_grad`) with the exact product-form throughput gradient
+    (`_throughput_and_grad`) and a scalar central difference for dW/dLambda
+    (W is a smooth scalar map; one FD evaluation costs two M/M/1/K
+    closed-form evaluations, no Buzen pass).
+    """
+    mu = np.asarray(mu, dtype=np.float64)
+    n = mu.size
+    lam_arr = float(serving.arrival_rate)
+    nu_s = float(serving.serve_rate)
+    K = int(serving.queue_cap)
+
+    def slo(lam_train: float) -> MixedServingResult:
+        return serving_slo(
+            lam_train, arrival_rate=lam_arr, serve_rate=nu_s,
+            queue_cap=K, update_capacity=update_capacity,
+        )
+
+    def penalty_and_dlam(lam_train: float) -> tuple[float, float]:
+        W = slo(lam_train).mean_sojourn
+        h = max(1e-6 * abs(lam_train), 1e-9)
+        dW = (slo(lam_train + h).mean_sojourn
+              - slo(lam_train - h).mean_sojourn) / (2 * h)
+        return weight * W, weight * dW
+
+    def objective(pv: np.ndarray) -> float:
+        val = bound_for_p(mu, pv, k)[0]
+        lam, _ = _throughput_and_grad(mu, pv, k.C)
+        return val + penalty_and_dlam(lam)[0]
+
+    p = np.full(n, 1.0 / n)
+    floor = 1e-5 / n
+    best_p, best_v = p.copy(), objective(p)
+    for _ in range(iters):
+        val, _, _, g = bound_value_and_grad(mu, p, k)
+        lam, dlam = _throughput_and_grad(mu, p, k.C)
+        pen, dpen = penalty_and_dlam(lam)
+        total = val + pen
+        if total < best_v:
+            best_p, best_v = p.copy(), total
+        g = g + dpen * dlam
+        g = g - float(g @ p)
+        p = p * np.exp(-lr * g / (np.abs(g).max() + 1e-12))
+        p = np.maximum(p, floor)
+        p /= p.sum()
+    v = objective(p)
+    if v < best_v:
+        best_p, best_v = p.copy(), v
+    bound, eta, _ = bound_for_p(mu, best_p, k)
+    lam, _ = _throughput_and_grad(mu, best_p, k.C)
+    u = np.full(n, 1.0 / n)
+    return TradeoffResult(
+        p=best_p, eta=eta, bound=bound, serving=slo(lam),
+        objective=best_v, uniform_objective=objective(u),
+    )

@@ -48,6 +48,7 @@ from .queue_sim import (
     KIND_COMPLETE,
     KIND_CRASH,
     KIND_FLIP,
+    KIND_SERVE,
     KIND_TIMEOUT,
     EventBlocks,
     EventStream,
@@ -62,6 +63,7 @@ __all__ = [
     "stream_init",
     "stream_step",
     "fault_stream_step",
+    "merged_stream_step",
     "resolve_fault_rates",
     "stats_init",
     "stats_step",
@@ -389,6 +391,88 @@ def fault_stream_step(state: StreamState, mu, fr, xs):
         StreamState(occ=occ, ring=ring, head=head, tail=tail, t=t,
                     avail=avail, t_c=t_c),
         Event(j=j, k=k_new, t=t, slot=s, dt=dt, kind=kind),
+    )
+
+
+def merged_stream_step(state: StreamState, mu, ext_rate, xs, fr=None):
+    """One event of the closed network merged with an external event class.
+
+    ``ext_rate`` is the total rate of an independent open stream (the
+    serving plane, `serving.serve_total_rate`) racing against the closed
+    network's clocks.  With all clocks exponential the merged system is a
+    CTMC: the holding time is ``Exp(r_train + ext_rate)`` and the winner is
+    external w.p. ``ext_rate / (r_train + ext_rate)`` — one pre-drawn
+    uniform pair still suffices, and the *conditional* uniforms handed to
+    each side (``x / r_train`` resp. ``(x - r_train) / ext_rate`` with
+    ``x = u_race * tot``) are again uniform, so both sub-races stay exact
+    in law.
+
+    External wins leave the queues untouched and emit ``Event(j=n,
+    slot=C, kind=KIND_SERVE)`` — the KIND_FLIP masking pattern: training-
+    side gathers clamp, scatters drop.  ``fr`` switches the closed side to
+    the faulty 4n-clock race of `fault_stream_step`.  Returns
+    ``(state', ev, is_ext, u_ext)`` where ``u_ext`` is the external side's
+    conditional uniform (garbage unless ``is_ext``).
+    """
+    import jax.numpy as jnp
+
+    u_race, u_exp, k_new = xs
+    occ, ring, head, tail, t, avail = (
+        state.occ, state.ring, state.head, state.tail, state.t, state.avail,
+    )
+    n, C = ring.shape
+    faulty = fr is not None
+    if faulty:
+        kappa, theta, q_off, q_on = fr
+        busy = occ > 0
+        rates = jnp.concatenate([
+            jnp.where(busy, mu * avail, 0.0),
+            jnp.where(busy, kappa * avail, 0.0),
+            jnp.where(busy, theta, 0.0),
+            jnp.where(avail > 0, q_off, q_on),
+        ])
+    else:
+        rates = jnp.where(occ > 0, mu, 0.0)
+    rtree = tree_build(rates)
+    r_train = jnp.maximum(rtree[1], 1e-30)
+    ext = jnp.asarray(ext_rate, jnp.float32)
+    tot = r_train + ext
+    dt = -jnp.log1p(-u_exp) / tot
+    t, t_c = kahan_add(t, state.t_c, dt)
+    x = u_race * tot
+    is_ext = x >= r_train
+    # conditional uniforms: exact given the branch (clipped only against
+    # the open boundary so the tree descent stays in range)
+    u_train = jnp.clip(x / r_train, 0.0, 1.0 - 1e-7)
+    u_ext = jnp.clip((x - r_train) / jnp.maximum(ext, 1e-30),
+                     0.0, 1.0 - 1e-7)
+    idx = tree_sample(rtree, u_train).astype(jnp.int32)
+    if faulty:
+        kind = jnp.where(is_ext, KIND_SERVE, idx // n)
+        j = idx % n
+    else:
+        kind = jnp.where(is_ext, KIND_SERVE, KIND_COMPLETE)
+        j = idx
+    j = jnp.where(is_ext, n, j).astype(jnp.int32)
+    move = kind < KIND_FLIP  # excludes flips AND external events
+    s = jnp.where(move, ring[j % n, head[j % n] % C], C).astype(jnp.int32)
+    mv = move.astype(jnp.int32)
+    head = head.at[j].add(mv, mode="drop")
+    occ = occ.at[j].add(-mv, mode="drop")
+    push_row = jnp.where(move, k_new, n)
+    ring = ring.at[push_row, tail[k_new] % C].set(s, mode="drop")
+    tail = tail.at[k_new].add(mv)
+    occ = occ.at[k_new].add(mv)
+    if faulty:
+        flip = ((kind == KIND_FLIP) & ~is_ext).astype(jnp.float32)
+        avail = avail.at[j].add(flip * (1.0 - 2.0 * avail[j % n]),
+                                mode="drop")
+    return (
+        StreamState(occ=occ, ring=ring, head=head, tail=tail, t=t,
+                    avail=avail, t_c=t_c),
+        Event(j=j, k=k_new, t=t, slot=s, dt=dt, kind=kind),
+        is_ext,
+        u_ext,
     )
 
 

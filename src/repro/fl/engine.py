@@ -389,6 +389,7 @@ def run_experiment(
     task=None,
     faults=None,
     guard=None,
+    serving=None,
     ckpt_dir: str | None = None,
     ckpt_every: int = 0,
     resume: bool = False,
@@ -416,6 +417,9 @@ def run_experiment(
     Robustness knobs (async methods): ``faults`` injects client churn /
     crashes / straggler timeouts (`repro.core.FaultConfig`); ``guard``
     rejects divergent or over-stale updates (`repro.core.GuardConfig`);
+    ``serving`` merges an open inference-request stream into the device
+    event race and serves from the snapshot ring
+    (`repro.core.ServingConfig`, requires ``flc.stream == "device"``);
     ``ckpt_dir`` + ``ckpt_every`` checkpoint the full engine state every
     ``ckpt_every`` CS steps (scan engine), and ``resume=True`` restores the
     latest checkpoint and continues — a killed run resumed this way produces
@@ -471,6 +475,7 @@ def run_experiment(
         segmentation=flc.segmentation,
         faults=faults,
         guard=guard,
+        serving=serving,
         ckpt_dir=ckpt_dir,
         ckpt_every=ckpt_every,
         resume=resume,

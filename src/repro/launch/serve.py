@@ -1,8 +1,29 @@
-"""Batched serving driver: prefill + decode loop with the unified serve_step.
+"""Resilient serving driver: continual training under live inference traffic.
+
+Two coupled planes (ROADMAP item 5, `docs/architecture.md` "Serving under
+live traffic"):
+
+1. **Training plane** — the fused device-stream engine runs async-LM
+   pre-training of the requested architecture (`repro.fl.engine.LMTask`)
+   over the closed Jackson network, with an open Poisson inference stream
+   merged into the event race (`repro.core.serving.ServingConfig`):
+   token-bucket admission, load shedding above the queue-depth cap,
+   deadline timeouts with capped exponential-backoff retries, and reads
+   served from the last known-good snapshot (guard-rejected updates are
+   never observable).
+2. **Decode plane** — the trained weights then serve a batched prefill +
+   decode loop through the unified ``api.serve_step`` (ring KV cache /
+   SSM state / MoE routing, per architecture family).
+
+CLI:
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --batch 4 --steps 32
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
+        --train-steps 200 --arrival-rate 2.0 --serve-rate 4.0
 
-Runs the reduced (smoke) variant on CPU; on TPU pass --preset full and a mesh.
+``--train-steps 0`` (default) skips the training plane and reproduces the
+plain batched-decode driver; ``run_serve`` returns everything as a dict for
+tests and `benchmarks/engine.py --serve`.
 """
 from __future__ import annotations
 
@@ -27,18 +48,73 @@ def materialize_cache(spec: dict) -> dict:
     return jax.tree_util.tree_map(one, spec)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def _parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--preset", choices=["small", "full"], default="small")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    # training-plane knobs (0 train steps = decode-only, the old driver)
+    ap.add_argument("--train-steps", type=int, default=0)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--concurrency", type=int, default=4)
+    ap.add_argument("--eta", type=float, default=0.05)
+    # serving-plane knobs (arrival-rate 0 = train without live traffic)
+    ap.add_argument("--arrival-rate", type=float, default=2.0)
+    ap.add_argument("--serve-rate", type=float, default=4.0)
+    ap.add_argument("--queue-cap", type=int, default=8)
+    ap.add_argument("--bucket-rate", type=float, default=0.0)
+    ap.add_argument("--bucket-cap", type=float, default=8.0)
+    ap.add_argument("--deadline", type=float, default=2.0)
+    ap.add_argument("--max-retries", type=int, default=2)
+    return ap
 
-    cfg = smoke_config(args.arch) if args.preset == "small" else get_config(args.arch)
-    params = init_params(api.model_meta(cfg), jax.random.PRNGKey(args.seed))
+
+def _train_under_traffic(cfg, args) -> tuple[dict, dict]:
+    """Training plane: fused engine + merged open serving stream.
+
+    Returns (final_params, serve_extras) — the serve_* counters of the
+    merged run (arrival/served/shed/timed-out conservation, staleness
+    histogram, p50/p99 sojourn inputs, known-good step).
+    """
+    from repro.configs.base import FLConfig
+    from repro.core.serving import ServingConfig
+    from repro.fl.engine import LMTask, run_experiment
+
+    serving = None
+    if args.arrival_rate > 0:
+        serving = ServingConfig(
+            arrival_rate=args.arrival_rate,
+            serve_rate=args.serve_rate,
+            queue_cap=args.queue_cap,
+            bucket_rate=args.bucket_rate,
+            bucket_cap=args.bucket_cap,
+            deadline=args.deadline,
+            max_retries=args.max_retries,
+        )
+    flc = FLConfig(
+        n_clients=args.clients,
+        concurrency=args.concurrency,
+        server_steps=args.train_steps,
+        sampling="uniform",
+        seed=args.seed,
+        engine="scan",
+        stream="device",
+        sparse=False,
+    )
+    run = run_experiment(
+        flc, "gen_async", eta=args.eta, eval_every=0,
+        task=LMTask(cfg, batch_size=2, seq_len=16, shard_size=8, eval_batch=2),
+        serving=serving,
+    )
+    extras = {k: v for k, v in run.extras.items() if k.startswith("serve_")}
+    return run.final_params, extras
+
+
+def _decode(cfg, params, args) -> dict:
+    """Decode plane: batched prefill + decode through api.serve_step."""
     rng = np.random.default_rng(args.seed)
     B = args.batch
     cache = materialize_cache(api.init_cache(cfg, B, args.prompt_len + args.steps))
@@ -60,20 +136,66 @@ def main() -> None:
     generated = []
     t0 = time.time()
     nxt = out["next_ids"][:, None]
+    logits_finite = bool(jnp.all(jnp.isfinite(out["logits"])))
     for _ in range(args.steps):
         if cfg.frontend == "audio_stub":
             batch = {"embeds": jnp.zeros((B, 1, cfg.d_model), jnp.float32)}
         else:
             batch = {"tokens": nxt}
         out, cache = step(params, cache, batch)
+        logits_finite = logits_finite and bool(jnp.all(jnp.isfinite(out["logits"])))
         nxt = out["next_ids"][:, None]
         generated.append(np.asarray(out["next_ids"]))
     t_dec = time.time() - t0
     gen = np.stack(generated, axis=1)
-    print(f"arch={cfg.name} batch={B} prefill={args.prompt_len}tok/{t_prefill*1e3:.1f}ms "
-          f"decode={args.steps}tok/{t_dec*1e3:.1f}ms "
-          f"({B*args.steps/t_dec:.1f} tok/s aggregate)")
-    print("sample generation (client 0):", gen[0][:16].tolist())
+    return {
+        "generated": gen,
+        "prefill_s": t_prefill,
+        "decode_s": t_dec,
+        "tok_per_s": B * args.steps / max(t_dec, 1e-9),
+        "logits_finite": logits_finite,
+    }
+
+
+def run_serve(argv: list[str] | None = None) -> dict:
+    """Full driver as a callable: parse ``argv``, run both planes, return stats.
+
+    The returned dict always has the decode stats; when ``--train-steps > 0``
+    it also carries ``train_wall_s`` and the ``serve_*`` counters of the
+    merged training run.
+    """
+    args = _parser().parse_args(argv)
+    cfg = smoke_config(args.arch) if args.preset == "small" else get_config(args.arch)
+    result: dict = {"arch": cfg.name}
+
+    if args.train_steps > 0:
+        t0 = time.time()
+        params, serve_extras = _train_under_traffic(cfg, args)
+        result["train_wall_s"] = time.time() - t0
+        result.update(serve_extras)
+    else:
+        params = init_params(api.model_meta(cfg), jax.random.PRNGKey(args.seed))
+
+    result.update(_decode(cfg, params, args))
+    return result
+
+
+def main() -> None:
+    r = run_serve()
+    print(
+        f"arch={r['arch']} prefill={r['prefill_s']*1e3:.1f}ms "
+        f"decode={r['decode_s']*1e3:.1f}ms ({r['tok_per_s']:.1f} tok/s aggregate) "
+        f"logits_finite={r['logits_finite']}"
+    )
+    if "serve_arrivals" in r:
+        print(
+            f"serving: arrivals={int(r['serve_arrivals'])} "
+            f"served={int(r['serve_served'])} shed={int(r['serve_shed'])} "
+            f"timed_out={int(r['serve_timed_out'])} "
+            f"retried={int(r['serve_retried'])} "
+            f"known_good_step={int(r['serve_kg_step'])}"
+        )
+    print("sample generation (client 0):", r["generated"][0][:16].tolist())
 
 
 if __name__ == "__main__":

@@ -253,6 +253,57 @@ def test_run_experiment_resume_bitwise(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# background-writer failure surfacing (_AsyncSaver)
+# ---------------------------------------------------------------------------
+
+
+def test_async_saver_unwritable_dir_raises_and_reaps(tmp_path, monkeypatch):
+    # A read-only checkpoint dir (EROFS; the test injects the failure at
+    # the save layer because the suite may run as root, which chmod does
+    # not stop).  The background writer captures the OSError; the driver
+    # must surface it at the next put()/close() AND reap the worker thread
+    # — the regression was a writer thread leaked forever on the queue
+    # when put() raised.
+    import threading
+
+    from repro.core import engine_ckpt as ec
+
+    def boom(*a, **k):
+        raise OSError(30, "Read-only file system")
+
+    monkeypatch.setattr(ec, "_save_state", boom)
+    before = threading.active_count()
+    with pytest.raises(OSError, match="Read-only file system"):
+        _run_fused_f32(str(tmp_path / "ro"), False)
+    assert threading.active_count() == before  # no leaked writer thread
+
+
+def test_async_saver_abort_idempotent(tmp_path, monkeypatch):
+    import time
+
+    from repro.core import engine_ckpt as ec
+
+    def boom(*a, **k):
+        raise OSError(28, "No space left on device")
+
+    monkeypatch.setattr(ec, "_save_state", boom)
+    saver = ec._AsyncSaver(str(tmp_path), "fp", keep=2)
+    saver.put(1, {"x": np.zeros(2)}, np.zeros(1))
+    for _ in range(200):  # wait for the worker to capture the failure
+        if saver._err is not None:
+            break
+        time.sleep(0.01)
+    assert saver._err is not None
+    with pytest.raises(OSError, match="No space left"):
+        saver.put(2, {"x": np.zeros(2)}, np.zeros(1))
+    assert not saver._worker.is_alive()  # put() reaped it before raising
+    saver.abort()  # idempotent after the reap
+    saver.abort()
+    with pytest.raises(OSError, match="No space left"):
+        saver.close()  # close still surfaces the captured error
+
+
+# ---------------------------------------------------------------------------
 # true kill-and-resume: child process SIGKILLs itself mid-run
 # ---------------------------------------------------------------------------
 
