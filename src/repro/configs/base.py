@@ -161,6 +161,12 @@ class FLConfig:
                                    # block_size a >1 multiple of it)
     segmentation: str = "greedy"   # blocked cut placement: greedy | dp
                                    # (queue_sim.segment_blocks)
+    scenario: str | None = None    # scenario-registry name (core.scenario.
+                                   # SCENARIOS): phase-type service + Markov-
+                                   # modulated availability; None or
+                                   # "exponential" keeps the paper's exp/
+                                   # always-on law (bitwise-identical engine
+                                   # path)
 
     def replace(self, **kw) -> "FLConfig":
         return dataclasses.replace(self, **kw)

@@ -40,6 +40,7 @@ import numpy as np
 from .queue_sim import (
     KIND_COMPLETE,
     KIND_FLIP,
+    KIND_STAGE,
     ClosedNetworkSim,
     FaultConfig,
     SimConfig,
@@ -160,6 +161,12 @@ class ServerConfig:
                                  # snapshot ring (last known-good iterate)
                                  # without blocking the update scan; serve_*
                                  # counters land in TraceRecord.extras
+    scenario: Any | None = None  # scenario.ScenarioConfig (or a registry
+                                 # name): phase-type service + Markov-
+                                 # modulated availability.  Mutually
+                                 # exclusive with `faults`; both engines
+                                 # honor it — stage advances / flips apply
+                                 # no update, exactly like fault events
 
 
 @dataclass
@@ -180,6 +187,18 @@ def _resolve(cfg: ServerConfig) -> tuple[np.ndarray, np.ndarray]:
     p = np.full(cfg.n, 1.0 / cfg.n) if cfg.p is None else np.asarray(cfg.p, float)
     mu = np.ones(cfg.n) if cfg.mu is None else np.asarray(cfg.mu, float)
     return p, mu
+
+
+def _resolve_scenario_cfg(cfg: ServerConfig):
+    """``cfg.scenario`` (name | ScenarioConfig | None) -> enabled config or
+    None.  A disabled scenario (exponential + always-on) resolves to None so
+    every engine takes its unmodified — bitwise-identical — path."""
+    if cfg.scenario is None:
+        return None
+    from .scenario import get_scenario
+
+    sc = get_scenario(cfg.scenario)
+    return sc if sc.enabled else None
 
 
 # sparse="auto" switches the device stream to the O(C) class-collapsed
@@ -287,18 +306,25 @@ DEFAULT_BLOCK_SIZE_MAX = 16
 AUTO_PROBE_STEPS = 4000
 
 
-def _probe_stream_slots(mu, p, C: int, T: int, seed) -> np.ndarray:
+def _probe_stream_slots(mu, p, C: int, T: int, seed, fault=None,
+                        scenario=None) -> np.ndarray:
     """Short device-generated probe stream for block-size auto-selection.
 
     The fused engine never materializes its event stream, so ``"auto"`` on
     the device path measures conflict rates on a (law-identical) probe of at
     most `AUTO_PROBE_STEPS` CS steps from `stream_device.generate_stream`.
     Shared by `_run_scan` and `fl.run_matrix` so both resolve "auto"
-    identically.
+    identically.  The probe must draw from the *configured* stream — a
+    faultless/exponential probe under faults or a scenario would understate
+    slot-conflict rates (stage/flip events carry the trash slot C, which
+    never conflicts) and bias ``block_size="auto"``.
     """
     from .stream_device import generate_stream
 
-    return generate_stream(mu, p, C, min(T, AUTO_PROBE_STEPS), seed=seed).slot
+    return generate_stream(
+        mu, p, C, min(T, AUTO_PROBE_STEPS), seed=seed, fault=fault,
+        scenario=scenario,
+    ).slot
 
 
 def _auto_block_size(slots, devices: int = 1, cut_every: int = 0) -> int:
@@ -364,6 +390,21 @@ def _run_scan(
         raise NotImplementedError("track_virtual requires engine='python'")
     weighting = "plain" if fedbuff_Z else cfg.weighting
     faults = cfg.faults if (cfg.faults is not None and cfg.faults.enabled) else None
+    scenario = _resolve_scenario_cfg(cfg)
+    if scenario is not None:
+        if faults is not None:
+            raise ValueError(
+                "scenario= and faults= are separate injection paths; model "
+                "suspension via ScenarioConfig modulation (rate_scale)"
+            )
+        if fedbuff_Z:
+            raise ValueError(
+                "scenario= composes with Algorithm 1, not FedBuff"
+            )
+        if cfg.service != "exp":
+            raise ValueError(
+                "scenario= replaces the service law; leave service='exp'"
+            )
     guard = cfg.guard
     guard_stale = guard is not None and int(guard.stale_cutoff) > 0
     ckpt_on = cfg.ckpt_dir is not None
@@ -404,17 +445,35 @@ def _run_scan(
                 "serving composes with the dense stream only (the serve "
                 "read path indexes the dense snapshot ring)"
             )
-        if (cfg.sparse is True or cfg.sparse == "auto") and serving is None:
+        if scenario is not None:
+            if cfg.sparse is True:
+                raise ValueError(
+                    "the fused engine's scenario path is dense-only; use "
+                    "sparse_stats_stream_fn(scenario=True) for class-level "
+                    "laws"
+                )
+            if serving is not None:
+                raise ValueError("scenario= does not compose with serving=")
+            if ckpt_on:
+                raise ValueError(
+                    "scenario= does not compose with checkpointing yet"
+                )
+            if block_size == "auto":
+                block_size = 1  # scenario stream is per-event
+            elif int(block_size) > 1:
+                raise ValueError("scenario= requires block_size=1")
+        elif (cfg.sparse is True or cfg.sparse == "auto") and serving is None:
             classes, class_mu, class_p = _resolve_sparse(
                 cfg, mu, p, block_size, ckpt_on
             )
-        elif cfg.sparse is not False:
+        elif cfg.sparse not in (False, "auto"):
             raise ValueError(f"sparse={cfg.sparse!r} (expected bool or 'auto')")
         if classes is not None:
             block_size = 1  # sparse stream is per-event; skip the auto probe
         if block_size == "auto":
             block_size = _auto_block_size(
-                _probe_stream_slots(mu, p, cfg.C, cfg.T, cfg.seed),
+                _probe_stream_slots(mu, p, cfg.C, cfg.T, cfg.seed,
+                                    fault=faults),
                 cfg.devices,
             )
         if ckpt_on:
@@ -477,6 +536,7 @@ def _run_scan(
             guard=guard,
             classes=classes,
             serving=serving,
+            scenario=scenario,
         )
         run_mu = mu if classes is None else class_mu
         run_p = p if classes is None else class_p
@@ -526,7 +586,7 @@ def _run_scan(
             SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service,
                       seed=cfg.seed,
                       record_delays=cfg.collect_extras or guard_stale,
-                      fault=faults)
+                      fault=faults, scenario=scenario)
         )
         scale = step_scales(stream, cfg.eta, p, weighting)
         host_stale_drops = 0
@@ -648,9 +708,9 @@ def _run_scan(
             gcnt = np.asarray(gcnt)
             trace.extras["guard_rejects"] = int(gcnt[0])
             trace.extras["stale_drops"] = int(gcnt[1]) + host_stale_drops
-        if faults is not None and stream.kind is not None:
+        if stream.kind is not None and (faults is not None or scenario is not None):
             trace.extras["kind_count"] = np.bincount(
-                stream.kind, minlength=4
+                stream.kind, minlength=6 if scenario is not None else 4
             )
 
     if eval_fn is not None and cfg.eval_every:
@@ -682,16 +742,18 @@ def run_generalized_async_sgd(
         raise ValueError("stream='device' / adaptive require engine='scan'")
     if cfg.ckpt_dir is not None:
         raise ValueError("checkpointing requires engine='scan'")
+    scenario = _resolve_scenario_cfg(cfg)
     sim = ClosedNetworkSim(
         SimConfig(mu=mu, p=p, C=cfg.C, T=cfg.T, service=cfg.service,
-                  seed=cfg.seed, record_delays=True, fault=cfg.faults)
+                  seed=cfg.seed, record_delays=True, fault=cfg.faults,
+                  scenario=scenario)
     )
     apply_update = cfg.apply_update or (lambda w, g, s: _axpy(w, g, -s))
     faults_on = cfg.faults is not None and cfg.faults.enabled
-    if faults_on or cfg.guard is not None:
+    if faults_on or cfg.guard is not None or scenario is not None:
         if cfg.track_virtual:
             raise NotImplementedError(
-                "track_virtual does not compose with faults/guards"
+                "track_virtual does not compose with faults/guards/scenarios"
             )
         return _python_fault_loop(w0, source, cfg, eval_fn, p, sim,
                                   apply_update)
@@ -775,7 +837,9 @@ def _python_fault_loop(
     for k in range(cfg.T):
         kind, j, k_new = sim.step_event()
         times[k] = sim.now
-        if kind == KIND_FLIP:
+        if kind == KIND_FLIP or kind == KIND_STAGE:
+            # no task moved: flips touch no queue, stage advances keep the
+            # head task in service — no snapshot pop, no update
             continue
         w_disp, disp_k = snaps[j].popleft()
         if kind == KIND_COMPLETE:
@@ -812,7 +876,8 @@ def _python_fault_loop(
         "guard_rejects": gcnt[0],
         "stale_drops": gcnt[1],
         "kind_count": np.asarray(sim.kind_counts)
-        if getattr(sim, "_fault", False) else None,
+        if getattr(sim, "_fault", False) or getattr(sim, "_scenario", False)
+        else None,
     }
     return w, trace
 
@@ -836,9 +901,10 @@ def run_fedbuff(
         raise ValueError(cfg.engine)
     if cfg.stream == "device" or cfg.adaptive:
         raise ValueError("stream='device' / adaptive require engine='scan'")
-    if (cfg.faults is not None and cfg.faults.enabled) or cfg.guard is not None:
+    if ((cfg.faults is not None and cfg.faults.enabled) or cfg.guard is not None
+            or _resolve_scenario_cfg(cfg) is not None):
         raise ValueError(
-            "faults/guards compose with Algorithm 1 "
+            "faults/guards/scenarios compose with Algorithm 1 "
             "(run_generalized_async_sgd), not the FedBuff reference loop"
         )
     if cfg.ckpt_dir is not None:

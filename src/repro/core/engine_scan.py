@@ -958,7 +958,7 @@ def _make_host_block_runner(
 def _make_fused_advance(
     grad_fn, n, C, E, update_step, pack, unpack, enc, fedbuff_Z, guard, *,
     importance, faulty, guard_stale, need_stats, axis, lane_devices, unroll,
-    classes=None, serving=None,
+    classes=None, serving=None, scenario=False,
 ):
     """The chunk-advance core of the fused engine, shared with `engine_ckpt`.
 
@@ -986,6 +986,20 @@ def _make_fused_advance(
     sparse = classes is not None
     if sparse and E > 1:
         raise ValueError("the sparse stream supports block_size=1 only")
+    scen_on = bool(scenario)
+    if scen_on:
+        # scenario streams reuse the fault-mode masking idiom (stage/flip
+        # events carry slot C and scale 0); `fr` carries the ScenarioRates
+        if faulty:
+            raise ValueError("scenario= and fault= are separate injection "
+                             "paths; compose via ScenarioConfig modulation")
+        if sparse:
+            raise ValueError(
+                "the fused engine's scenario path is dense-only; use "
+                "sparse_stats_stream_fn for class-level scenario laws"
+            )
+        if E > 1:
+            raise ValueError("scenario= requires block_size=1")
     spec = classes.device() if sparse else None
     m_cls = classes.m if sparse else 0
     serving_on = serving is not None and serving.enabled
@@ -1051,6 +1065,14 @@ def _make_fused_advance(
                     sstate, ev = sd.sparse_stream_step(
                         sstate, mu, spec, (urk, uek, kn)
                     )
+            elif scen_on:
+                urk, uek, kn, uphk, k = x
+                occ_pre = sstate.occ
+                avail_pre = sstate.avail
+                speed_pre = avail_pre + (1.0 - avail_pre) * fr.rate_scale
+                sstate, ev = sd.scenario_stream_step(
+                    sstate, mu, fr, (urk, uek, kn, uphk)
+                )
             else:
                 urk, uek, kn, k = x
                 occ_pre = sstate.occ
@@ -1064,7 +1086,7 @@ def _make_fused_advance(
             # flips carry slot C: the (C,) gather clamps but the scale is
             # masked to 0, and every scatter below drops out of bounds
             scale = slot_scale[ev.slot] if importance else eta
-            if faulty or serving_on:
+            if faulty or serving_on or scen_on:
                 scale = jnp.where(ev.kind == KIND_COMPLETE, scale, 0.0)
             stale = (k - stats.slot_step[ev.slot]) if guard_stale else None
             if serving_on:
@@ -1104,6 +1126,11 @@ def _make_fused_advance(
                         stats = sd.sparse_stats_step(
                             stats, ev, cls_j, occ_pre, busy_pre, occ_post, k
                         )
+                elif scen_on:
+                    stats = sd.scenario_stats_step(
+                        stats, ev, occ_pre, avail_pre, speed_pre,
+                        sstate.occ, k,
+                    )
                 elif faulty:
                     stats = sd.fault_stats_step(
                         stats, ev, occ_pre, avail_pre, sstate.occ, k
@@ -1217,7 +1244,7 @@ def _make_fused_advance(
             return (ucarry, sstate, stats, slot_scale, p), tv
 
         def advance(ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0,
-                    ub=None, sv=None, sstats=None):
+                    ub=None, sv=None, sstats=None, uph=None):
             """Fused CS steps over one chunk: E-event windows + remainder.
 
             With serving the carry widens by ``(sv, sstats)`` — the serve
@@ -1243,6 +1270,8 @@ def _make_fused_advance(
             if Wc < Lc:
                 if sparse and faulty:
                     xse = (ur[Wc:], ue[Wc:], Kc[Wc:], ub[Wc:], ks[Wc:])
+                elif scen_on:
+                    xse = (ur[Wc:], ue[Wc:], Kc[Wc:], uph[Wc:], ks[Wc:])
                 else:
                     xse = (ur[Wc:], ue[Wc:], Kc[Wc:], ks[Wc:])
                 c, tse = jax.lax.scan(event_body, c, xse, unroll=unroll)
@@ -1286,6 +1315,7 @@ def make_fused_runner(
     guard: GuardConfig | None = None,
     classes=None,
     serving=None,
+    scenario=None,
 ):
     """Build the fused engine: `stream_device.stream_step` ∘ `update_step`.
 
@@ -1362,6 +1392,18 @@ def make_fused_runner(
     does sample at serve epochs too, which is still unbiased for the
     time-average by PASTA.  ``extras`` gains the ``serve_*`` counters,
     histograms and the final serve state.
+
+    ``scenario`` (a `scenario.ScenarioConfig`) swaps the event source to
+    `stream_device.scenario_stream_step`: phase-type service (Erlang-k /
+    hyperexponential stage chains) + Markov-modulated on/off availability.
+    Stage advances and flips carry scale 0 / slot C exactly like fault
+    events, so the algorithm half is untouched; ``busy_t`` integrates the
+    modulated exposure, keeping the adaptive controller's `ctrl_refresh`
+    unbiased per scenario.  Requires ``block_size=1``, the dense stream
+    (use `sparse_stats_stream_fn(scenario=True)` for class-level laws),
+    and excludes ``fault`` / ``serving`` / FedBuff.  A disabled scenario
+    (``exponential`` + always-on) routes through the unmodified engine —
+    bitwise-identical to ``scenario=None``.
     """
     import jax
     import jax.numpy as jnp
@@ -1400,6 +1442,24 @@ def make_fused_runner(
     faulty = fault is not None and fault.enabled
     guard_stale = guard is not None and int(guard.stale_cutoff) > 0
     sparse = classes is not None
+    scen_on = scenario is not None and scenario.enabled
+    if scen_on:
+        if faulty:
+            raise ValueError(
+                "scenario= and fault= are separate injection paths; model "
+                "suspension via ScenarioConfig modulation (rate_scale)"
+            )
+        if sparse:
+            raise ValueError(
+                "the fused engine's scenario path is dense-only; use "
+                "sparse_stats_stream_fn(scenario=True) for class-level laws"
+            )
+        if E > 1:
+            raise ValueError("scenario= requires block_size=1")
+        if fedbuff_Z:
+            raise ValueError("scenario= composes with Algorithm 1, not FedBuff")
+        if serving is not None and serving.enabled:
+            raise ValueError("scenario= does not compose with serving=")
     if sparse:
         if E > 1:
             raise ValueError("classes= (sparse stream) requires block_size=1")
@@ -1485,14 +1545,24 @@ def make_fused_runner(
             )
             u_mem = jax.random.uniform(k_mem, (T,))
             u_bit = jax.random.uniform(k_bit, (T,)) if faulty else None
+            u_ph = None
             sstate, init_nodes = sd.sparse_stream_init(
                 k_init, spec, C, p0, init=init, fault=faulty
             )
             stats = sd.sparse_stats_init(classes.m, C, fault=faulty)
+        elif scen_on:
+            fr = sd.resolve_scenario(scenario, n)
+            k_init, k_race, k_exp, k_disp, k_ph = jax.random.split(key, 5)
+            u_mem = u_bit = None
+            u_ph = jax.random.uniform(k_ph, (T,))
+            sstate, init_nodes = sd.scenario_stream_init(
+                k_init, n, C, p0, fr, init=init
+            )
+            stats = sd.stats_init(n, C, scenario=True)
         else:
             fr = sd.resolve_fault_rates(fault, n) if faulty else None
             k_init, k_race, k_exp, k_disp = jax.random.split(key, 4)
-            u_mem = u_bit = None
+            u_mem = u_bit = u_ph = None
             sstate, init_nodes = sd.stream_init(
                 k_init, n, C, p0, init=init, fault=faulty
             )
@@ -1513,6 +1583,7 @@ def make_fused_runner(
             importance=importance, faulty=faulty, guard_stale=guard_stale,
             need_stats=need_stats, axis=axis, lane_devices=lane_devices,
             unroll=unroll, classes=classes, serving=serving,
+            scenario=scen_on,
         )(mu, eta, fr)
         sv0 = sp.serve_init(serving) if serving_on else None
         sstats0 = sp.serve_stats_init() if serving_on else None
@@ -1539,12 +1610,16 @@ def make_fused_runner(
                 sv = sstats = None
             if sparse and faulty:
                 ur, ue, ud, um, ub, k0 = xs
+                uph = None
             elif sparse:
                 ur, ue, ud, um, k0 = xs
-                ub = None
+                ub = uph = None
+            elif scen_on:
+                ur, ue, ud, uph, k0 = xs
+                um = ub = None
             else:
                 ur, ue, ud, k0 = xs
-                um = ub = None
+                um = ub = uph = None
             Kc = sample_dispatch(p, ud, um)
             if serving_on:
                 ucarry, sstate, stats, slot_scale, ts, sv, sstats = advance(
@@ -1553,7 +1628,8 @@ def make_fused_runner(
                 )
             else:
                 ucarry, sstate, stats, slot_scale, ts = advance(
-                    ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0, ub
+                    ucarry, sstate, stats, slot_scale, p, ur, ue, Kc, k0, ub,
+                    uph=uph,
                 )
             if adaptive:
                 p = sd.ctrl_refresh(
@@ -1591,6 +1667,8 @@ def make_fused_runner(
             xs = xs + (resh(u_mem),)
             if faulty:
                 xs = xs + (resh(u_bit),)
+        elif scen_on:
+            xs = xs + (resh(u_ph),)
         xs = xs + (jnp.arange(n_chunks, dtype=jnp.int32) * L,)
         carry, ys = jax.lax.scan(chunk_step, carry, xs)
         if collect_extras:
@@ -1618,6 +1696,7 @@ def make_fused_runner(
                     ucarry, sstate, stats, slot_scale, p,
                     u_race[Tc:], u_exp[Tc:], Kc, Tc,
                     u_bit[Tc:] if sparse and faulty else None,
+                    uph=u_ph[Tc:] if scen_on else None,
                 )
             if collect_extras:
                 ts = jnp.concatenate([ts, ts_tail])
@@ -1666,7 +1745,7 @@ def make_fused_runner(
         if guard is not None:
             extras["guard_rejects"] = ucarry[3][0]
             extras["stale_drops"] = ucarry[3][1]
-        if faulty:
+        if faulty or scen_on:
             extras["kind_count"] = stats.kind_count
             extras["avail_time"] = stats.avail_tw
         if sparse:
@@ -1926,7 +2005,7 @@ def jit_fused_runner(
     def _kw_entry(k, v):
         if k == "bound":
             return (k, None if v is None else (v.A, v.L, v.B, v.C, v.T, v.rho))
-        if k in ("fault", "guard", "serving"):
+        if k in ("fault", "guard", "serving", "scenario"):
             return (k, None if v is None else v.cache_key())
         if k == "classes":
             return (k, None if v is None else v.cache_key())

@@ -93,6 +93,8 @@ __all__ = [
     "KIND_TIMEOUT",
     "KIND_FLIP",
     "KIND_SERVE",
+    "KIND_STAGE",
+    "N_KINDS",
 ]
 
 #: event kind tags shared by the host simulator, the device stream and the
@@ -111,6 +113,13 @@ KIND_FLIP = 3
 #: completion vs timeout vs release) is resolved inside
 #: `serving.serve_apply`, not in the event tag.
 KIND_SERVE = 4
+#: phase-type stage advance (scenario mode, `core.scenario`): the head-of-line
+#: task at ``j`` moves to its next service stage — no queue changes, no
+#: gradient.  Stage rows carry ``slot = C`` and ``K = -1`` (host) exactly like
+#: KIND_FLIP, so every downstream gather/scatter masks them for free.
+KIND_STAGE = 5
+#: size of a kind-count histogram covering every tag above
+N_KINDS = 6
 
 #: shared RNG pre-draw block size — every entry point uses the same default so
 #: `simulate(cfg)`, `simulate_batch(cfg)` and `ClosedNetworkSim(cfg).run(T)`
@@ -194,6 +203,11 @@ class SimConfig:
                                       # events (flips included), not only CS
                                       # steps — filter by `kind` to recover the
                                       # task-movement subsequence
+    scenario: "object | None" = None  # optional core.scenario.ScenarioConfig:
+                                      # phase-type service + Markov-modulated
+                                      # availability.  Mutually exclusive with
+                                      # `fault`; like fault mode, T counts
+                                      # merged events (stages + flips included)
 
 
 @dataclass
@@ -591,8 +605,8 @@ def export_stream(cfg: SimConfig, block: int = DEFAULT_BLOCK) -> EventStream:
         slot_disp = np.zeros(C, dtype=np.int64)  # dispatch step + 1, per slot
         delay_steps = np.zeros(cfg.T, dtype=np.int64)
         for k in range(cfg.T):
-            if kinds[k] == KIND_FLIP:
-                slot[k] = C               # trash row: flips touch no task
+            if kinds[k] == KIND_FLIP or kinds[k] == KIND_STAGE:
+                slot[k] = C        # trash row: flips/stages touch no queue
                 continue
             s = slot_queues[J[k]].popleft()
             slot[k] = s
@@ -610,6 +624,7 @@ def export_stream(cfg: SimConfig, block: int = DEFAULT_BLOCK) -> EventStream:
         p=sim.p.copy(),
         delay_steps=delay_steps,
         queue_len_sum=sim.queue_len_sum,
+        queue_len_tw=sim.queue_len_tw,
         kind=kinds,
     )
 
@@ -661,6 +676,41 @@ class ClosedNetworkSim:
             self._avail_tw = [0.0] * self.n   # integral of 1{available}
             self._avail_last_t = [0.0] * self.n
             self.kind_counts = np.zeros(4, np.int64)
+        # scenario injection (phase-type service + modulated availability)
+        sc = getattr(cfg, "scenario", None)
+        self._scenario = sc is not None and sc.enabled
+        if self._scenario:
+            if self._fault:
+                raise ValueError(
+                    "scenario= and fault= are separate injection paths; "
+                    "fold churn rates into the scenario's modulation instead"
+                )
+            if cfg.service != "exp":
+                raise ValueError("scenario= requires service='exp' "
+                                 "(the phase chain replaces the service law)")
+            alpha, srates, absorb, nxt = sc.service.chain()
+            self._sc_cdf = np.cumsum(alpha)
+            self._sc_cdf[-1] = max(self._sc_cdf[-1], 1.0)
+            self._sc_rates = srates.tolist()
+            self._sc_absorb = [bool(b) for b in absorb]
+            self._sc_nxt = [int(x) for x in nxt]
+            self._sc_S = len(self._sc_rates)
+            mod = sc.modulation
+            if mod is None:
+                from .scenario import ModulationConfig
+
+                mod = ModulationConfig()
+            qoff, qon = mod.resolve(self.n)
+            self._qoff, self._qon = qoff.tolist(), qon.tolist()
+            self._rate_scale = float(mod.rate_scale)
+            # scenario clocks (flips + phase draws) live on their own RNG
+            # sub-stream, mirroring the fault path's isolation guarantee
+            self._frng = np.random.default_rng((cfg.seed, 0x5CE9))
+            self._avail = [True] * self.n
+            self._avail_tw = [0.0] * self.n
+            self._avail_last_t = [0.0] * self.n
+            self.kind_counts = np.zeros(N_KINDS, np.int64)
+            self._task_phase: dict[int, int] = {}
         self.kind_trace: np.ndarray | None = None  # filled by run() (fault mode)
         # delay recording (opt-in): flat per-event arrays with doubling growth
         # — the completing node of record k is the k-th completion, so the
@@ -698,7 +748,7 @@ class ClosedNetworkSim:
         self._exp_ptr = 0
         self._task_counter = 0
         self._init_tasks()
-        if self._fault:
+        if self._fault or self._scenario:
             # all nodes start available; arm the first on->off flip clocks
             for node in range(self.n):
                 if self._qoff[node] > 0:
@@ -716,14 +766,18 @@ class ClosedNetworkSim:
         self._exp_buf = self.rng.standard_exponential(self._block).tolist()
         self._exp_ptr = 0
 
+    def _std_exp(self) -> float:
+        """Next pre-drawn standard-exponential variate from the main stream."""
+        i = self._exp_ptr
+        if i >= len(self._exp_buf):
+            self._refill_exp()
+            i = 0
+        self._exp_ptr = i + 1
+        return self._exp_buf[i]
+
     def _service_time(self, node: int) -> float:
         if self._is_exp:
-            i = self._exp_ptr
-            if i >= len(self._exp_buf):
-                self._refill_exp()
-                i = 0
-            self._exp_ptr = i + 1
-            return self._exp_buf[i] * self._inv_mu[node]
+            return self._std_exp() * self._inv_mu[node]
         return self._inv_mu[node]
 
     def _change(self, node: int, delta: int) -> None:
@@ -742,6 +796,25 @@ class ClosedNetworkSim:
         self._qlen[node] = ql + delta
 
     def _start_service(self, node: int) -> None:
+        if self._scenario:
+            # stage clock of the head-of-line task: rate = mu * stage-rate *
+            # modulation speed.  A zero rate (node off, rate_scale=0) suspends
+            # service until the next flip re-arms it — memorylessness makes
+            # the fresh redraw on resume exact in law.
+            tid = self.queues[node][0][0]
+            ph = self._task_phase[tid]
+            speed = 1.0 if self._avail[node] else self._rate_scale
+            rate = self.mu[node] * self._sc_rates[ph] * speed
+            if rate <= 0.0:
+                self._inservice_seq[node] = -2
+                return
+            self._seq += 1
+            self._inservice_seq[node] = self._seq
+            heapq.heappush(
+                self.heap,
+                (self.now + self._std_exp() / rate, self._seq, node, KIND_COMPLETE),
+            )
+            return
         self._seq += 1
         self._inservice_seq[node] = self._seq
         heapq.heappush(
@@ -774,6 +847,8 @@ class ClosedNetworkSim:
 
         Service (completion + crash) only runs while the node is available;
         the straggler timeout is a server-side deadline and fires regardless.
+        In scenario mode `_start_service` itself handles modulated speeds
+        (including suspension at rate 0) and there are no timeout clocks.
         """
         if not self._fault:
             self._start_service(node)
@@ -797,7 +872,7 @@ class ClosedNetworkSim:
     @property
     def avail_tw(self) -> np.ndarray | None:
         """(n,) time integral of availability, flushed to `now` (fault mode)."""
-        if not self._fault:
+        if not (self._fault or self._scenario):
             return None
         out = np.array(self._avail_tw, np.float64)
         pending = np.array(self._avail, np.float64) * (
@@ -806,11 +881,22 @@ class ClosedNetworkSim:
         return out + pending
 
     def availability(self) -> np.ndarray | None:
-        return np.array(self._avail, bool) if self._fault else None
+        if not (self._fault or self._scenario):
+            return None
+        return np.array(self._avail, bool)
 
     def _enqueue(self, node: int, dispatch_step: int) -> int:
         tid = self._task_counter
         self._task_counter += 1
+        if self._scenario:
+            # the task's initial service stage is drawn at dispatch — by
+            # independence of the stage sequence from the queue process this
+            # is law-identical to drawing it at service start, and it is what
+            # the device stream does (one phase draw per dispatch)
+            u = self._frng.random()
+            self._task_phase[tid] = min(
+                int(np.searchsorted(self._sc_cdf, u, side="right")), self._sc_S - 1
+            )
         self.queues[node].append((tid, dispatch_step, self.now))
         self._change(node, +1)
         if len(self.queues[node]) == 1:
@@ -912,7 +998,17 @@ class ClosedNetworkSim:
             self._settle_avail(node)
             up = not self._avail[node]
             self._avail[node] = up
-            if up:
+            if self._scenario:
+                # modulated speed changed: invalidate and re-arm the stage
+                # clock at the new rate (exact by memorylessness; the task's
+                # phase is preserved).  rate_scale=0 leaves it suspended.
+                self._inservice_seq[node] = -2
+                if self._qlen[node] > 0:
+                    self._start_service(node)
+                rate = self._qoff[node] if up else self._qon[node]
+                if rate > 0:
+                    self._push_flip(node, rate)
+            elif up:
                 if self._qlen[node] > 0:
                     self._start_service(node)  # memoryless: fresh service draw
                 if self._qoff[node] > 0:
@@ -924,6 +1020,20 @@ class ClosedNetworkSim:
             self.step_idx += 1
             self.kind_counts[KIND_FLIP] += 1
             return KIND_FLIP, node, -1
+        if self._scenario:
+            # a stage clock fired: absorb (fall through to the completion
+            # path below) or advance the head task to its next stage
+            tid = self.queues[node][0][0]
+            ph = self._task_phase[tid]
+            if not self._sc_absorb[ph]:
+                self._task_phase[tid] = self._sc_nxt[ph]
+                self._start_service(node)
+                self.step_idx += 1
+                self.kind_counts[KIND_STAGE] += 1
+                return KIND_STAGE, node, -1
+            del self._task_phase[tid]
+            self.kind_counts[KIND_COMPLETE] += 1
+            self._inservice_seq[node] = -2
         # task movement: complete / crash / timeout pops the head-of-line task
         q = self.queues[node]
         tid, disp_step, disp_time = q.popleft()
@@ -974,7 +1084,7 @@ class ClosedNetworkSim:
         Jl: list[int] = []
         Kl: list[int] = []
         tl: list[float] = []
-        kl: list[int] | None = [] if self._fault else None
+        kl: list[int] | None = [] if (self._fault or self._scenario) else None
         append_J, append_K, append_t = Jl.append, Kl.append, tl.append
         for _ in range(T):
             kind, j, k_new = step_event()

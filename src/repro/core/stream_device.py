@@ -31,11 +31,16 @@ pre-simulated on the host and replayed:
     exponentiated-gradient steps on the bound — `sampling.optimize_general`
     running *inside* the compiled program on *measured* rates.
 
-Only exponential service is supported on device (the race relies on
-memorylessness); ``service="det"`` stays host-only.  The stream is
-deterministic given the PRNG key but does **not** reproduce the host
-simulator's realization — law-level parity is locked in
-tests/test_stream_device.py (chi-square, Little's law, delay means).
+The race relies on memorylessness, which is less restrictive than it
+sounds: phase-type service (Erlang-k / hyperexponential chains of
+exponential stages) and Markov-modulated on/off availability are both
+memoryless at every instant, and `scenario_stream_step` /
+`sparse_scenario_stream_step` fold them into the same inverse-CDF race
+(see `core.scenario` for the law definitions).  Only ``service="det"``
+stays host-only.  The stream is deterministic given the PRNG key but
+does **not** reproduce the host simulator's realization — law-level
+parity is locked in tests/test_stream_device.py and
+tests/test_scenarios.py (chi-square, Little's law, delay means).
 """
 from __future__ import annotations
 
@@ -49,11 +54,14 @@ from .queue_sim import (
     KIND_CRASH,
     KIND_FLIP,
     KIND_SERVE,
+    KIND_STAGE,
     KIND_TIMEOUT,
+    N_KINDS,
     EventBlocks,
     EventStream,
     FaultConfig,
 )
+from .scenario import ModulationConfig, ScenarioConfig
 from .theory import BoundConstants
 
 __all__ = [
@@ -65,6 +73,12 @@ __all__ = [
     "fault_stream_step",
     "merged_stream_step",
     "resolve_fault_rates",
+    "ScenarioRates",
+    "resolve_scenario",
+    "resolve_scenario_classes",
+    "scenario_stream_init",
+    "scenario_stream_step",
+    "scenario_stats_step",
     "stats_init",
     "stats_step",
     "fault_stats_step",
@@ -83,6 +97,9 @@ __all__ = [
     "sparse_stream_init",
     "sparse_stream_step",
     "sparse_fault_stream_step",
+    "sparse_scenario_stream_init",
+    "sparse_scenario_stream_step",
+    "sparse_scenario_class_stats",
     "sparse_stats_init",
     "sparse_stats_step",
     "sparse_fault_stats_step",
@@ -206,6 +223,8 @@ class StreamState(NamedTuple):
     t: Any      # () float32 — physical time (Kahan sum; see t_c)
     avail: Any = None  # (n,) float32 0/1 availability (fault mode; else None)
     t_c: Any = 0.0     # () float32 — Kahan compensation of t
+    phase: Any = None  # (C,) int32 — service stage of each slot's task
+                       # (scenario mode; else None)
 
 
 class Event(NamedTuple):
@@ -476,9 +495,188 @@ def merged_stream_step(state: StreamState, mu, ext_rate, xs, fr=None):
     )
 
 
-def stats_init(n: int, C: int, fault: bool = False) -> StatsState:
+class ScenarioRates(NamedTuple):
+    """Device-resident tables of a resolved `ScenarioConfig`.
+
+    ``acdf`` is the cumulative initial-stage distribution (inverse-CDF
+    phase draws), ``srate``/``absorb``/``nxt`` the unit-mean stage chain
+    of `ServiceLaw.chain`, ``q_off``/``q_on`` the per-node (dense) or
+    per-class (sparse) modulation intensities and ``rate_scale`` the
+    degraded-service multiplier while off.
+    """
+
+    acdf: Any        # (S,) float32 — cumsum of alpha, tail pinned to 1
+    srate: Any       # (S,) float32 — stage clock rates (unit-mean chain)
+    absorb: Any      # (S,) float32 — 1.0 where firing completes service
+    nxt: Any         # (S,) int32 — successor stage otherwise
+    q_off: Any       # (n,)/(m,) float32 — on->off flip intensity
+    q_on: Any        # (n,)/(m,) float32 — off->on flip intensity
+    rate_scale: Any  # () float32 — service-speed multiplier while off
+
+
+def _scenario_tables(scenario: ScenarioConfig):
+    alpha, srate, absorb, nxt = scenario.service.chain()
+    acdf = np.cumsum(alpha)
+    acdf[-1] = max(acdf[-1], 1.0)  # guard fp undershoot at the tail
+    mod = scenario.modulation if scenario.modulation is not None else ModulationConfig()
+    return acdf, srate, absorb, nxt, mod
+
+
+def resolve_scenario(scenario: ScenarioConfig, n: int) -> ScenarioRates:
+    """`ScenarioConfig` -> dense device `ScenarioRates` ((n,) modulation)."""
     import jax.numpy as jnp
 
+    acdf, srate, absorb, nxt, mod = _scenario_tables(scenario)
+    q_off, q_on = mod.resolve(n)
+    return ScenarioRates(
+        acdf=jnp.asarray(acdf, jnp.float32),
+        srate=jnp.asarray(srate, jnp.float32),
+        absorb=jnp.asarray(absorb, jnp.float32),
+        nxt=jnp.asarray(nxt, jnp.int32),
+        q_off=jnp.asarray(q_off, jnp.float32),
+        q_on=jnp.asarray(q_on, jnp.float32),
+        rate_scale=jnp.float32(mod.rate_scale),
+    )
+
+
+def resolve_scenario_classes(scenario: ScenarioConfig, spec: "ClassSpec") -> ScenarioRates:
+    """Class-level `resolve_scenario`: modulation rates as ``(m,)`` arrays.
+
+    Modulation must be constant within each speed class — the
+    exchangeability the sparse idle pools rely on (same constraint as
+    `resolve_fault_rates_classes`)."""
+    import jax.numpy as jnp
+
+    acdf, srate, absorb, nxt, mod = _scenario_tables(scenario)
+    q_off, q_on = mod.resolve(spec.n)
+    perm = np.asarray(spec.perm)
+    offsets = np.asarray(spec.offsets)
+    counts = np.asarray(spec.counts)
+    out = []
+    for name, r in (("off_rate", q_off), ("on_rate", q_on)):
+        rc = np.asarray(r, np.float64)[perm]
+        vals = rc[offsets]
+        for c in range(counts.size):
+            seg = rc[offsets[c]: offsets[c] + counts[c]]
+            if not np.allclose(seg, vals[c]):
+                raise ValueError(
+                    f"ModulationConfig.{name} varies within speed class {c}; "
+                    "the sparse stream requires class-constant modulation"
+                )
+        out.append(jnp.asarray(vals, jnp.float32))
+    return ScenarioRates(
+        acdf=jnp.asarray(acdf, jnp.float32),
+        srate=jnp.asarray(srate, jnp.float32),
+        absorb=jnp.asarray(absorb, jnp.float32),
+        nxt=jnp.asarray(nxt, jnp.int32),
+        q_off=out[0],
+        q_on=out[1],
+        rate_scale=jnp.float32(mod.rate_scale),
+    )
+
+
+def _phase_draw(acdf, u):
+    """Inverse-CDF initial-stage draw from the (S,) cumulative alpha."""
+    import jax.numpy as jnp
+
+    S = acdf.shape[0]
+    return jnp.minimum(
+        jnp.searchsorted(acdf, u, side="right"), S - 1
+    ).astype(jnp.int32)
+
+
+def scenario_stream_init(key, n: int, C: int, p, sr: ScenarioRates,
+                         init: str = "distinct"):
+    """`stream_init` + per-slot initial phase draws.  Returns (state, nodes).
+
+    The phase of each task is drawn at dispatch (here: at initial
+    placement) — independence of the stage sequence from the queue
+    process makes this law-identical to drawing at service start, and it
+    matches the host oracle's convention.
+    """
+    import jax
+
+    k_place, k_ph = jax.random.split(key)
+    state, nodes = stream_init(k_place, n, C, p, init=init, fault=True)
+    phase = _phase_draw(sr.acdf, jax.random.uniform(k_ph, (C,)))
+    return state._replace(phase=phase), nodes
+
+
+def scenario_stream_step(state: StreamState, mu, sr: ScenarioRates, xs):
+    """One merged-CTMC event of the scenario closed network.
+
+    The race runs over ``2n`` clocks:
+
+      ``[ mu_i srate[phase_i] speed_i 1{X_i>0} | q_off_i a_i + q_on_i (1-a_i) ]``
+
+    where ``phase_i`` is the stage of node i's head-of-line task and
+    ``speed_i = a_i + (1-a_i) rate_scale`` the modulated service speed.
+    A serve-clock win is decoded by ``absorb[phase]`` into either a task
+    completion (KIND_COMPLETE — pop + re-dispatch exactly as in
+    `fault_stream_step`) or a stage advance (KIND_STAGE — the head task
+    steps to ``nxt[phase]``; no queue change, ``slot = C``).  Flips
+    toggle availability like fault flips.  ``xs = (u_race, u_exp, k_new,
+    u_ph)`` — one extra pre-drawn uniform feeds the dispatch-time phase
+    draw of the re-dispatched task.
+    """
+    import jax.numpy as jnp
+
+    u_race, u_exp, k_new, u_ph = xs
+    occ, ring, head, tail, t, avail, phase = (
+        state.occ, state.ring, state.head, state.tail, state.t,
+        state.avail, state.phase,
+    )
+    n, C = ring.shape
+    busy = occ > 0
+    speed = avail + (1.0 - avail) * sr.rate_scale
+    head_slots = ring[jnp.arange(n), head % C]
+    r_serve = jnp.where(busy, mu * sr.srate[phase[head_slots]] * speed, 0.0)
+    r_flip = jnp.where(avail > 0, sr.q_off, sr.q_on)
+    rates = jnp.concatenate([r_serve, r_flip])
+    rtree = tree_build(rates)
+    tot = jnp.maximum(rtree[1], 1e-30)  # all-suspended: time still moves
+    dt = -jnp.log1p(-u_exp) / tot
+    t, t_c = kahan_add(t, state.t_c, dt)
+    idx = tree_sample(rtree, u_race).astype(jnp.int32)
+    is_serve = idx < n
+    j = idx % n
+    s_head = ring[j, head[j] % C]
+    ph_j = phase[s_head]
+    complete = is_serve & (sr.absorb[ph_j] > 0)
+    kind = jnp.where(
+        complete, KIND_COMPLETE, jnp.where(is_serve, KIND_STAGE, KIND_FLIP)
+    ).astype(jnp.int32)
+    # completions pop + re-dispatch; stages and flips emit slot = C (trash)
+    move = complete
+    s = jnp.where(move, s_head, C).astype(jnp.int32)
+    mv = move.astype(jnp.int32)
+    head = head.at[j].add(mv)
+    occ = occ.at[j].add(-mv)
+    push_row = jnp.where(move, k_new, n)
+    ring = ring.at[push_row, tail[k_new] % C].set(s, mode="drop")
+    tail = tail.at[k_new].add(mv)
+    occ = occ.at[k_new].add(mv)
+    # phase update: a completion's freed slot hosts the dispatched task
+    # (fresh alpha draw); a stage advance steps the head task to nxt;
+    # flips write to the trash index C (dropped)
+    ph_w = jnp.where(complete, _phase_draw(sr.acdf, u_ph), sr.nxt[ph_j])
+    phase = phase.at[jnp.where(is_serve, s_head, C)].set(
+        ph_w.astype(jnp.int32), mode="drop"
+    )
+    flip = (kind == KIND_FLIP).astype(jnp.float32)
+    avail = avail.at[j].add(flip * (1.0 - 2.0 * avail[j]))
+    return (
+        StreamState(occ=occ, ring=ring, head=head, tail=tail, t=t,
+                    avail=avail, t_c=t_c, phase=phase),
+        Event(j=j, k=k_new, t=t, slot=s, dt=dt, kind=kind),
+    )
+
+
+def stats_init(n: int, C: int, fault: bool = False,
+               scenario: bool = False) -> StatsState:
+    import jax.numpy as jnp
+
+    tagged = fault or scenario
     return StatsState(
         occ_sum=jnp.zeros(n, jnp.int32),
         occ_tw=jnp.zeros(n, jnp.float32),
@@ -486,12 +684,14 @@ def stats_init(n: int, C: int, fault: bool = False) -> StatsState:
         comp=jnp.zeros(n, jnp.int32),
         delay_sum=jnp.zeros(n, jnp.float32),
         slot_step=jnp.zeros(C, jnp.int32),
-        avail_tw=jnp.zeros(n, jnp.float32) if fault else None,
-        kind_count=jnp.zeros(4, jnp.int32) if fault else None,
+        avail_tw=jnp.zeros(n, jnp.float32) if tagged else None,
+        kind_count=(
+            jnp.zeros(N_KINDS if scenario else 4, jnp.int32) if tagged else None
+        ),
         occ_tw_c=jnp.zeros(n, jnp.float32),
         busy_t_c=jnp.zeros(n, jnp.float32),
         delay_sum_c=jnp.zeros(n, jnp.float32),
-        avail_tw_c=jnp.zeros(n, jnp.float32) if fault else None,
+        avail_tw_c=jnp.zeros(n, jnp.float32) if tagged else None,
     )
 
 
@@ -575,8 +775,56 @@ def fault_stats_step(
     )
 
 
+def scenario_stats_step(
+    stats: StatsState, ev: Event, occ_pre, avail_pre, speed_pre, occ_post, k
+) -> StatsState:
+    """Scenario-aware `stats_step`.
+
+    Like `fault_stats_step`, but ``busy_t`` integrates the *modulated*
+    exposure ``speed_i 1{X_i > 0}`` instead of the 0/1 gate: in the
+    time-change ``dtau = speed dt`` the head task's stage sequence is the
+    unmodulated unit-mean phase chain at rate ``mu_i``, so long-run
+    ``comp / busy_t -> mu`` exactly and `estimate_mu` / `ctrl_refresh`
+    stay unbiased under modulation and non-exponential service alike.
+    ``kind_count`` is the full (N_KINDS,) histogram (stage advances are
+    tag 5).
+    """
+    import jax.numpy as jnp
+
+    comp = (ev.kind == KIND_COMPLETE).astype(jnp.int32)
+    delay = (k - stats.slot_step[ev.slot]).astype(jnp.float32)
+    occ_tw, occ_tw_c = kahan_add(
+        stats.occ_tw, stats.occ_tw_c, occ_pre.astype(jnp.float32) * ev.dt
+    )
+    busy_t, busy_t_c = kahan_add(
+        stats.busy_t, stats.busy_t_c,
+        jnp.where(occ_pre > 0, speed_pre, 0.0) * ev.dt,
+    )
+    delay_sum, delay_sum_c = _kahan_scatter_add(
+        stats.delay_sum, stats.delay_sum_c, ev.j,
+        delay * comp.astype(jnp.float32),
+    )
+    avail_tw, avail_tw_c = kahan_add(
+        stats.avail_tw, stats.avail_tw_c, avail_pre * ev.dt
+    )
+    return StatsState(
+        occ_sum=stats.occ_sum + occ_post,
+        occ_tw=occ_tw,
+        busy_t=busy_t,
+        comp=stats.comp.at[ev.j].add(comp),
+        delay_sum=delay_sum,
+        slot_step=stats.slot_step.at[ev.slot].set(k + 1, mode="drop"),
+        avail_tw=avail_tw,
+        kind_count=stats.kind_count.at[ev.kind].add(1),
+        occ_tw_c=occ_tw_c,
+        busy_t_c=busy_t_c,
+        delay_sum_c=delay_sum_c,
+        avail_tw_c=avail_tw_c,
+    )
+
+
 def _network_scan(n: int, C: int, T: int, init: str, emit_events: bool,
-                  fault: bool = False):
+                  fault: bool = False, scenario: bool = False):
     """Shared scan harness: T fused CS steps of stream_step + stats_step.
 
     Returns ``gen(key, mu, p) -> (init_nodes, events | None, stats)`` where
@@ -586,14 +834,29 @@ def _network_scan(n: int, C: int, T: int, init: str, emit_events: bool,
     ``fault``, the generator signature grows a trailing
     ``fr = resolve_fault_rates(...)`` operand, the per-step machinery swaps
     to `fault_stream_step` / `fault_stats_step`, and the emitted events gain
-    a trailing kind column.
+    a trailing kind column.  With ``scenario``, ``fr`` is instead a
+    `ScenarioRates` and the machinery swaps to `scenario_stream_step` /
+    `scenario_stats_step` (events also gain the kind column).
     """
     import jax
     import jax.numpy as jnp
 
+    if fault and scenario:
+        raise ValueError("fault and scenario streams are mutually exclusive")
+
     def gen(key, mu, p, fr=None):
-        k_init, k_race, k_exp, k_disp = jax.random.split(key, 4)
-        state, init_nodes = stream_init(k_init, n, C, p, init=init, fault=fault)
+        if scenario:
+            k_init, k_race, k_exp, k_disp, k_ph = jax.random.split(key, 5)
+            state, init_nodes = scenario_stream_init(
+                k_init, n, C, p, fr, init=init
+            )
+            u_ph = jax.random.uniform(k_ph, (T,))
+        else:
+            k_init, k_race, k_exp, k_disp = jax.random.split(key, 4)
+            state, init_nodes = stream_init(
+                k_init, n, C, p, init=init, fault=fault
+            )
+            u_ph = None
         u_race = jax.random.uniform(k_race, (T,))
         u_exp = jax.random.uniform(k_exp, (T,))
         # all T dispatch draws through one shared segment tree (hierarchical
@@ -602,12 +865,24 @@ def _network_scan(n: int, C: int, T: int, init: str, emit_events: bool,
         K = jax.vmap(lambda u: tree_sample(ptree, u))(
             jax.random.uniform(k_disp, (T,))
         ).astype(jnp.int32)
-        stats = stats_init(n, C, fault=fault)
+        stats = stats_init(n, C, fault=fault, scenario=scenario)
 
         def body(carry, xs):
             state, stats, k = carry
             occ_pre = state.occ
-            if fault:
+            if scenario:
+                avail_pre = state.avail
+                speed_pre = avail_pre + (1.0 - avail_pre) * fr.rate_scale
+                state, ev = scenario_stream_step(state, mu, fr, xs)
+                delay = k - stats.slot_step[ev.slot]
+                stats = scenario_stats_step(
+                    stats, ev, occ_pre, avail_pre, speed_pre, state.occ, k
+                )
+                ys = (
+                    (ev.j, ev.k, ev.t, ev.slot, delay, ev.kind)
+                    if emit_events else None
+                )
+            elif fault:
                 avail_pre = state.avail
                 state, ev = fault_stream_step(state, mu, fr, xs)
                 delay = k - stats.slot_step[ev.slot]
@@ -626,30 +901,38 @@ def _network_scan(n: int, C: int, T: int, init: str, emit_events: bool,
             return (state, stats, k + 1), ys
 
         carry = (state, stats, jnp.int32(0))
-        (state, stats, _), events = jax.lax.scan(body, carry, (u_race, u_exp, K))
+        xs = (u_race, u_exp, K, u_ph) if scenario else (u_race, u_exp, K)
+        (state, stats, _), events = jax.lax.scan(body, carry, xs)
         return init_nodes, events, stats
 
     return gen
 
 
 @lru_cache(maxsize=32)
-def _stream_generator(n: int, C: int, T: int, init: str, fault: bool = False):
+def _stream_generator(n: int, C: int, T: int, init: str, fault: bool = False,
+                      scenario: bool = False):
     import jax
 
-    return jax.jit(_network_scan(n, C, T, init, emit_events=True, fault=fault))
+    return jax.jit(
+        _network_scan(n, C, T, init, emit_events=True, fault=fault,
+                      scenario=scenario)
+    )
 
 
 @lru_cache(maxsize=32)
 def stats_stream_fn(n: int, C: int, T: int, init: str = "distinct",
-                    fault: bool = False):
+                    fault: bool = False, scenario: bool = False):
     """Stats-only fused network scan: ``gen(key, mu, p[, fr]) -> StatsState``.
 
     No per-event outputs — just the running occupancy / busy-time /
     completion / delay accumulators.  Returned un-jitted so callers compose
-    it with vmap/pmap over scenarios before compiling.
+    it with vmap/pmap over scenarios before compiling.  With ``fault`` the
+    trailing operand is `resolve_fault_rates(...)`; with ``scenario`` it is
+    a `ScenarioRates`.
     """
-    base = _network_scan(n, C, T, init, emit_events=False, fault=fault)
-    if fault:
+    base = _network_scan(n, C, T, init, emit_events=False, fault=fault,
+                         scenario=scenario)
+    if fault or scenario:
         return lambda key, mu, p, fr: base(key, mu, p, fr)[2]
     return lambda key, mu, p: base(key, mu, p)[2]
 
@@ -662,6 +945,7 @@ def generate_stream(
     seed: int | Any = 0,
     init: str = "distinct",
     fault: FaultConfig | None = None,
+    scenario: ScenarioConfig | None = None,
 ) -> EventStream:
     """Simulate T CS steps on device and export a host `EventStream`.
 
@@ -672,6 +956,9 @@ def generate_stream(
     (mu, p, seed) and fault rates reuse one compiled program.  With
     ``fault`` the stream carries a kind column and T counts merged events
     (flips included) — same convention as `queue_sim.export_stream`.
+    ``scenario`` (mutually exclusive with ``fault``) swaps the service law
+    and availability process to a `ScenarioConfig`; T then counts merged
+    events including stage advances and flips.
     """
     import jax
     import jax.numpy as jnp
@@ -683,8 +970,17 @@ def generate_stream(
         raise ValueError("p must sum to 1")
     key = jax.random.PRNGKey(seed) if np.ndim(seed) == 0 else seed
     faulty = fault is not None and fault.enabled
-    gen = _stream_generator(n, int(C), int(T), init, faulty)
-    if faulty:
+    scen = scenario is not None and scenario.enabled
+    if faulty and scen:
+        raise ValueError("fault= and scenario= are mutually exclusive")
+    gen = _stream_generator(n, int(C), int(T), init, faulty, scen)
+    if scen:
+        init_nodes, (J, K, t, slot, delays, kind), stats = gen(
+            key, jnp.asarray(mu, jnp.float32), jnp.asarray(p, jnp.float32),
+            resolve_scenario(scenario, n),
+        )
+        kind_np = np.asarray(kind, np.int8)
+    elif faulty:
         init_nodes, (J, K, t, slot, delays, kind), stats = gen(
             key, jnp.asarray(mu, jnp.float32), jnp.asarray(p, jnp.float32),
             resolve_fault_rates(fault, n),
@@ -722,6 +1018,7 @@ def generate_blocks(
     cut_every: int = 0,
     method: str = "greedy",
     fault: FaultConfig | None = None,
+    scenario: ScenarioConfig | None = None,
 ) -> EventBlocks:
     """Device-generated event stream, segmented into conflict-free blocks.
 
@@ -734,7 +1031,8 @@ def generate_blocks(
     ("greedy" | "dp" — see `queue_sim.segment_blocks`).
     """
     return EventBlocks.from_stream(
-        generate_stream(mu, p, C, T, seed=seed, init=init, fault=fault),
+        generate_stream(mu, p, C, T, seed=seed, init=init, fault=fault,
+                        scenario=scenario),
         block_size,
         cut_every,
         method,
@@ -862,6 +1160,8 @@ class SparseStreamState(NamedTuple):
     avail: Any = None     # (C,) float32 — availability bit of the slot's node
     idle_on: Any = None   # (m,) int32 — idle & available nodes per class
     idle_off: Any = None  # (m,) int32 — idle & unavailable nodes per class
+    phase: Any = None     # (C,) int32 — service stage of each slot's task
+                          # (scenario mode; else None)
 
 
 def sample_dispatch_classes(p, spec: ClassSpec, u_cls, u_mem):
@@ -1129,10 +1429,158 @@ def sparse_fault_stream_step(state: SparseStreamState, mu, spec, fr, xs):
     )
 
 
-def sparse_stats_init(m: int, C: int, fault: bool = False) -> StatsState:
+def sparse_scenario_stream_init(key, spec: ClassSpec, C: int, p,
+                                sr: ScenarioRates, init: str = "distinct"):
+    """`sparse_stream_init` + per-slot initial phase draws."""
+    import jax
+
+    k_place, k_ph = jax.random.split(key)
+    state, nodes = sparse_stream_init(k_place, spec, C, p, init=init,
+                                      fault=True)
+    phase = _phase_draw(sr.acdf, jax.random.uniform(k_ph, (C,)))
+    return state._replace(phase=phase), nodes
+
+
+def sparse_scenario_class_stats(state: SparseStreamState, m: int, rate_scale):
+    """Per-class (occupancy, modulated busy exposure, available nodes).
+
+    ``busy`` is the *speed-weighted* float exposure ``sum_heads speed`` —
+    the denominator that keeps `estimate_mu` unbiased under modulation
+    (see `scenario_stats_step`); ``avail`` counts available nodes
+    (available heads + the idle-on pool), as in fault mode.
+    """
+    import jax.numpy as jnp
+
+    occ = class_occupancy(state.cls, m)
+    hf = state.head.astype(jnp.float32)
+    speed = state.avail + (1.0 - state.avail) * rate_scale
+    busy = jnp.zeros(m, jnp.float32).at[state.cls].add(hf * speed)
+    ha = state.head.astype(jnp.int32) * (state.avail > 0).astype(jnp.int32)
+    avail = jnp.zeros(m, jnp.int32).at[state.cls].add(ha) + state.idle_on
+    return occ, busy, avail
+
+
+def sparse_scenario_stream_step(state: SparseStreamState, mu, spec,
+                                sr: ScenarioRates, xs):
+    """One merged-CTMC event of the scenario sparse network — O(C + m).
+
+    The race runs over ``2C + 2m`` clocks: per head slot [serve-or-stage |
+    availability flip] plus per class [idle on->off | idle off->on] — the
+    class-collapse of the dense ``2n`` race of `scenario_stream_step`.
+    A serve win decodes into completion vs stage advance by
+    ``absorb[phase]``; only completions move a task (the idle-pool /
+    join-bit machinery is shared with `sparse_fault_stream_step`).
+    ``xs = (u_race, u_exp, k_new, u_bit, u_ph)``;
+    ``sr = resolve_scenario_classes(...)``.
+    """
+    import jax.numpy as jnp
+
+    u_race, u_exp, k_new, u_bit, u_ph = xs
+    node, cls, seq, head, a, phase = (
+        state.node, state.cls, state.seq, state.head, state.avail, state.phase,
+    )
+    ion, ioff = state.idle_on, state.idle_off
+    C = node.shape[0]
+    m = ion.shape[0]
+    ar = jnp.arange(C, dtype=jnp.int32)
+    inv_cls = jnp.asarray(spec.inv_cls, jnp.int32)
+    hf = head.astype(jnp.float32)
+    speed = a + (1.0 - a) * sr.rate_scale
+    rates = jnp.concatenate([
+        mu[cls] * sr.srate[phase] * speed * hf,
+        (sr.q_off[cls] * a + sr.q_on[cls] * (1.0 - a)) * hf,
+        ion.astype(jnp.float32) * sr.q_off,
+        ioff.astype(jnp.float32) * sr.q_on,
+    ])
+    rtree = tree_build(rates)
+    tot = jnp.maximum(rtree[1], 1e-30)  # all-suspended: time still moves
+    dt = -jnp.log1p(-u_exp) / tot
+    t, t_c = kahan_add(state.t, state.t_c, dt)
+    idx = tree_sample(rtree, u_race).astype(jnp.int32)
+
+    is_sv = idx < C
+    s_sv = jnp.where(is_sv, idx, 0)
+    ph_sv = phase[s_sv]
+    complete = is_sv & (sr.absorb[ph_sv] > 0)
+    move = complete
+    s_mv = s_sv
+    is_bf = (idx >= C) & (idx < 2 * C)
+    s_bf = jnp.where(is_bf, idx - C, 0)
+    is_if = idx >= 2 * C
+    if_on2off = is_if & (idx < 2 * C + m)
+    if_c = jnp.where(
+        is_if, jnp.where(if_on2off, idx - 2 * C, idx - 2 * C - m), 0
+    )
+    kind = jnp.where(
+        complete, KIND_COMPLETE, jnp.where(is_sv, KIND_STAGE, KIND_FLIP)
+    ).astype(jnp.int32)
+
+    j_mv = node[s_mv]
+    cls_j = cls[s_mv]
+    a_j = a[s_mv]
+    j_bf = node[s_bf]
+    perm = jnp.asarray(spec.perm, jnp.int32)
+    offsets = jnp.asarray(spec.offsets, jnp.int32)
+    j = jnp.where(is_sv, j_mv, jnp.where(is_bf, j_bf, perm[offsets[if_c]]))
+    s = jnp.where(move, s_mv, C).astype(jnp.int32)
+
+    # completion: pop the head at j, redispatch (shared with the fault step)
+    others_j = move & (node == j_mv) & (ar != s_mv)
+    has_succ = jnp.any(others_j)
+    succ = jnp.argmin(jnp.where(others_j, seq, jnp.int32(2**31 - 1)))
+    head = head & ~(move & (ar == s_mv))
+    head = head | ((ar == succ) & has_succ)
+
+    cls_k = inv_cls[k_new]
+    k_is_j = move & (k_new == j_mv)
+    exists_k = move & jnp.any((node == k_new) & (ar != s_mv))
+    j_idles = move & ~has_succ & ~k_is_j
+    # pool state the fresh draw sees: after j (possibly) went idle
+    ion1 = ion.at[cls_j].add((j_idles & (a_j > 0)).astype(jnp.int32))
+    ioff1 = ioff.at[cls_j].add((j_idles & (a_j == 0)).astype(jnp.int32))
+    pool_on = ion1[cls_k].astype(jnp.float32)
+    pool = pool_on + ioff1[cls_k].astype(jnp.float32)
+    bit_pool = (u_bit * jnp.maximum(pool, 1.0) < pool_on).astype(jnp.float32)
+    bit_join = jnp.max(jnp.where((node == k_new) & (ar != s_mv), a, 0.0))
+    bit_new = jnp.where(exists_k, bit_join, jnp.where(k_is_j, a_j, bit_pool))
+    fresh = move & ~exists_k & ~k_is_j
+    ion2 = ion1.at[cls_k].add(-(fresh & (bit_new > 0)).astype(jnp.int32))
+    ioff2 = ioff1.at[cls_k].add(-(fresh & (bit_new == 0)).astype(jnp.int32))
+
+    # busy-node availability flip: toggle every slot of that node
+    a = jnp.where(is_bf & (node == j_bf), 1.0 - a, a)
+    # idle-pool flips: move one node between the (on, off) counts
+    ion3 = ion2.at[if_c].add(jnp.where(is_if, jnp.where(if_on2off, -1, 1), 0))
+    ioff3 = ioff2.at[if_c].add(jnp.where(is_if, jnp.where(if_on2off, 1, -1), 0))
+
+    at_s = move & (ar == s_mv)
+    node = jnp.where(at_s, k_new, node)
+    cls = jnp.where(at_s, cls_k, cls)
+    seq = jnp.where(at_s, state.next_seq, seq)
+    head = jnp.where(at_s, ~exists_k, head)
+    a = jnp.where(at_s, bit_new, a)
+    # phase update: completion -> fresh alpha draw for the dispatched task;
+    # stage advance -> nxt; flips write to the trash index C (dropped)
+    ph_w = jnp.where(complete, _phase_draw(sr.acdf, u_ph), sr.nxt[ph_sv])
+    phase = phase.at[jnp.where(is_sv, s_sv, C)].set(
+        ph_w.astype(jnp.int32), mode="drop"
+    )
+    return (
+        SparseStreamState(
+            node=node, cls=cls, seq=seq, head=head, t=t, t_c=t_c,
+            next_seq=state.next_seq + move.astype(jnp.int32),
+            avail=a, idle_on=ion3, idle_off=ioff3, phase=phase,
+        ),
+        Event(j=j, k=k_new, t=t, slot=s, dt=dt, kind=kind),
+    )
+
+
+def sparse_stats_init(m: int, C: int, fault: bool = False,
+                      scenario: bool = False) -> StatsState:
     """Per-class `StatsState`: same fields, (m,) instead of (n,)."""
     import jax.numpy as jnp
 
+    tagged = fault or scenario
     return StatsState(
         occ_sum=jnp.zeros(m, jnp.int32),
         occ_tw=jnp.zeros(m, jnp.float32),
@@ -1140,12 +1588,14 @@ def sparse_stats_init(m: int, C: int, fault: bool = False) -> StatsState:
         comp=jnp.zeros(m, jnp.int32),
         delay_sum=jnp.zeros(m, jnp.float32),
         slot_step=jnp.zeros(C, jnp.int32),
-        avail_tw=jnp.zeros(m, jnp.float32) if fault else None,
-        kind_count=jnp.zeros(4, jnp.int32) if fault else None,
+        avail_tw=jnp.zeros(m, jnp.float32) if tagged else None,
+        kind_count=(
+            jnp.zeros(N_KINDS if scenario else 4, jnp.int32) if tagged else None
+        ),
         occ_tw_c=jnp.zeros(m, jnp.float32),
         busy_t_c=jnp.zeros(m, jnp.float32),
         delay_sum_c=jnp.zeros(m, jnp.float32),
-        avail_tw_c=jnp.zeros(m, jnp.float32) if fault else None,
+        avail_tw_c=jnp.zeros(m, jnp.float32) if tagged else None,
     )
 
 
@@ -1217,7 +1667,7 @@ def sparse_fault_stats_step(stats: StatsState, ev: Event, cls_j, occ_pre,
 
 
 def _sparse_network_scan(m: int, C: int, T: int, init: str,
-                         fault: bool = False):
+                         fault: bool = False, scenario: bool = False):
     """Sparse analogue of `_network_scan`: T fused sparse CS steps.
 
     Returns ``gen(key, mu, p, spec[, fr]) -> (init_nodes, stats, state)``
@@ -1226,11 +1676,19 @@ def _sparse_network_scan(m: int, C: int, T: int, init: str,
     import jax
     import jax.numpy as jnp
 
+    if fault and scenario:
+        raise ValueError("fault and scenario streams are mutually exclusive")
+
     def gen(key, mu, p, spec, fr=None):
-        keys = jax.random.split(key, 6)
-        state, init_nodes = sparse_stream_init(
-            keys[0], spec, C, p, init=init, fault=fault
-        )
+        keys = jax.random.split(key, 7 if scenario else 6)
+        if scenario:
+            state, init_nodes = sparse_scenario_stream_init(
+                keys[0], spec, C, p, fr, init=init
+            )
+        else:
+            state, init_nodes = sparse_stream_init(
+                keys[0], spec, C, p, init=init, fault=fault
+            )
         u_race = jax.random.uniform(keys[1], (T,))
         u_exp = jax.random.uniform(keys[2], (T,))
         K = sample_dispatch_classes(
@@ -1238,15 +1696,30 @@ def _sparse_network_scan(m: int, C: int, T: int, init: str,
             jax.random.uniform(keys[3], (T,)),
             jax.random.uniform(keys[4], (T,)),
         )
-        u_bit = jax.random.uniform(keys[5], (T,)) if fault else None
-        stats = sparse_stats_init(m, C, fault=fault)
+        tagged = fault or scenario
+        u_bit = jax.random.uniform(keys[5], (T,)) if tagged else None
+        u_ph = jax.random.uniform(keys[6], (T,)) if scenario else None
+        stats = sparse_stats_init(m, C, fault=fault, scenario=scenario)
 
         def body(carry, xs):
             state, stats, k = carry
-            occ_pre, busy_pre, avail_pre = sparse_class_stats(
-                state, m, fault=fault
-            )
-            if fault:
+            if scenario:
+                occ_pre, busy_pre, avail_pre = sparse_scenario_class_stats(
+                    state, m, fr.rate_scale
+                )
+                ur, ue, kn, ub, uph = xs
+                state, ev = sparse_scenario_stream_step(
+                    state, mu, spec, fr, (ur, ue, kn, ub, uph)
+                )
+                cls_j = jnp.asarray(spec.inv_cls, jnp.int32)[ev.j]
+                stats = sparse_fault_stats_step(
+                    stats, ev, cls_j, occ_pre, busy_pre, avail_pre,
+                    class_occupancy(state.cls, m), k,
+                )
+            elif fault:
+                occ_pre, busy_pre, avail_pre = sparse_class_stats(
+                    state, m, fault=True
+                )
                 ur, ue, kn, ub = xs
                 state, ev = sparse_fault_stream_step(
                     state, mu, spec, fr, (ur, ue, kn, ub)
@@ -1257,6 +1730,9 @@ def _sparse_network_scan(m: int, C: int, T: int, init: str,
                     class_occupancy(state.cls, m), k,
                 )
             else:
+                occ_pre, busy_pre, avail_pre = sparse_class_stats(
+                    state, m, fault=False
+                )
                 ur, ue, kn = xs
                 state, ev = sparse_stream_step(state, mu, spec, (ur, ue, kn))
                 cls_j = jnp.asarray(spec.inv_cls, jnp.int32)[ev.j]
@@ -1266,7 +1742,12 @@ def _sparse_network_scan(m: int, C: int, T: int, init: str,
                 )
             return (state, stats, k + 1), None
 
-        xs = (u_race, u_exp, K, u_bit) if fault else (u_race, u_exp, K)
+        if scenario:
+            xs = (u_race, u_exp, K, u_bit, u_ph)
+        elif fault:
+            xs = (u_race, u_exp, K, u_bit)
+        else:
+            xs = (u_race, u_exp, K)
         (state, stats, _), _ = jax.lax.scan(
             body, (state, stats, jnp.int32(0)), xs
         )
@@ -1277,17 +1758,18 @@ def _sparse_network_scan(m: int, C: int, T: int, init: str,
 
 @lru_cache(maxsize=32)
 def sparse_stats_stream_fn(m: int, C: int, T: int, init: str = "distinct",
-                           fault: bool = False):
+                           fault: bool = False, scenario: bool = False):
     """Stats-only sparse network scan, cached per shape.
 
     ``gen(key, mu, p, spec[, fr]) -> (StatsState, SparseStreamState)``
     with (m,) class-level inputs; per-event cost is flat in n (the
     benchmark surface of ``benchmarks/engine.py --scale``).  Un-jitted so
     callers compose with vmap before compiling; ``spec`` must be a
-    device `ClassSpec` (``spec.device()``).
+    device `ClassSpec` (``spec.device()``).  With ``scenario=True``,
+    ``fr`` must be the `ScenarioRates` from `resolve_scenario_classes`.
     """
-    base = _sparse_network_scan(m, C, T, init, fault=fault)
-    if fault:
+    base = _sparse_network_scan(m, C, T, init, fault=fault, scenario=scenario)
+    if fault or scenario:
         return lambda key, mu, p, spec, fr: base(key, mu, p, spec, fr)[1:]
     return lambda key, mu, p, spec: base(key, mu, p, spec)[1:]
 

@@ -479,6 +479,7 @@ def run_experiment(
         ckpt_dir=ckpt_dir,
         ckpt_every=ckpt_every,
         resume=resume,
+        scenario=flc.scenario,
     )
 
     if method == "gen_async":
@@ -558,6 +559,7 @@ def run_matrix(
     devices: int | None = None,
     segmentation: str | None = None,
     task=None,
+    scenario: str | None = None,
 ) -> MatrixResult:
     """Run the whole scenario grid in ONE compiled call.
 
@@ -603,6 +605,14 @@ def run_matrix(
     stream = flc.stream if stream is None else stream
     if stream not in ("host", "device"):
         raise ValueError(stream)
+    # one ScenarioConfig per matrix: the (seed × policy × ratio) grid vmaps
+    # within a scenario (ScenarioRates shapes are static per compile); sweep
+    # scenarios across calls (benchmarks/engine.py --scenarios)
+    from repro.core.scenario import get_scenario
+
+    sc = get_scenario(scenario if scenario is not None else flc.scenario)
+    if sc is not None and not sc.enabled:
+        sc = None
     block_size = flc.block_size if block_size is None else block_size
     if block_size != "auto":
         block_size = int(block_size)
@@ -649,12 +659,19 @@ def run_matrix(
         # with --xla_force_host_platform_device_count, or a TPU/GPU pod) —
         # the host-export path is serial Python and cannot
         D = jax.device_count()
+        if sc is not None:
+            if block_size == "auto":
+                block_size = 1  # scenario stream is per-event
+            elif block_size > 1:
+                raise ValueError("scenario= requires block_size=1")
         if block_size == "auto":
-            # same resolution policy as the single-run driver (_run_scan)
+            # same resolution policy as the single-run driver (_run_scan):
+            # probe with the configured scenario, not a fresh exp stream
             from repro.core.async_sgd import _auto_block_size, _probe_stream_slots
 
             block_size = _auto_block_size(
-                _probe_stream_slots(mu_b[0], p_b[0], C, T, int(seeds[0])),
+                _probe_stream_slots(mu_b[0], p_b[0], C, T, int(seeds[0]),
+                                    scenario=sc),
                 lane,
             )
         if lane > 1:
@@ -679,6 +696,7 @@ def run_matrix(
             adaptive=flc.adaptive,
             refresh_every=flc.refresh_every,
             block_size=block_size,
+            scenario=sc,
         )
         if lane > 1:
             shard = 1  # shard_map consumes flat (B, ...) batches — no reshape
@@ -712,7 +730,8 @@ def run_matrix(
                     p = p_vectors[pi, hi]
                     es = export_stream(
                         SimConfig(mu=mus[hi], p=p, C=C, T=T,
-                                  service=flc.service, seed=seed)
+                                  service=flc.service, seed=seed,
+                                  scenario=sc)
                     )
                     streams.append((es, step_scales(es, eta, p, flc.weighting)))
                     t_phys[b] = es.t

@@ -1,0 +1,154 @@
+"""Shared statistical-law testing harness.
+
+Every stochastic assertion in the test suite goes through one of these
+helpers so the tolerance policy lives in exactly one place and is
+**seed-stable**: tests draw from fixed-seed streams and compare against a
+critical value, so a passing test passes forever (no flaky re-rolls) and a
+failure means the law itself is off, not the luck of the draw.
+
+Policy
+------
+* Goodness-of-fit (categorical frequencies): Pearson chi-square against the
+  ``ALPHA = 1e-3`` critical value.  With fixed seeds this is a deterministic
+  bound; 1e-3 leaves headroom above the ~1-sigma wobble of a 40k-event
+  stream while still catching a mis-scaled rate on the first run.
+* Time averages of 2-state Markov chains: z-test with the Markov-chain CLT
+  variance ``2*pi_on*pi_off/((q_on+q_off)*t)``, bound ``|z| < Z_BOUND = 4``.
+* Moments (mean / squared CV of service laws): z-test on the sample mean and
+  a delta-method z-test on the sample SCV, same ``Z_BOUND``.
+* Continuous laws: one-sample Kolmogorov-Smirnov at ``ALPHA``.
+* Little's law in the closed network: every completed task sees ``C - 1``
+  other completions on average — a *structural* identity, so the tolerance
+  is a plain relative error, not a CLT band.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+ALPHA = 1e-3     # chi-square / KS significance level
+Z_BOUND = 4.0    # |z| bound for CLT-normal checks
+
+
+# ------------------------------------------------------------------ #
+# chi-square goodness of fit
+# ------------------------------------------------------------------ #
+def chi_square_stat(counts, expected) -> float:
+    """Pearson statistic sum (O - E)^2 / E over cells with E > 0."""
+    counts = np.asarray(counts, float)
+    expected = np.asarray(expected, float)
+    keep = expected > 0
+    return float(np.sum((counts[keep] - expected[keep]) ** 2 / expected[keep]))
+
+
+def assert_chi_square(counts, expected, df: int | None = None,
+                      alpha: float = ALPHA, label: str = "") -> float:
+    """Assert observed ``counts`` match ``expected`` cell counts.
+
+    ``df`` defaults to ``len(expected) - 1`` (all-cells multinomial); pass a
+    smaller value when cells were grouped or parameters estimated.
+    Returns the statistic so callers can log it.
+    """
+    from scipy.stats import chi2
+
+    expected = np.asarray(expected, float)
+    if df is None:
+        df = int(np.sum(expected > 0)) - 1
+    stat = chi_square_stat(counts, expected)
+    crit = float(chi2.ppf(1 - alpha, df=df))
+    assert stat < crit, (
+        f"chi-square{' [' + label + ']' if label else ''}: "
+        f"stat={stat:.2f} >= crit={crit:.2f} (df={df}, alpha={alpha})"
+    )
+    return stat
+
+
+def assert_frequencies(draws, probs, alpha: float = ALPHA,
+                       label: str = "") -> float:
+    """Categorical draws (array of indices) match probabilities ``probs``."""
+    probs = np.asarray(probs, float)
+    counts = np.bincount(np.asarray(draws), minlength=len(probs))
+    return assert_chi_square(counts, len(draws) * probs, alpha=alpha,
+                             label=label)
+
+
+# ------------------------------------------------------------------ #
+# 2-state Markov availability: stationary share z-test
+# ------------------------------------------------------------------ #
+def assert_onoff_stationary(frac_on, q_off: float, q_on: float,
+                            horizon: float, z_bound: float = Z_BOUND):
+    """Time-averaged on-fraction(s) match pi_on = q_on/(q_on+q_off).
+
+    ``frac_on`` may be scalar or per-node array; ``horizon`` is the physical
+    time the average was taken over.  Uses the Markov-chain CLT variance
+    2*pi_on*pi_off / ((q_on+q_off)*horizon).
+    """
+    frac_on = np.asarray(frac_on, float)
+    pi_on = q_on / (q_on + q_off)
+    var = 2.0 * pi_on * (1.0 - pi_on) / ((q_on + q_off) * float(horizon))
+    z = (frac_on - pi_on) / np.sqrt(var)
+    assert np.all(np.abs(z) < z_bound), (
+        f"on/off stationarity: frac={frac_on}, pi_on={pi_on:.4f}, z={z}"
+    )
+
+
+# ------------------------------------------------------------------ #
+# moment checks (service-law mean and squared CV)
+# ------------------------------------------------------------------ #
+def assert_mean(samples, mean: float, z_bound: float = Z_BOUND):
+    """Sample mean within z_bound standard errors of ``mean``."""
+    x = np.asarray(samples, float)
+    se = x.std(ddof=1) / np.sqrt(x.size)
+    z = (x.mean() - mean) / max(se, 1e-30)
+    assert abs(z) < z_bound, f"mean: got {x.mean():.4f}, want {mean:.4f}, z={z:.2f}"
+
+
+def assert_scv(samples, scv: float, z_bound: float = Z_BOUND):
+    """Sample squared coefficient of variation var/mean^2 matches ``scv``.
+
+    Delta-method standard error from the empirical 4th central moment, so
+    heavy-tailed laws (hyperexponential) get the wide band they need.
+    """
+    x = np.asarray(samples, float)
+    m, v = x.mean(), x.var(ddof=1)
+    got = v / m**2
+    c = x - m
+    # var(SCV_hat) ~ [m4 - v^2 + 4 v scv (v - m*skew-term)] / (N m^4); keep the
+    # dominant m4 - v^2 term plus the mean-uncertainty cross term
+    m3, m4 = np.mean(c**3), np.mean(c**4)
+    var_scv = (m4 - v**2) / m**4 + 4 * v**2 * v / (m**6) - 4 * v * m3 / (m**5)
+    se = np.sqrt(max(var_scv, 1e-30) / x.size)
+    z = (got - scv) / max(se, 1e-30)
+    assert abs(z) < z_bound, f"SCV: got {got:.3f}, want {scv:.3f}, z={z:.2f}"
+
+
+def assert_ks(samples, cdf, alpha: float = ALPHA):
+    """One-sample Kolmogorov-Smirnov test of ``samples`` against ``cdf``."""
+    from scipy.stats import kstest
+
+    res = kstest(np.asarray(samples, float), cdf)
+    assert res.pvalue > alpha, (
+        f"KS: D={res.statistic:.4f}, p={res.pvalue:.2e} <= alpha={alpha}"
+    )
+
+
+# ------------------------------------------------------------------ #
+# Little's law in the closed network
+# ------------------------------------------------------------------ #
+def assert_little(delay_steps, C: int, rel: float = 0.02):
+    """Closed-network Little's law: mean step-counted delay == C - 1.
+
+    Each completed task saw, on average, exactly the other ``C - 1``
+    in-flight completions; this is structural (population is pinned at C),
+    so the tolerance is a plain relative error.
+    """
+    got = float(np.mean(np.asarray(delay_steps, float)))
+    want = float(C - 1)
+    assert abs(got - want) <= rel * max(want, 1.0), (
+        f"Little: mean delay {got:.3f} vs C-1 = {want} (rel {rel})"
+    )
+
+
+def assert_occupancy_conserved(queue_len_sum, C: int, T: int):
+    """Event-sampled total occupancy of the closed network is exactly C*T."""
+    total = int(np.sum(np.asarray(queue_len_sum)))
+    assert total == C * T, f"occupancy sum {total} != C*T = {C * T}"

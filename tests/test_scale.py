@@ -62,7 +62,7 @@ class TestSegmentTree:
         descent re-splits mass exactly, so a chi-square over weight groups
         must accept.
         """
-        from scipy.stats import chi2
+        from stat_utils import assert_chi_square
 
         n, groups, S = 100_000, 10, 40_000
         per = n // groups
@@ -76,8 +76,7 @@ class TestSegmentTree:
         assert np.all(w[idx] > 0), "zero-weight leaf selected"
         got = np.bincount(idx // per, minlength=groups)[: groups - 1]
         share = np.arange(1.0, groups) / np.arange(1.0, groups).sum()
-        stat = float(np.sum((got - S * share) ** 2 / (S * share)))
-        assert stat < chi2.ppf(1 - 1e-3, df=groups - 2)
+        assert_chi_square(got, S * share, df=groups - 2, label="tree groups")
 
     def test_zero_weight_boundaries(self):
         """Interior zeros and u at the CDF edges never pick a dead leaf."""

@@ -1,0 +1,406 @@
+"""Scenario library: statistical law tests, host==device parity, defaults.
+
+Every registry entry gets (a) a law test through the shared harness
+(`stat_utils`) — service-law moments, modulated-availability stationarity,
+Little's law — and (b) a host-oracle==device-stream parity test.  The
+disabled default (`exponential` + always-on) must stay *bitwise* identical
+to the engine path with no scenario at all.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from stat_utils import (
+    assert_chi_square,
+    assert_ks,
+    assert_little,
+    assert_mean,
+    assert_occupancy_conserved,
+    assert_onoff_stationary,
+    assert_scv,
+)
+
+from repro.core import ServerConfig, run_generalized_async_sgd
+from repro.core import stream_device as sd
+from repro.core.engine_scan import make_fused_runner
+from repro.core.queue_sim import (
+    KIND_COMPLETE,
+    ClosedNetworkSim,
+    SimConfig,
+    export_stream,
+)
+from repro.core.scenario import (
+    SCENARIOS,
+    ModulationConfig,
+    ScenarioConfig,
+    ServiceLaw,
+    chain_moments,
+    get_scenario,
+    list_scenarios,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+ENABLED = [n for n in list_scenarios() if SCENARIOS[n].enabled]
+SERVICE_ONLY = [n for n in ENABLED if SCENARIOS[n].modulation is None]
+MODULATED = [n for n in ENABLED if SCENARIOS[n].modulation is not None]
+
+
+def _nonuniform_p(n, seed=0):
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0.5, 2.0, n)
+    return p / p.sum()
+
+
+class _QuadSource:
+    def __init__(self, n):
+        self.targ = np.arange(n, dtype=np.float32)
+
+    def grad(self, j, w, k):
+        return {"a": np.asarray(w["a"]) - self.targ[j]}
+
+    def device_grad(self, j, w, k):
+        return {"a": w["a"] - jnp.asarray(self.targ)[j]}
+
+
+# ------------------------------------------------------------------ #
+# registry sanity + serialization
+# ------------------------------------------------------------------ #
+def test_registry_contents():
+    for name in ("exponential", "erlang2", "erlang4", "hyperexp2",
+                 "onoff", "onoff_slow", "erlang2_onoff"):
+        assert name in SCENARIOS
+    assert not SCENARIOS["exponential"].enabled
+    assert get_scenario(None) is None
+    assert get_scenario("erlang2") is SCENARIOS["erlang2"]
+    sc = ScenarioConfig(name="adhoc", service=ServiceLaw.erlang(3))
+    assert get_scenario(sc) is sc
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+    with pytest.raises(TypeError):
+        get_scenario(3.14)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_registry_json_round_trip(name):
+    sc = SCENARIOS[name]
+    back = ScenarioConfig.from_json(sc.to_json())
+    assert back == sc
+    assert back.cache_key() == sc.cache_key()
+
+
+# ------------------------------------------------------------------ #
+# service-law moments: n=1, C=1 makes inter-completion times iid draws
+# ------------------------------------------------------------------ #
+def _service_samples_host(sc, mu, T, seed):
+    stream = export_stream(
+        SimConfig(mu=np.array([mu]), p=np.ones(1), C=1, T=T, seed=seed,
+                  scenario=sc)
+    )
+    return np.diff(stream.t[stream.kind == KIND_COMPLETE])
+
+
+def _service_samples_device(sc, mu, T, seed):
+    stream = sd.generate_stream(np.array([mu]), np.ones(1), C=1, T=T,
+                                seed=seed, scenario=sc)
+    return np.diff(stream.t[stream.kind == KIND_COMPLETE])
+
+
+@pytest.mark.parametrize("name", SERVICE_ONLY)
+@pytest.mark.parametrize("side", ["host", "device"])
+def test_service_law_moments(name, side):
+    """Service times have mean 1/mu and the law's squared CV, both sides."""
+    sc = SCENARIOS[name]
+    mu, T = 1.7, 40_000
+    draw = _service_samples_host if side == "host" else _service_samples_device
+    x = draw(sc, mu, T, seed=11) * mu
+    assert_mean(x, 1.0)
+    assert_scv(x, sc.service.scv())
+
+
+@pytest.mark.parametrize("side", ["host", "device"])
+def test_service_law_ks(side):
+    """Full-distribution KS check: Erlang-2 against the exact gamma CDF."""
+    from scipy.stats import gamma
+
+    sc = SCENARIOS["erlang2"]
+    draw = _service_samples_host if side == "host" else _service_samples_device
+    x = draw(sc, 1.0, 20_000, seed=3)
+    assert_ks(x, gamma(a=2, scale=0.5).cdf)
+
+
+# ------------------------------------------------------------------ #
+# modulated availability: stationary on-share, host and device
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("name", MODULATED)
+def test_availability_stationarity_host(name):
+    sc = SCENARIOS[name]
+    n, C, T = 5, 3, 40_000
+    sim = ClosedNetworkSim(
+        SimConfig(mu=np.full(n, 1.0), p=np.full(n, 1 / n), C=C, T=T,
+                  seed=9, scenario=sc)
+    )
+    sim.run(T)
+    assert sim.avail_tw is not None
+    q_off, q_on = sc.modulation.resolve(n)
+    assert_onoff_stationary(sim.avail_tw / sim.now, q_off[0], q_on[0], sim.now)
+
+
+@pytest.mark.parametrize("name", MODULATED)
+def test_availability_stationarity_device(name):
+    sc = SCENARIOS[name]
+    n, C, T = 5, 3, 40_000
+    src = _QuadSource(n)
+    runner = make_fused_runner(src.device_grad, n, C, T, scenario=sc)
+    _, _, extras = runner(
+        {"a": jnp.zeros(4, jnp.float32)}, jnp.full(n, 1.0),
+        jnp.full(n, 1 / n), jax.random.PRNGKey(4), 0.0,
+    )
+    horizon = float(np.asarray(extras["t"])[-1])
+    frac = np.asarray(extras["avail_time"], np.float64) / horizon
+    q_off, q_on = sc.modulation.resolve(n)
+    assert_onoff_stationary(frac, q_off[0], q_on[0], horizon)
+
+
+# ------------------------------------------------------------------ #
+# Little's law + conservation under modulation
+# ------------------------------------------------------------------ #
+def _completion_counted_delays(stream):
+    """Per-completion delay in *completion* counts (stage/flip rows skipped).
+
+    Replays the slot bookkeeping: a completing slot's delay is the number
+    of completions since its task was dispatched — the quantity Little's
+    law pins at C-1 in the closed network regardless of the service law.
+    """
+    C = stream.C
+    disp = np.zeros(C + 1, np.int64)  # completion count at dispatch per slot
+    comp = 0
+    out = []
+    for k in range(stream.T):
+        if stream.kind is not None and stream.kind[k] != KIND_COMPLETE:
+            continue
+        s = stream.slot[k]
+        out.append(comp - disp[s])
+        comp += 1
+        disp[s] = comp  # re-dispatch into the freed slot
+    return np.asarray(out)
+
+
+@pytest.mark.parametrize("name", ENABLED)
+@pytest.mark.parametrize("side", ["host", "device"])
+def test_little_and_conservation(name, side):
+    """Time-avg total occupancy == C and completion-counted delay == C-1."""
+    sc = SCENARIOS[name]
+    n, C, T = 5, 4, 30_000
+    mu = np.random.default_rng(1).uniform(0.6, 2.5, n)
+    p = _nonuniform_p(n, seed=2)
+    if side == "host":
+        stream = export_stream(SimConfig(mu=mu, p=p, C=C, T=T, seed=6,
+                                         scenario=sc))
+    else:
+        stream = sd.generate_stream(mu, p, C, T=T, seed=6, scenario=sc)
+    assert_occupancy_conserved(stream.queue_len_sum, C, T)
+    horizon = stream.t[-1]
+    assert np.sum(stream.queue_len_tw) / horizon == pytest.approx(C, rel=1e-6)
+    assert_little(_completion_counted_delays(stream), C, rel=0.03)
+
+
+# ------------------------------------------------------------------ #
+# host == device law parity, every registry entry
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_host_device_parity(name):
+    """Same laws on both sides: kind mix, occupancy, throughput, delays."""
+    sc = SCENARIOS[name]
+    n, C, T = 5, 3, 30_000
+    mu = np.random.default_rng(0).uniform(0.5, 3.0, n)
+    p = _nonuniform_p(n, seed=4)
+    host = export_stream(SimConfig(mu=mu, p=p, C=C, T=T, seed=1, scenario=sc))
+    dev = sd.generate_stream(mu, p, C, T=T, seed=1, scenario=sc)
+    if not sc.enabled:
+        assert host.kind is None and dev.kind is None
+    else:
+        # merged-event mix: device histogram against host shares
+        ch = np.bincount(host.kind, minlength=6)
+        cd = np.bincount(dev.kind, minlength=6)
+        np.testing.assert_allclose(cd / T, ch / T, atol=0.02)
+        assert set(np.nonzero(cd)[0]) == set(np.nonzero(ch)[0])
+    # physical horizon (throughput) and time-averaged occupancy
+    assert dev.t[-1] == pytest.approx(host.t[-1], rel=0.06)
+    np.testing.assert_allclose(
+        dev.queue_len_tw / dev.t[-1], host.queue_len_tw / host.t[-1],
+        rtol=0.2, atol=0.08,
+    )
+    # completion-counted delay distribution agrees in mean
+    dh = _completion_counted_delays(host)
+    dd = _completion_counted_delays(dev)
+    assert np.mean(dd) == pytest.approx(np.mean(dh), rel=0.03)
+    # completion shares match the sampling law on both sides
+    comp_h = host.J if host.kind is None else host.J[host.kind == KIND_COMPLETE]
+    comp_d = dev.J if dev.kind is None else dev.J[dev.kind == KIND_COMPLETE]
+    assert_chi_square(np.bincount(comp_d, minlength=n),
+                      comp_d.size * p, label=f"{name} device J")
+    assert_chi_square(np.bincount(comp_h, minlength=n),
+                      comp_h.size * p, label=f"{name} host J")
+
+
+# ------------------------------------------------------------------ #
+# bitwise default: exponential + always-on == no scenario at all
+# ------------------------------------------------------------------ #
+def test_default_scenario_bitwise_streams():
+    mu = np.array([2.0, 1.0, 0.5])
+    p = np.full(3, 1 / 3)
+    off = SCENARIOS["exponential"]
+    for gen in (
+        lambda s: sd.generate_stream(mu, p, C=2, T=500, seed=3, scenario=s),
+        lambda s: export_stream(SimConfig(mu=mu, p=p, C=2, T=500, seed=3,
+                                          scenario=s)),
+    ):
+        a, b = gen(None), gen(off)
+        np.testing.assert_array_equal(a.J, b.J)
+        np.testing.assert_array_equal(a.K, b.K)
+        np.testing.assert_array_equal(a.slot, b.slot)
+        np.testing.assert_array_equal(a.t, b.t)
+        assert a.kind is None and b.kind is None
+
+
+@pytest.mark.parametrize("engine,stream", [("python", "host"),
+                                           ("scan", "host"),
+                                           ("scan", "device")])
+def test_default_scenario_bitwise_engines(engine, stream):
+    n = 4
+    src = _QuadSource(n)
+    w0 = {"a": jnp.zeros(3, jnp.float32)}
+    outs = []
+    for scenario in (None, "exponential"):
+        cfg = ServerConfig(n=n, C=3, T=300, eta=0.05, p=np.full(n, 1 / n),
+                           mu=np.linspace(0.5, 2.0, n), seed=7,
+                           engine=engine, stream=stream, scenario=scenario,
+                           sparse=False)
+        w, _ = run_generalized_async_sgd(w0, src, cfg)
+        outs.append(np.asarray(w["a"]))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# ------------------------------------------------------------------ #
+# scenario engines: python == scan/host on the same exported stream
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("name", ["erlang2", "hyperexp2", "erlang2_onoff"])
+def test_python_scan_scenario_parity(name):
+    n = 5
+    src = _QuadSource(n)
+    w0 = {"a": jnp.zeros(4, jnp.float32)}
+    base = dict(n=n, C=3, T=400, eta=0.05, p=np.full(n, 1 / n),
+                mu=np.linspace(0.5, 2.0, n), seed=2, scenario=name,
+                sparse=False)
+    w_py, tr_py = run_generalized_async_sgd(
+        w0, src, ServerConfig(**base, engine="python"))
+    w_sc, tr_sc = run_generalized_async_sgd(
+        w0, src, ServerConfig(**base, engine="scan"))
+    np.testing.assert_allclose(np.asarray(w_py["a"]), np.asarray(w_sc["a"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(tr_py.extras["kind_count"],
+                                  tr_sc.extras["kind_count"])
+
+
+def test_scenario_fault_mutually_exclusive():
+    from repro.core.queue_sim import FaultConfig
+
+    n = 4
+    cfg = ServerConfig(n=n, C=2, T=50, eta=0.1, scenario="erlang2",
+                       faults=FaultConfig(off_rate=0.5, on_rate=1.0),
+                       engine="scan", stream="device")
+    with pytest.raises(ValueError, match="separate injection paths"):
+        run_generalized_async_sgd({"a": jnp.zeros(2)}, _QuadSource(n), cfg)
+
+
+# ------------------------------------------------------------------ #
+# block-size probe honors the configured scenario (regression)
+# ------------------------------------------------------------------ #
+def test_probe_stream_matches_configuration():
+    """`block_size="auto"` must probe the *configured* stream.
+
+    A faultless/exponential probe never emits trash-slot rows, so it
+    understates block conflicts and overstates E under faults or a
+    scenario; the probe now draws from the configured law.
+    """
+    from repro.core.async_sgd import _auto_block_size, _probe_stream_slots
+    from repro.core.queue_sim import FaultConfig
+
+    n, C, T = 6, 3, 2000
+    mu, p = np.ones(n), np.full(n, 1 / n)
+    plain = _probe_stream_slots(mu, p, C, T, 0)
+    assert not (plain == C).any()
+    heavy = FaultConfig(off_rate=6.0, on_rate=6.0)
+    flipped = _probe_stream_slots(mu, p, C, T, 0, fault=heavy)
+    assert (flipped == C).any()
+    staged = _probe_stream_slots(mu, p, C, T, 0,
+                                 scenario=SCENARIOS["erlang4"])
+    assert (staged == C).any()
+    # trash-slot repeats close blocks immediately: the configured probe
+    # must pick a strictly smaller E than the faultless one did
+    assert _auto_block_size(flipped) < _auto_block_size(plain)
+    assert _auto_block_size(staged) < _auto_block_size(plain)
+
+
+# ------------------------------------------------------------------ #
+# hypothesis property tests (optional dependency)
+# ------------------------------------------------------------------ #
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(k=st.integers(min_value=1, max_value=16))
+    def test_prop_erlang_chain(k):
+        law = ServiceLaw.erlang(k)
+        alpha, rates, absorb, nxt = law.chain()  # _validate_chain inside
+        m1, m2 = chain_moments(alpha, rates, absorb, nxt)
+        assert m1 == pytest.approx(1.0, rel=1e-9)
+        assert law.scv() == pytest.approx(1.0 / k, rel=1e-9)
+
+    @settings(max_examples=40, deadline=None)
+    @given(scv=st.floats(min_value=1.01, max_value=50.0,
+                         allow_nan=False, allow_infinity=False))
+    def test_prop_hyperexp_chain(scv):
+        law = ServiceLaw.hyperexp_scv(scv)
+        alpha, rates, absorb, nxt = law.chain()
+        m1, m2 = chain_moments(alpha, rates, absorb, nxt)
+        assert m1 == pytest.approx(1.0, rel=1e-9)
+        assert law.scv() == pytest.approx(scv, rel=1e-6)
+
+    _rate = st.floats(min_value=0.0, max_value=10.0,
+                      allow_nan=False, allow_infinity=False)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        kind=st.sampled_from(["exp", "erlang", "hyperexp"]),
+        k=st.integers(min_value=1, max_value=8),
+        scv=st.floats(min_value=1.1, max_value=20.0,
+                      allow_nan=False, allow_infinity=False),
+        off=_rate, on=_rate,
+        scale=st.floats(min_value=0.0, max_value=1.0,
+                        allow_nan=False, allow_infinity=False),
+        with_mod=st.booleans(),
+    )
+    def test_prop_scenario_round_trip(kind, k, scv, off, on, scale, with_mod):
+        service = {
+            "exp": ServiceLaw.exponential(),
+            "erlang": ServiceLaw.erlang(k),
+            "hyperexp": ServiceLaw.hyperexp_scv(scv),
+        }[kind]
+        mod = ModulationConfig(off_rate=off, on_rate=on,
+                               rate_scale=scale) if with_mod else None
+        sc = ScenarioConfig(name="prop", service=service, modulation=mod)
+        back = ScenarioConfig.from_json(sc.to_json())
+        assert back == sc
+        assert back.cache_key() == sc.cache_key()
+        assert back.enabled == sc.enabled
